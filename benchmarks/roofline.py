@@ -1,0 +1,48 @@
+"""Roofline report: aggregates the dry-run artifacts
+(experiments/dryrun/*.json) into the per-(arch x shape x mesh) table used by
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get(
+    "DRYRUN_DIR",
+    "experiments/dryrun_v2" if os.path.isdir("experiments/dryrun_v2")
+    else "experiments/dryrun")
+
+
+def rows():
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run(full: bool = False):
+    data = rows()
+    if not data:
+        emit("roofline.missing", 0.0,
+             f"no dry-run artifacts under {DRYRUN_DIR}; run "
+             "PYTHONPATH=src python -m repro.launch.dryrun first")
+        return
+    for r in data:
+        t = r["roofline"]
+        emit(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}",
+             r["compile_seconds"] * 1e6,
+             f"compute={t['compute_s']*1e3:.1f}ms "
+             f"memory={t['memory_s']*1e3:.1f}ms "
+             f"(tpu_est={t['memory_s_tpu_est']*1e3:.1f}ms) "
+             f"coll={t['collective_s']*1e3:.1f}ms "
+             f"dominant={t['dominant']} "
+             f"useful_flops={r['useful_flops_ratio']:.2f} "
+             f"peak_hbm={r['memory']['peak_hbm_bytes']/1e9:.1f}GB "
+             f"fits_tpu_est={r['fits_hbm_16g_tpu_est']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default mode keeps runtimes
+CPU-friendly (fewer Monte-Carlo seeds / requests / sweep points);
+``--full`` reproduces the paper-scale settings.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (fig_sweeps, optimality_gap, roofline,
+                            table4_clustered, table5_scattered,
+                            table6_runtime)
+    suites = [
+        ("table4", table4_clustered.run),
+        ("table5", table5_scattered.run),
+        ("table6", table6_runtime.run),
+        ("figs", fig_sweeps.run),
+        ("optgap", optimality_gap.run),
+        ("roofline", roofline.run),
+    ]
+    try:
+        from benchmarks import engine_validation
+        suites.append(("engine_validation", engine_validation.run))
+    except ImportError:
+        pass
+    try:
+        from benchmarks import kernel_bench
+        suites.append(("kernels", kernel_bench.run))
+    except ImportError:
+        pass
+
+    only = set(args.only.split(",")) if args.only else None
+    failures = 0
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn(full=args.full)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# suite {name} FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

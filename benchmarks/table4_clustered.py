@@ -1,0 +1,48 @@
+"""Table 4 (+ Tables 7/8): clustered scenario (Table 2) — average per-token
+time over all tokens, first-token time, and per-remaining-token time, for
+client locations Cluster0/1/2 x request rates x output lengths."""
+from __future__ import annotations
+
+from repro.core.perf_model import Workload
+from repro.sim import clustered_scenario, run_comparison
+
+from benchmarks.common import FAST_SEEDS, FULL_SEEDS, emit, improvement, timed
+
+PAPER_TABLE4 = {  # (cluster, rate, l_out) -> (petals, proposed) seconds
+    (0, 0.1, 64): (6.23, 1.92), (0, 0.1, 128): (4.76, 1.43),
+    (0, 0.5, 64): (6.28, 2.00), (0, 0.5, 128): (5.14, 1.34),
+    (1, 0.1, 64): (5.44, 1.78), (1, 0.1, 128): (4.60, 1.04),
+    (1, 0.5, 64): (5.56, 1.88), (1, 0.5, 128): (4.79, 1.11),
+    (2, 0.1, 64): (5.30, 1.79), (2, 0.1, 128): (4.85, 1.31),
+    (2, 0.5, 64): (5.34, 1.94), (2, 0.5, 128): (5.25, 1.37),
+}
+
+
+def run(full: bool = False):
+    seeds = FULL_SEEDS if full else FAST_SEEDS
+    n_req = 100 if full else 60
+    rates = (0.1, 0.5)
+    louts = (64, 128)
+    clusters = (0, 1, 2) if full else (0, 1)
+    for cl in clusters:
+        for rate in rates:
+            for lout in louts:
+                prob, _ = clustered_scenario(
+                    client_cluster=cl, workload=Workload(20, lout))
+                out, us = timed(run_comparison, prob,
+                                ("petals", "proposed"), n_requests=n_req,
+                                rate=rate, seeds=seeds)
+                ref = PAPER_TABLE4.get((cl, rate, lout))
+                ref_s = (f"paper={ref[0]:.2f}/{ref[1]:.2f}" if ref else "")
+                emit(f"table4.cluster{cl}.rate{rate}.lout{lout}", us,
+                     f"petals={out['petals']['per_token_all']:.2f}s "
+                     f"proposed={out['proposed']['per_token_all']:.2f}s "
+                     f"first={out['petals']['first_token']:.0f}/"
+                     f"{out['proposed']['first_token']:.0f}s "
+                     f"rest={out['petals']['per_token_rest']:.2f}/"
+                     f"{out['proposed']['per_token_rest']:.2f}s "
+                     f"improve={improvement(out):.0%} {ref_s}")
+
+
+if __name__ == "__main__":
+    run()

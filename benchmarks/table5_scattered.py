@@ -1,0 +1,47 @@
+"""Table 5 (+ Tables 9/10): scattered scenarios over the three Topology-Zoo
+style networks (AboveNet / BellCanada / GTS-CE)."""
+from __future__ import annotations
+
+from repro.core.perf_model import Workload
+from repro.sim import run_comparison
+
+from benchmarks.common import (FAST_SEEDS, FULL_SEEDS, emit, improvement,
+                               scattered_problem, timed)
+
+PAPER_TABLE5 = {  # (topo, rate, l_out) -> (petals, proposed)
+    ("abovenet", 0.1, 64): (4.98, 1.86), ("abovenet", 0.1, 128): (4.03, 1.44),
+    ("abovenet", 0.5, 64): (5.26, 1.97), ("abovenet", 0.5, 128): (4.58, 1.35),
+    ("bellcanada", 0.1, 64): (6.31, 1.33),
+    ("bellcanada", 0.1, 128): (3.82, 1.26),
+    ("bellcanada", 0.5, 64): (6.74, 1.49),
+    ("bellcanada", 0.5, 128): (4.16, 1.11),
+    ("gts_ce", 0.1, 64): (7.05, 1.38), ("gts_ce", 0.1, 128): (4.69, 0.95),
+    ("gts_ce", 0.5, 64): (6.89, 1.35), ("gts_ce", 0.5, 128): (4.89, 1.07),
+}
+
+
+def run(full: bool = False):
+    seeds = FULL_SEEDS if full else FAST_SEEDS
+    n_req = 100 if full else 50
+    topos = ("abovenet", "bellcanada", "gts_ce") if full \
+        else ("abovenet", "bellcanada")
+    for topo in topos:
+        for rate in (0.1, 0.5):
+            for lout in ((64, 128) if full else (128,)):
+                prob = scattered_problem(topo, eta=0.2,
+                                         workload=Workload(20, lout))
+                out, us = timed(run_comparison, prob,
+                                ("petals", "proposed"), n_requests=n_req,
+                                rate=rate, seeds=seeds)
+                ref = PAPER_TABLE5.get((topo, rate, lout))
+                ref_s = (f"paper={ref[0]:.2f}/{ref[1]:.2f}" if ref else "")
+                emit(f"table5.{topo}.rate{rate}.lout{lout}", us,
+                     f"petals={out['petals']['per_token_all']:.2f}s "
+                     f"proposed={out['proposed']['per_token_all']:.2f}s "
+                     f"first={out['petals']['first_token']:.0f}/"
+                     f"{out['proposed']['first_token']:.0f}s "
+                     f"improve={improvement(out):.0%} {ref_s}")
+
+
+if __name__ == "__main__":
+    run()

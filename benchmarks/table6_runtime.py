@@ -1,0 +1,36 @@
+"""Table 6 (+ Figs 15–20): algorithm decision time per request — both
+PETALS' heuristics and the proposed two-time-scale algorithm are fast enough
+to be negligible against inference time."""
+from __future__ import annotations
+
+from repro.sim import SimConfig, clustered_scenario, simulate
+
+from benchmarks.common import emit, scattered_problem, timed
+
+PAPER_TABLE6 = {"clustered": (0.0186, 0.0216), "abovenet": (0.0190, 0.0333),
+                "bellcanada": (0.0291, 0.0287), "gts_ce": (0.0350, 0.0320)}
+
+
+def run(full: bool = False):
+    scenarios = [("clustered", clustered_scenario()[0])]
+    topos = ("abovenet", "bellcanada", "gts_ce") if full \
+        else ("abovenet", "bellcanada")
+    for t in topos:
+        scenarios.append((t, scattered_problem(t)))
+    for name, prob in scenarios:
+        times = {}
+        for alg in ("petals", "proposed", "optimized_rr"):
+            res, us = timed(simulate, prob, SimConfig(
+                algorithm=alg, n_requests=40 if not full else 100,
+                rate=0.5, seed=0))
+            times[alg] = res.decision_time_s
+        ref = PAPER_TABLE6.get(name)
+        ref_s = f"paper={ref[0]:.4f}/{ref[1]:.4f}" if ref else ""
+        emit(f"table6.{name}", times["proposed"] * 1e6,
+             f"petals={times['petals']*1e3:.2f}ms "
+             f"proposed={times['proposed']*1e3:.2f}ms "
+             f"optimized_rr={times['optimized_rr']*1e3:.2f}ms {ref_s}")
+
+
+if __name__ == "__main__":
+    run()

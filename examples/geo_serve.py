@@ -1,0 +1,77 @@
+"""End-to-end driver: serve a small model with batched requests through the
+geo-distributed engine (real JAX block-level computation, PETALS-style
+client-centric protocol), with online BPRR admission, a mid-run server
+failure + exact recovery, and cross-validation of the simulator's predicted
+per-token times against the engine's virtual clock.
+
+Run:  PYTHONPATH=src python examples/geo_serve.py
+"""
+import numpy as np
+import jax
+
+from repro.configs import get_reduced_config
+from repro.core import (LLMSpec, Problem, ServerSpec, Workload,
+                        route_per_token_time, shortest_path_route)
+from repro.models import init_params
+from repro.serving import AdmissionScheduler, GeoServingSystem, generate
+from repro.sim.workload import poisson_requests
+
+
+def main():
+    cfg = get_reduced_config("llama3_2_1b").replace(n_layers=8)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+
+    # heterogeneous virtual cluster: 2 fast, 3 slow servers
+    llm = LLMSpec("llama3.2-reduced", cfg.n_layers, block_bytes=50.0,
+                  cache_bytes_per_token=0.5)
+    servers = [ServerSpec(0, 500.0, 0.004), ServerSpec(1, 500.0, 0.004),
+               ServerSpec(2, 220.0, 0.020), ServerSpec(3, 220.0, 0.020),
+               ServerSpec(4, 220.0, 0.020)]
+    rtt = np.array([[0.01, 0.01, 0.03, 0.03, 0.03]])
+    problem = Problem(llm, servers, 1, rtt, 3 * rtt,
+                      workload=Workload(8, 16))
+
+    system = GeoServingSystem(cfg, params, problem, algorithm="proposed",
+                              R=4, max_new_tokens=16)
+    print("placement a:", system.placement.a, " m:", system.placement.m)
+    sched = AdmissionScheduler(system, R=4)
+
+    rng = np.random.RandomState(0)
+    print("\nserving 6 requests (Poisson arrivals) ...")
+    served = []
+    for req in poisson_requests(6, rate=0.5, seed=1):
+        toks = rng.randint(2, cfg.vocab_size, 8)
+        out = sched.serve(req.rid, toks, req.arrival, n_new=12)
+        served.append(out)
+        print(f"  req {req.rid}: arrival {req.arrival:6.2f}s  "
+              f"start {out.start:6.2f}s  per-token {out.per_token*1e3:6.1f}ms  "
+              f"tokens {out.tokens[8:14]}...")
+
+    # cross-validate: engine virtual time vs the analytic model (eq. 1)
+    route, _ = shortest_path_route(problem, system.placement, 0)
+    predicted = route_per_token_time(problem, route, 0)
+    measured = np.mean([s.per_token for s in served])
+    print(f"\nmodel eq.(1) per-token {predicted*1e3:.1f} ms vs engine "
+          f"virtual clock {measured*1e3:.1f} ms "
+          f"(ratio {measured/predicted:.2f} — prefill amortisation)")
+
+    # failure mid-generation: exact recovery from client-side caches
+    print("\nfailure drill: killing the first server on a live route ...")
+    toks = rng.randint(2, cfg.vocab_size, 8)
+    sid, logits = system.submit(toks)
+    seq = [int(np.argmax(np.asarray(logits[0])))]
+    for step in range(8):
+        if step == 2:
+            victim = system.sessions[sid].route.servers[0]
+            system.kill_server(victim)
+            print(f"  killed server {victim} at step {step}")
+        lg = system.decode(sid, seq[-1])
+        seq.append(int(np.argmax(np.asarray(lg[0]))))
+    print(f"  new route: {system.sessions[sid].route.servers}  "
+          f"generated: {seq}")
+    system.finish(sid)
+    print("done — generation continued seamlessly after failover.")
+
+
+if __name__ == "__main__":
+    main()

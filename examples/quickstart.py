@@ -1,0 +1,52 @@
+"""Quickstart: the paper's BPRR algorithms on a toy geo-distributed cluster.
+
+Builds the paper's clustered scenario (Table 2: 2 A100-class + 7 MIG-class
+servers serving BLOOM-176B), runs PETALS' heuristics vs the proposed
+CG-BP + WS-RR, and prints the placements, routes, bounds, and simulated
+inference times.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (auto_R, cg_bp, cg_upper_bound, lower_bound,
+                        petals_bp, petals_route, route_per_token_time,
+                        shortest_path_route)
+from repro.sim import SimConfig, clustered_scenario, simulate
+
+
+def main():
+    problem, clusters = clustered_scenario(client_cluster=0)
+    print(f"model: {problem.llm.name}  L={problem.L} blocks  "
+          f"s_m={problem.s_m/2**30:.2f} GB  s_c={problem.s_c/2**20:.1f} MB")
+
+    R = auto_R(problem, arrival_rate=0.5, expected_session_s=150.0)
+    print(f"\ndesign concurrency |R| = {R} (mean+std rule, Cor. 3.6)")
+
+    pl_pet = petals_bp(problem)
+    pl_cg, info = cg_bp(problem, R)
+    print(f"PETALS placement  m_j = {pl_pet.m}")
+    print(f"CG-BP  placement  m_j = {pl_cg.m}  (order {info.order})")
+
+    route_pet = petals_route(problem, pl_pet, 0)
+    route_cg, _ = shortest_path_route(problem, pl_cg, 0)
+    print(f"\nPETALS route: servers {route_pet.servers} "
+          f"blocks {route_pet.blocks} "
+          f"-> {route_per_token_time(problem, route_pet, 0):.3f} s/token")
+    print(f"CG-BPRR route: servers {route_cg.servers} "
+          f"blocks {route_cg.blocks} "
+          f"-> {route_per_token_time(problem, route_cg, 0):.3f} s/token")
+    print(f"bound (17): {cg_upper_bound(problem, R):.3f} s/token;  "
+          f"lower bound (35): {lower_bound(problem):.3f} s/token")
+
+    print("\nsimulating 100 requests at 0.5 req/s ...")
+    for alg in ("petals", "proposed"):
+        res = simulate(problem, SimConfig(algorithm=alg, n_requests=100,
+                                          rate=0.5, seed=0))
+        print(f"  {alg:9s}: per-token(all) {res.per_token_all:6.2f} s   "
+              f"first-token {res.first_token:7.1f} s   "
+              f"rest {res.per_token_rest:5.2f} s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Scattered-deployment study (paper Figs 6/8 in miniature): sweep #servers
+and request rate over a Topology-Zoo-style network and print CSV.
+
+Run:  PYTHONPATH=src python examples/topology_study.py
+"""
+from repro.sim import run_comparison
+
+import sys
+sys.path.insert(0, ".")
+from benchmarks.common import scattered_problem  # noqa: E402
+
+
+def main():
+    print("sweep,value,petals_s,proposed_s,improvement")
+    for C in (10, 14, 19):
+        prob = scattered_problem("bellcanada", C=C)
+        out = run_comparison(prob, ("petals", "proposed"), n_requests=50,
+                             rate=0.5, seeds=(0, 1))
+        imp = 1 - out["proposed"]["per_token_all"] / out["petals"]["per_token_all"]
+        print(f"servers,{C},{out['petals']['per_token_all']:.2f},"
+              f"{out['proposed']['per_token_all']:.2f},{imp:.0%}")
+    for rate in (0.1, 0.3, 0.6):
+        prob = scattered_problem("abovenet")
+        out = run_comparison(prob, ("petals", "proposed"), n_requests=50,
+                             rate=rate, seeds=(0, 1))
+        imp = 1 - out["proposed"]["per_token_all"] / out["petals"]["per_token_all"]
+        print(f"rate,{rate},{out['petals']['per_token_all']:.2f},"
+              f"{out['proposed']['per_token_all']:.2f},{imp:.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ALL_SHAPES,
+    ARCH_IDS,
+    PAPER_ARCH_IDS,
+    SHAPES_BY_NAME,
+    ModelConfig,
+    ShapeSpec,
+    get_config,
+    get_reduced_config,
+)
+
+__all__ = [
+    "ALL_SHAPES",
+    "ARCH_IDS",
+    "PAPER_ARCH_IDS",
+    "SHAPES_BY_NAME",
+    "ModelConfig",
+    "ShapeSpec",
+    "get_config",
+    "get_reduced_config",
+]

@@ -1,0 +1,34 @@
+"""The paper's primary contribution: joint Block Placement and Request
+Routing (BPRR) for geographically-distributed pipeline-parallel LLM
+inference — performance models, CG-BPRR, the online two-time-scale
+controller, MILP reference solvers, and performance bounds."""
+from repro.core.bounds import (approximation_ratio, cg_upper_bound,
+                               lower_bound)
+from repro.core.online import OnlineBPRR, Session
+from repro.core.perf_model import (BLOOM_PETALS, GB, MB, LLMSpec, Placement,
+                                   Problem, Route, ServerSpec, Workload,
+                                   route_avg_per_token_time,
+                                   route_per_token_time, route_prefill_time,
+                                   route_total_time, server_memory_use)
+from repro.core.placement import (auto_R, capacity, cg_bp, cg_feasible_R,
+                                  conservative_m, max_feasible_R,
+                                  optimized_number_bp, optimized_order_bp,
+                                  petals_bp, petals_m)
+from repro.core.routing import (ServerState, edge_waiting_times,
+                                jax_shortest_paths, petals_route,
+                                shortest_path_route, ws_rr)
+from repro.core.topology import (RoutingGraph, edge_feasible, route_blocks,
+                                 route_feasible)
+
+__all__ = [
+    "BLOOM_PETALS", "GB", "MB", "LLMSpec", "OnlineBPRR", "Placement",
+    "Problem", "Route", "RoutingGraph", "ServerSpec", "ServerState",
+    "Session", "Workload", "approximation_ratio", "auto_R", "capacity",
+    "cg_bp", "cg_feasible_R", "cg_upper_bound", "conservative_m",
+    "edge_feasible", "edge_waiting_times", "jax_shortest_paths",
+    "lower_bound", "max_feasible_R", "optimized_number_bp",
+    "optimized_order_bp", "petals_bp", "petals_m", "petals_route",
+    "route_avg_per_token_time", "route_blocks", "route_feasible",
+    "route_per_token_time", "route_prefill_time", "route_total_time",
+    "server_memory_use", "shortest_path_route", "ws_rr",
+]

@@ -1,0 +1,107 @@
+"""Two-time-scale online BPRR (Alg. 2): CG-BP at the slow time scale +
+WS-RR per arriving request, with tracked server state for eq. (20).
+
+The controller is the integration point for the serving stack
+(repro.serving.scheduler) and the simulator (repro.sim.simulator):
+
+    ctl = OnlineBPRR(problem, R=...)            # CG-BP placement
+    route, start_t = ctl.admit(client, now)     # WS-RR + bookkeeping
+    ctl.finish(session_id)                      # frees cache slots
+    ctl.server_failed(j) / ctl.server_joined()  # elastic re-placement
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bounds import cg_upper_bound
+from repro.core.perf_model import (Placement, Problem, Route,
+                                   route_per_token_time, route_prefill_time,
+                                   route_total_time)
+from repro.core.placement import auto_R, cg_bp, max_feasible_R
+from repro.core.routing import ServerState, edge_waiting_times, ws_rr
+
+
+@dataclass
+class Session:
+    sid: int
+    client: int
+    route: Route
+    arrival: float
+    start: float
+    end: float
+
+
+class OnlineBPRR:
+    """Alg. 2 controller with session bookkeeping."""
+
+    def __init__(self, problem: Problem, R: Optional[int] = None,
+                 arrival_rate: Optional[float] = None):
+        self.problem = problem
+        if R is None:
+            guess = cg_upper_bound(problem, max(1, min(8, max_feasible_R(
+                problem)))) * problem.workload.l_out
+            R = auto_R(problem, arrival_rate or 0.1,
+                       guess if np.isfinite(guess) else 60.0)
+        self.R = int(R)
+        self.placement, self.info = cg_bp(problem, self.R)
+        self.sessions: Dict[int, Session] = {}
+        self._next_sid = itertools.count()
+
+    # ------------------------------------------------------------------
+    def server_states(self, now: float) -> Dict[int, ServerState]:
+        states: Dict[int, ServerState] = {}
+        for s in self.sessions.values():
+            for j, k in zip(s.route.servers, s.route.blocks):
+                st = states.setdefault(j, ServerState([], []))
+                st.remaining.append(max(s.end - now, 0.0))
+                st.blocks.append(k)
+        return states
+
+    def concurrency(self) -> int:
+        return len(self.sessions)
+
+    # ------------------------------------------------------------------
+    def admit(self, client: int, now: float
+              ) -> Tuple[Optional[Route], float, float, int]:
+        """Route a new request.  Returns (route, start_time, end_time, sid)."""
+        states = self.server_states(now)
+        route, cost, wait = ws_rr(self.problem, self.placement, client,
+                                  states)
+        if route is None:
+            return None, np.inf, np.inf, -1
+        start = now + wait
+        dur = route_total_time(self.problem, route, client)
+        end = start + dur
+        sid = next(self._next_sid)
+        self.sessions[sid] = Session(sid, client, route, now, start, end)
+        return route, start, end, sid
+
+    def finish(self, sid: int):
+        self.sessions.pop(sid, None)
+
+    def gc(self, now: float):
+        """Drop sessions whose end time has passed."""
+        done = [sid for sid, s in self.sessions.items() if s.end <= now]
+        for sid in done:
+            self.finish(sid)
+
+    # ------------------------------------------------------------------
+    # Elastic scaling / fault tolerance (slow-time-scale re-placement)
+    # ------------------------------------------------------------------
+    def replace_servers(self, problem: Problem, R: Optional[int] = None):
+        """Re-run CG-BP after a join/leave/failure (Alg. 2 extension,
+        §3.3.3).  Running sessions keep their routes; new requests use the
+        new placement."""
+        self.problem = problem
+        if R is not None:
+            self.R = int(R)
+        self.placement, self.info = cg_bp(self.problem, self.R)
+
+    def guarantee(self) -> float:
+        """Completion-time guarantee (22) while concurrency <= R."""
+        return (cg_upper_bound(self.problem, self.R)
+                * self.problem.workload.l_out)

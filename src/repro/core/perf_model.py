@@ -1,0 +1,252 @@
+"""Experimentally-validated performance models from §2.2 of the paper.
+
+* inference-time model, eq. (1)/(4)/(8):
+    per-token time at server j reached from i for client c:
+        t_ij^c = t_cj + τ_j · (e_j − e_i)        (decoding phase)
+    first-token analogue uses per-input RTT and per-block prefill time.
+* memory-consumption model, eq. (2)/(5):
+    server j hosting m_j blocks and processing k_j^r blocks per session r:
+        s_m·m_j + s_c·Σ_r k_j^r  ≤  M_j
+  with  s_c = 2·d_model·(l_in + l_out)·dtype_bytes  per block per session.
+
+``LLMSpec.from_model_config`` bridges the paper's abstract model to every
+assigned architecture (MLA latent caches, SSM O(1) states, sliding-window
+caches — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+GB = 1 << 30
+MB = 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# Model / workload specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LLMSpec:
+    """The served model, reduced to what BPRR needs."""
+
+    name: str
+    n_blocks: int  # L
+    block_bytes: float  # s_m
+    cache_bytes_per_token: float  # per block per session per token
+    cache_bytes_const: float = 0.0  # O(1)-state archs (SSM): per block/session
+
+    def cache_bytes(self, total_tokens: int) -> float:
+        """s_c for a session of l_in + l_out = total_tokens."""
+        return self.cache_bytes_per_token * total_tokens + self.cache_bytes_const
+
+    @staticmethod
+    def from_model_config(cfg, dtype_bits: int = 16) -> "LLMSpec":
+        """Derive (L, s_m, s_c) from a repro.configs ModelConfig."""
+        dtype_bytes = dtype_bits / 8.0
+        block_bytes = cfg.block_param_count() * dtype_bytes
+        per_tok = 0.0
+        const = 0.0
+        if cfg.attn_kind == "mla":
+            per_tok = (cfg.kv_lora_rank + cfg.rope_head_dim) * 2.0  # bf16 latent
+        elif cfg.attn_kind == "gqa" and cfg.n_kv_heads > 0:
+            per_tok = 2 * cfg.n_kv_heads * cfg.head_dim * 2.0
+            if cfg.sliding_window and cfg.local_global_period:
+                # only 1-in-period layers hold unbounded caches; local layers
+                # are window-bounded -> fold into the constant term
+                frac_global = 1.0 / cfg.local_global_period
+                const = (per_tok * cfg.sliding_window
+                         * (1 - frac_global))
+                per_tok = per_tok * frac_global
+        if cfg.family in ("ssm", "hybrid"):
+            # O(1) recurrent state per block per session
+            if cfg.family == "ssm":
+                h, hd = cfg.ssm_heads, cfg.ssm_head_dim
+                const = (h * hd * hd + 2 * cfg.d_model) * 4.0
+                per_tok = 0.0
+            else:  # zamba2: mamba state + shared-attn KV every Nth block
+                h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+                const = (h * p * n + (cfg.conv_width - 1)
+                         * (cfg.d_inner + 2 * n)) * 4.0
+                per_tok = (2 * cfg.n_kv_heads * cfg.head_dim * 2.0
+                           / max(1, cfg.shared_attn_period))
+        return LLMSpec(name=cfg.name, n_blocks=cfg.n_layers,
+                       block_bytes=block_bytes,
+                       cache_bytes_per_token=per_tok,
+                       cache_bytes_const=const)
+
+
+# BLOOM-176B as served by PETALS (NF4-quantised blocks) — the paper's model.
+BLOOM_PETALS = LLMSpec(
+    name="bloom-176b-nf4",
+    n_blocks=70,
+    block_bytes=1.4 * GB,
+    cache_bytes_per_token=2 * 14336 * 2.0,  # 2 tensors * d_model * bf16
+)
+
+
+@dataclass(frozen=True)
+class Workload:
+    l_in: int = 20
+    l_out: int = 128
+
+    @property
+    def total_tokens(self) -> int:
+        return self.l_in + self.l_out
+
+
+# ---------------------------------------------------------------------------
+# Servers / clients / network
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ServerSpec:
+    """τ_j, τ_j^I(l) and the effective memory M_j (paper §2.2)."""
+
+    sid: int
+    mem_bytes: float  # M_j (effective; overhead already subtracted)
+    tau: float  # per-block per-token decode time (s)
+    tau_prefill_base: float = 0.0  # τ^I(l) = base + per_token * l
+    tau_prefill_per_token: float = 0.0
+
+    def tau_prefill(self, l_in: int) -> float:
+        return self.tau_prefill_base + self.tau_prefill_per_token * l_in
+
+
+@dataclass
+class Problem:
+    """One BPRR instance: model, servers, clients, network, workload."""
+
+    llm: LLMSpec
+    servers: List[ServerSpec]
+    n_clients: int
+    rtt_token: np.ndarray  # (C, S) per-token RTT t_cj (s)
+    rtt_prefill: np.ndarray  # (C, S) per-input RTT t^I_cj(l_in) (s)
+    workload: Workload = Workload()
+
+    def __post_init__(self):
+        self.rtt_token = np.asarray(self.rtt_token, float)
+        self.rtt_prefill = np.asarray(self.rtt_prefill, float)
+        assert self.rtt_token.shape == (self.n_clients, len(self.servers))
+
+    @property
+    def n_servers(self) -> int:
+        return len(self.servers)
+
+    @property
+    def L(self) -> int:
+        return self.llm.n_blocks
+
+    @property
+    def s_m(self) -> float:
+        return self.llm.block_bytes
+
+    @property
+    def s_c(self) -> float:
+        return self.llm.cache_bytes(self.workload.total_tokens)
+
+    def mem(self) -> np.ndarray:
+        return np.asarray([s.mem_bytes for s in self.servers])
+
+    def tau(self) -> np.ndarray:
+        return np.asarray([s.tau for s in self.servers])
+
+    def tau_prefill(self) -> np.ndarray:
+        return np.asarray([s.tau_prefill(self.workload.l_in)
+                           for s in self.servers])
+
+    def t_star(self) -> np.ndarray:
+        """t_*j = max_c t_cj (worst-case client RTT per server)."""
+        return self.rtt_token.max(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Placement / route containers + the paper's equations
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Placement:
+    """Contiguous block ranges: server j hosts blocks [a[j], a[j]+m[j]).
+
+    0-based internally (the paper is 1-based); m[j] == 0 means server unused.
+    """
+
+    a: np.ndarray
+    m: np.ndarray
+
+    def end(self) -> np.ndarray:
+        return self.a + self.m
+
+    def hosts(self, j: int, b: int) -> bool:
+        return self.a[j] <= b < self.a[j] + self.m[j]
+
+    def coverage(self, L: int) -> np.ndarray:
+        """#servers hosting each block."""
+        cov = np.zeros(L, int)
+        for aj, mj in zip(self.a, self.m):
+            cov[aj: aj + mj] += 1
+        return cov
+
+    def feasible_cover(self, L: int) -> bool:
+        return bool((self.coverage(L) > 0).all())
+
+
+@dataclass(frozen=True)
+class Route:
+    """A server chain with per-hop processed-block counts (Lemma 3.1)."""
+
+    servers: Tuple[int, ...]
+    blocks: Tuple[int, ...]  # k_j = e_j - e_i per hop
+
+    def __post_init__(self):
+        assert len(self.servers) == len(self.blocks)
+
+
+def route_per_token_time(problem: Problem, route: Route, client: int) -> float:
+    """Σ_{j∈p} (t_cj + k_j τ_j)  — eq (4) summed along the path."""
+    t = 0.0
+    for j, k in zip(route.servers, route.blocks):
+        t += problem.rtt_token[client, j] + k * problem.servers[j].tau
+    return t
+
+
+def route_prefill_time(problem: Problem, route: Route, client: int) -> float:
+    """Σ_{j∈p} (t^I_cj + k_j τ^I_j)  — first-token part of eq (1)."""
+    t = 0.0
+    for j, k in zip(route.servers, route.blocks):
+        t += (problem.rtt_prefill[client, j]
+              + k * problem.servers[j].tau_prefill(problem.workload.l_in))
+    return t
+
+
+def route_total_time(problem: Problem, route: Route, client: int,
+                     l_out: Optional[int] = None) -> float:
+    """Total inference time, eq (1)."""
+    l_out = problem.workload.l_out if l_out is None else l_out
+    return (route_prefill_time(problem, route, client)
+            + (l_out - 1) * route_per_token_time(problem, route, client))
+
+
+def route_avg_per_token_time(problem: Problem, route: Route,
+                             client: int) -> float:
+    """eq (8): total time amortised over all l_out tokens."""
+    return (route_total_time(problem, route, client)
+            / problem.workload.l_out)
+
+
+def server_memory_use(problem: Problem, placement: Placement,
+                      blocks_per_session: Dict[int, List[int]]) -> np.ndarray:
+    """eq (5): s_m m_j + s_c Σ_sessions k_j."""
+    use = problem.s_m * placement.m.astype(float)
+    for j, ks in blocks_per_session.items():
+        use[j] += problem.s_c * float(sum(ks))
+    return use
+
+
+def route_memory_per_session(problem: Problem, route: Route) -> Dict[int, float]:
+    return {j: problem.s_c * k for j, k in zip(route.servers, route.blocks)}

@@ -1,0 +1,288 @@
+"""Request routing.
+
+* ``shortest_path_route``  — optimal routing given a feasible placement
+  (Lemma 3.4): exact DP over the feasible routing DAG in e_j order.
+* ``ws_rr``                — Waiting-penalised Shortest-path Request Routing
+  (§3.3.2): link cost  t^W_ij(t) + l_max · t^c_ij  with the waiting time from
+  the tracked server state, eq. (20).
+* ``petals_route``         — the PETALS client heuristic [16]: Dijkstra over
+  (progress, server) states with latency+throughput edge weights, ignoring
+  memory/waiting (the paper's key comparison point).
+* ``jax_shortest_paths``   — jit-able batched min-plus DP over clients —
+  the paper's routing as a composable JAX module (tested == numpy).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.perf_model import Placement, Problem, Route
+from repro.core.topology import RoutingGraph, route_blocks
+
+
+def edge_cost_matrix(problem: Problem, placement: Placement,
+                     client: int, avg_over_tokens: bool = False) -> np.ndarray:
+    """cost[i, j] = t^c_ij by eq (4) (or eq (8) if avg_over_tokens), for the
+    *maximum* processed blocks k_j = e_j − e_i implied by hop (i, j); the
+    S-client row is index n (progress 0)."""
+    a, m = placement.a, placement.m
+    n = problem.n_servers
+    e = a + m
+    tau = problem.tau()
+    lw = problem.workload
+    cost = np.full((n + 1, n), np.inf)
+    e_from = np.concatenate([e, [0]])  # progress after i (last row = S)
+    for row in range(n + 1):
+        k = e - e_from[row]  # blocks processed at j when reached from row
+        t_tok = problem.rtt_token[client] + tau * k
+        if avg_over_tokens:
+            t_pre = problem.rtt_prefill[client] + problem.tau_prefill() * k
+            c = t_pre / lw.l_out + (lw.l_out - 1) / lw.l_out * t_tok
+        else:
+            c = t_tok
+        cost[row] = c
+    return cost
+
+
+def _dag_shortest(graph: RoutingGraph, cost: np.ndarray,
+                  extra: Optional[np.ndarray] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """DP over servers in e_j order.  cost has S-client at row n.
+
+    extra[j]: additive per-node cost (e.g. waiting penalties folded in by the
+    caller through ``cost`` directly; kept for clarity).  Returns
+    (dist, parent) with parent = n for S-client predecessor.
+    """
+    a, m = graph.placement.a, graph.placement.m
+    n = len(a)
+    e = a + m
+    dist = np.full(n, np.inf)
+    parent = np.full(n, -100, int)
+    first = set(graph.first.tolist())
+    for j in graph.order:
+        if m[j] <= 0:
+            continue
+        if j in first:
+            d = cost[n, j]
+            if d < dist[j]:
+                dist[j] = d
+                parent[j] = n
+        # predecessors i with a_j <= e_i <= e_j - 1
+        ok = (m > 0) & (a[j] <= e) & (e <= e[j] - 1) & np.isfinite(dist)
+        if ok.any():
+            cand = dist[ok] + cost[np.where(ok)[0], j]
+            b = int(np.argmin(cand))
+            if cand[b] < dist[j]:
+                dist[j] = cand[b]
+                parent[j] = int(np.where(ok)[0][b])
+    return dist, parent
+
+
+def shortest_path_route(problem: Problem, placement: Placement, client: int,
+                        avg_over_tokens: bool = False,
+                        waiting: Optional[np.ndarray] = None,
+                        l_max_weight: float = 1.0
+                        ) -> Tuple[Optional[Route], float]:
+    """Optimal feasible route for ``client`` (Lemma 3.4).
+
+    ``waiting``: optional (n+1, n) per-edge waiting times t^W_ij(t) — when
+    given, edge cost becomes  t^W_ij + l_max_weight * t^c_ij  (WS-RR).
+    Returns (route, path_cost); (None, inf) if no feasible chain exists.
+    """
+    graph = RoutingGraph.build(placement, problem.L)
+    cost = edge_cost_matrix(problem, placement, client, avg_over_tokens)
+    if waiting is not None:
+        cost = waiting + l_max_weight * cost
+    dist, parent = _dag_shortest(graph, cost)
+    if len(graph.last) == 0:
+        return None, np.inf
+    lasts = graph.last[np.isfinite(dist[graph.last])]
+    if len(lasts) == 0:
+        return None, np.inf
+    end = int(lasts[np.argmin(dist[lasts])])
+    chain = [end]
+    while parent[chain[-1]] != problem.n_servers:
+        chain.append(int(parent[chain[-1]]))
+        if len(chain) > problem.n_servers + 1:
+            return None, np.inf
+    chain.reverse()
+    return route_blocks(placement, tuple(chain)), float(dist[end])
+
+
+# ---------------------------------------------------------------------------
+# WS-RR: waiting times from server state, eq. (20)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ServerState:
+    """Active sessions at one server: (remaining_time, cache_blocks)."""
+
+    remaining: List[float]
+    blocks: List[int]
+
+    def sorted_pairs(self):
+        pairs = sorted(zip(self.remaining, self.blocks))
+        return pairs
+
+
+def edge_waiting_times(problem: Problem, placement: Placement,
+                       states: Dict[int, ServerState]) -> np.ndarray:
+    """t^W_ij(t) per eq (20) for every (i, j): time until server j frees
+    enough cache slots for k_j = e_j − e_i new blocks."""
+    a, m = placement.a, placement.m
+    n = problem.n_servers
+    e = a + m
+    e_from = np.concatenate([e, [0]])
+    total_slots = np.floor((problem.mem() - problem.s_m * m)
+                           / problem.s_c)  # ⌊(M_j − s_m m_j)/s_c⌋
+    wait = np.zeros((n + 1, n))
+    for j in range(n):
+        if m[j] <= 0:
+            continue
+        st = states.get(j)
+        pairs = st.sorted_pairs() if st else []
+        used = float(sum(b for _, b in pairs))
+        # free_after[k] = slots free once the k shortest-remaining sessions end
+        free0 = total_slots[j] - used
+        frees = [free0]
+        for rem, blk in pairs:
+            frees.append(frees[-1] + blk)
+        times = [0.0] + [rem for rem, _ in pairs]
+        for row in range(n + 1):
+            k_needed = e[j] - e_from[row]
+            w = np.inf
+            for fk, tk in zip(frees, times):
+                if fk >= k_needed:
+                    w = tk
+                    break
+            wait[row, j] = w
+    return wait
+
+
+def ws_rr(problem: Problem, placement: Placement, client: int,
+          states: Dict[int, ServerState]
+          ) -> Tuple[Optional[Route], float, float]:
+    """Waiting-penalised shortest path (Alg. 2).  Returns
+    (route, path_cost, waiting_time) where waiting_time = max hop wait."""
+    wait = edge_waiting_times(problem, placement, states)
+    route, cost = shortest_path_route(
+        problem, placement, client, avg_over_tokens=False, waiting=wait,
+        l_max_weight=float(problem.workload.l_out))
+    if route is None:
+        return None, np.inf, np.inf
+    # actual waiting for this route = max over hops (Cor. 3.7: the session
+    # starts once every server on the path has freed enough cache slots)
+    w = 0.0
+    prev_row = problem.n_servers  # S-client row of the wait matrix
+    for j in route.servers:
+        w = max(w, wait[prev_row, j])
+        prev_row = j
+    return route, cost, float(w)
+
+
+# ---------------------------------------------------------------------------
+# PETALS routing heuristic [16]
+# ---------------------------------------------------------------------------
+
+
+def petals_route(problem: Problem, placement: Placement, client: int
+                 ) -> Optional[Route]:
+    """Dijkstra over (progress e, server) states with heuristic weights:
+    edge weight = rtt_cj + k_j · τ_j   (latency + compute throughput), no
+    memory/waiting modelling — per [16]'s routing."""
+    a, m = placement.a, placement.m
+    n = problem.n_servers
+    e_arr = a + m
+    tau = problem.tau()
+    L = problem.L
+    # Dijkstra over progress states
+    best: Dict[int, float] = {0: 0.0}
+    parent: Dict[Tuple[int, int], Tuple[int, int]] = {}
+    pq = [(0.0, 0, -1)]  # (cost, progress, server reaching it)
+    seen = set()
+    while pq:
+        d, e, i = heapq.heappop(pq)
+        if (e, i) in seen:
+            continue
+        seen.add((e, i))
+        if e == L:
+            chain = []
+            cur = (e, i)
+            while cur[1] != -1:
+                chain.append(cur[1])
+                cur = parent[cur]
+            chain.reverse()
+            return route_blocks(placement, tuple(chain))
+        ok = (m > 0) & (a <= e) & (e <= e_arr - 1)
+        for j in np.where(ok)[0]:
+            k = e_arr[j] - e
+            nd = d + problem.rtt_token[client, j] + k * tau[j]
+            state = (int(e_arr[j]), int(j))
+            if state not in seen and nd < best.get(state, np.inf):
+                best[state] = nd
+                parent[state] = (e, i)
+                heapq.heappush(pq, (nd, int(e_arr[j]), int(j)))
+    return None
+
+
+# ---------------------------------------------------------------------------
+# JAX batched routing (composable module; == numpy DP, tested)
+# ---------------------------------------------------------------------------
+
+
+def jax_shortest_paths(problem: Problem, placement: Placement,
+                       waiting: Optional[np.ndarray] = None,
+                       l_max_weight: float = 1.0):
+    """Min-plus DP for ALL clients at once, jit-compiled.
+
+    Returns (dist (C,), choice (C,)): best completion cost and best terminal
+    server per client.  Used by the online scheduler for fleet-wide routing
+    decisions at the fast time scale.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    a, m = placement.a, placement.m
+    n = problem.n_servers
+    e = a + m
+    active = m > 0
+    adj = (active[None, :] & active[:, None]
+           & (a[None, :] <= e[:, None]) & (e[:, None] <= e[None, :] - 1))
+    k_edge = np.maximum(e[None, :] - e[:, None], 0)  # blocks at j from i
+    k_first = e  # from S-client (progress 0)
+    first_ok = active & (a == 0)
+    last_ok = active & (e == problem.L)
+    tau = problem.tau()
+
+    rtt = jnp.asarray(problem.rtt_token)  # (C, n)
+    adj_j = jnp.asarray(adj)
+    k_j = jnp.asarray(k_edge, jnp.float32)
+    wait_j = (jnp.asarray(waiting[:n, :]) if waiting is not None
+              else jnp.zeros((n, n)))
+    wait_s = (jnp.asarray(waiting[n, :]) if waiting is not None
+              else jnp.zeros((n,)))
+
+    @jax.jit
+    def run(rtt):
+        # edge costs per client: (C, n, n)
+        cost = l_max_weight * (rtt[:, None, :] + tau[None, None, :] * k_j)
+        cost = cost + wait_j[None]
+        cost = jnp.where(adj_j[None], cost, jnp.inf)
+        start = l_max_weight * (rtt + tau[None, :] * k_first) + wait_s[None]
+        dist = jnp.where(jnp.asarray(first_ok)[None, :], start, jnp.inf)
+
+        def body(i, dist):
+            relaxed = jnp.min(dist[:, :, None] + cost, axis=1)
+            return jnp.minimum(dist, relaxed)
+
+        dist = jax.lax.fori_loop(0, n, body, dist)
+        dist = jnp.where(jnp.asarray(last_ok)[None, :], dist, jnp.inf)
+        best = jnp.min(dist, axis=1)
+        choice = jnp.argmin(dist, axis=1)
+        return best, choice
+
+    return run(rtt)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the serving hot paths (validated in interpret
+mode on CPU; compiled through Mosaic on real TPUs):
+
+* flash_attention — prefill attention (causal / sliding-window / GQA)
+* decode_attention — single-token attention over long KV caches (GQA + MLA)
+* wkv6 — RWKV6 chunked recurrence
+* ssd — Mamba2 state-space-dual chunked scan
+"""
+from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.ssd import ssd, ssd_ref
+from repro.kernels.wkv6 import wkv6, wkv6_ref
+
+__all__ = ["attention_ref", "decode_attention", "decode_attention_ref",
+           "flash_attention", "ssd", "ssd_ref", "wkv6", "wkv6_ref"]

@@ -1,0 +1,98 @@
+"""Pallas TPU decode attention: one query token over a long KV cache.
+
+Grid = (B*Kv, kv_blocks); the per-(batch, kv-head) query group (G = H/Kv
+rows) stays resident in VMEM while KV blocks stream through — the memory-
+bound regime the Pallas kernel exists for (reads the cache exactly once at
+bf16, vs the XLA path's f32 upcasts).  Handles GQA groups natively and MLA
+absorbed decode as the Kv=1 special case with asymmetric K/V widths.
+Length masking uses the current position (cache slots beyond ``pos`` are
+invalid).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc, m_scr, l_scr, *,
+            block_kv, group, d_v, scale):
+    ki = pl.program_id(1)
+    n_kv = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    pos = pos_ref[0]
+    kv_start = ki * block_kv
+
+    @pl.when(kv_start <= pos)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (G, d_k)
+        k = k_ref[0].astype(jnp.float32)  # (block_kv, d_k)
+        v = v_ref[0].astype(jnp.float32)  # (block_kv, d_v)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, block_kv)
+        kv_pos = kv_start + jax.lax.broadcasted_iota(
+            jnp.int32, (group, block_kv), 1)
+        s = jnp.where(kv_pos <= pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_bkv(q, k, v, pos, *, block_kv: int = 256,
+                         interpret: bool = False):
+    """q (BKv, G, Dk); k (BKv, T, Dk); v (BKv, T, Dv); pos scalar int32."""
+    BKv, G, Dk = q.shape
+    T = k.shape[1]
+    Dv = v.shape[-1]
+    block_kv = min(block_kv, T)
+    pad = (-T) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    n_kv = k.shape[1] // block_kv
+    kern = functools.partial(_kernel, block_kv=block_kv, group=G, d_v=Dv,
+                             scale=1.0 / np.sqrt(Dk))
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+    out = pl.pallas_call(
+        kern,
+        grid=(BKv, n_kv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, Dk), lambda b, ki: (b, 0, 0)),
+            pl.BlockSpec((1, block_kv, Dk), lambda b, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_kv, Dv), lambda b, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, Dv), lambda b, ki: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BKv, G, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, Dv), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k, v)
+    return out

@@ -1,0 +1,36 @@
+"""Jit'd wrapper: model-layout decode attention via the Pallas kernel.
+
+Covers GQA ((B,1,H,D) queries over (B,T,Kv,D) caches) and MLA absorbed
+decode (Kv=1, Dk = kv_lora+rope, Dv = kv_lora).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_bkv)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention(q, ck, cv, pos, *, block_kv: int = 256,
+                     interpret: Optional[bool] = None):
+    """q (B,1,H,Dk); ck (B,T,Kv,Dk); cv (B,T,Kv,Dv) -> (B,1,H,Dv)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, _, H, Dk = q.shape
+    T, Kv = ck.shape[1], ck.shape[2]
+    Dv = cv.shape[-1]
+    G = H // Kv
+    qf = q.reshape(B, Kv, G, Dk).reshape(B * Kv, G, Dk)
+    kf = ck.transpose(0, 2, 1, 3).reshape(B * Kv, T, Dk)
+    vf = cv.transpose(0, 2, 1, 3).reshape(B * Kv, T, Dv)
+    out = decode_attention_bkv(qf, kf, vf, pos, block_kv=block_kv,
+                               interpret=interpret)
+    return out.reshape(B, 1, H, Dv)

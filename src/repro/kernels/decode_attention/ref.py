@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for decode attention (mirrors models.attention
+decode_attention_xla semantics for a (BKv, G) query layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k, v, pos):
+    """q (BKv, G, Dk); k (BKv, T, Dk); v (BKv, T, Dv)."""
+    Dk = q.shape[-1]
+    logits = jnp.einsum("bgd,btd->bgt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(Dk)
+    kv_pos = jnp.arange(k.shape[1])
+    logits = jnp.where(kv_pos[None, None, :] <= pos, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bgt,btd->bgd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,120 @@
+"""Pallas TPU flash attention (prefill): online-softmax over KV blocks.
+
+TPU-native design (DESIGN.md §3): q/k/v tiles live in VMEM via BlockSpecs,
+MXU-aligned block sizes (multiples of 128 for full-size configs), f32
+accumulators in VMEM scratch, grid = (batch*q_heads, q_blocks, kv_blocks)
+with the kv axis innermost so the scratch carries across kv steps.  Causal
+blocks above the diagonal are skipped with ``pl.when``.  GQA is handled by
+index-mapping the kv block to ``head // group`` — no KV head expansion copy.
+Supports sliding-window masking (static window).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_scr, l_scr, *, block_q,
+            block_kv, seq_q, seq_kv, causal, window, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q_start = qi * block_q
+    kv_start = ki * block_kv
+    if causal:  # skip blocks strictly above the causal diagonal
+        run = kv_start <= q_start + block_q - 1
+    else:
+        run = jnp.bool_(True)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)  # (block_kv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+        kv_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (block_q, block_kv), 1)
+        ok = kv_pos < seq_kv
+        if causal:
+            diff = q_pos - kv_pos
+            ok &= diff >= 0
+            if window is not None:
+                ok &= diff < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True,
+                         window: Optional[int] = None,
+                         block_q: int = 128, block_kv: int = 128,
+                         interpret: bool = False):
+    """q: (BH, Sq, D); k/v: (BKv, Skv, D) with BH = BKv * group."""
+    BH, Sq, D = q.shape
+    BKv, Skv, _ = k.shape
+    group = BH // BKv
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    pad_q = (-Sq) % block_q
+    pad_kv = (-Skv) % block_kv
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0))) if pad_kv else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0))) if pad_kv else v
+    n_q = qp.shape[1] // block_q
+    n_kv = kp.shape[1] // block_kv
+    grid = (BH, n_q, n_kv)
+    kern = functools.partial(
+        _kernel, block_q=block_q, block_kv=block_kv, seq_q=Sq, seq_kv=Skv,
+        causal=causal, window=window, scale=1.0 / np.sqrt(D))
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, D),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+            pl.BlockSpec((1, block_kv, D),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :Sq]

@@ -1,0 +1,37 @@
+"""Jit'd public wrapper for the flash-attention Pallas kernel.
+
+On CPU (this container) the kernel body executes in interpret mode; on TPU
+it compiles through Mosaic.  ``flash_attention`` takes model-layout tensors
+(B, S, H, D) + unexpanded KV (B, S, Kv, D).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_kv: int = 128, interpret: Optional[bool] = None):
+    """q (B,S,H,D); k/v (B,S,Kv,D) -> (B,S,H,D)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, S, H, D = q.shape
+    Kv = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Kv, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Kv, S, D)
+    out = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=interpret)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

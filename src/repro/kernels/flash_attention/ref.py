@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel (shares the model's
+attention_core math exactly)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, window: Optional[int] = None):
+    """q (BH, Sq, D), k/v (BKv, Skv, D); GQA via head-group repetition."""
+    BH, Sq, D = q.shape
+    BKv = k.shape[0]
+    group = BH // BKv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=0)
+        v = jnp.repeat(v, group, axis=0)
+    logits = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(D)
+    q_pos = jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        diff = q_pos - kv_pos
+        ok = diff >= 0
+        if window is not None:
+            ok &= diff < window
+    logits = jnp.where(ok[None], logits, -1e30)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,28 @@
+"""Jit'd wrapper for the SSD Pallas kernel (model layout)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ssd import ssd_bh
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, Bm, Cm, dt, A, D, *, chunk: int = 64,
+        interpret: Optional[bool] = None):
+    """x (B,S,H,p); Bm/Cm (B,S,n); dt (B,S,H); A/D (H,) -> (B,S,H,p)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, S, H, p = x.shape
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, S, p)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, S)
+    Af = jnp.broadcast_to(A[None], (B, H)).reshape(B * H)
+    Df = jnp.broadcast_to(D[None], (B, H)).reshape(B * H)
+    out = ssd_bh(xf, Bm, Cm, dtf, Af, Df, chunk=chunk, interpret=interpret)
+    return out.reshape(B, H, S, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,31 @@
+"""Sequential-recurrence oracle for the Mamba2 SSD scan."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ssd_ref(x, Bm, Cm, dt, A, D):
+    """x (BH,S,p); Bm/Cm (B,S,n); dt (BH,S); A/D (BH,).  Literal scan."""
+    BH, S, p = x.shape
+    B, _, n = Bm.shape
+    H = BH // B
+    x = np.asarray(x, np.float64)
+    Bm = np.asarray(Bm, np.float64)
+    Cm = np.asarray(Cm, np.float64)
+    dt = np.asarray(dt, np.float64)
+    A = np.asarray(A, np.float64)
+    D = np.asarray(D, np.float64)
+    out = np.zeros_like(x)
+    state = np.zeros((BH, p, n))
+    for t in range(S):
+        a = np.exp(dt[:, t] * A)  # (BH,)
+        bvec = Bm[:, t]  # (B, n)
+        cvec = Cm[:, t]
+        bfull = np.repeat(bvec, H, axis=0)  # (BH, n) head-major batch
+        cfull = np.repeat(cvec, H, axis=0)
+        state = (a[:, None, None] * state
+                 + dt[:, t, None, None] * x[:, t, :, None] * bfull[:, None, :])
+        out[:, t] = np.einsum("bn,bpn->bp", cfull, state) \
+            + x[:, t] * D[:, None]
+    return jnp.asarray(out, jnp.float32)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Per (batch, head): state (p, n) carried in VMEM scratch across sequence
+chunks (grid = (B*H, n_chunks), chunk axis innermost):
+
+    state_t = exp(dt_t A_h) state_{t-1} + dt_t x_t ⊗ B_t
+    y_t     = C_t · state_t + D_h x_t
+
+Intra-chunk uses the dense (Q, Q) decay matrix (MXU-friendly) exactly as the
+jnp path in repro.models.ssm.apply_mamba_full.  B/C are head-shared
+(ngroups=1) and index-mapped without replication.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, d_ref, o_ref, state, *,
+            chunk, p, n):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0].astype(jnp.float32)  # (Q, p)
+    Bm = b_ref[0].astype(jnp.float32)  # (Q, n)
+    Cm = c_ref[0].astype(jnp.float32)  # (Q, n)
+    dt = dt_ref[0].astype(jnp.float32)  # (Q,)
+    A = a_ref[0]  # scalar (negative)
+    D = d_ref[0]
+
+    la = dt * A  # (Q,) log decay per step
+    seg = jnp.cumsum(la)  # inclusive
+    # intra-chunk: Y[t] = sum_{i<=t} exp(seg[t]-seg[i]) (C_t·B_i) dt_i x_i
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, Q)
+    # exponents clamped <= 0 (masked upper-triangle entries would be inf)
+    decay = jnp.exp(jnp.minimum(seg[:, None] - seg[None, :], 0.0))
+    mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) \
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    M = jnp.where(mask, G * decay, 0.0)
+    xb = x * dt[:, None]
+    y = jax.lax.dot_general(M, xb, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, p)
+    # inter-chunk: Y[t] += C_t · (exp(seg[t]) state_in)   (state is (p, n))
+    y = y + jnp.exp(seg)[:, None] * jax.lax.dot_general(
+        Cm, state[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y = y + x * D
+    o_ref[0] = y.astype(o_ref.dtype)
+    # state update
+    decay_to_end = jnp.exp(seg[-1] - seg)  # (Q,)
+    contrib = jax.lax.dot_general(
+        (xb * decay_to_end[:, None]), Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (p, n)
+    state[...] = jnp.exp(seg[-1]) * state[...] + contrib
+
+
+def ssd_bh(x, Bm, Cm, dt, A, D, *, chunk: int = 64,
+           interpret: bool = False):
+    """x (BH, S, p); Bm/Cm (B, S, n) head-shared; dt (BH, S); A/D (BH,).
+
+    BH = B * H with head-major flattening (bh // H = batch).
+    """
+    BH, S, p = x.shape
+    B, _, n = Bm.shape
+    H = BH // B
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+    n_chunks = x.shape[1] // chunk
+    kern = functools.partial(_kernel, chunk=chunk, p=p, n=n)
+    out = pl.pallas_call(
+        kern,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, ci, H=H: (bh // H, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, ci, H=H: (bh // H, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1,), lambda bh, ci: (bh,)),
+            pl.BlockSpec((1,), lambda bh, ci: (bh,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, Bm, Cm, dt, A, D)
+    return out[:, :S]

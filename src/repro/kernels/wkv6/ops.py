@@ -1,0 +1,27 @@
+"""Jit'd wrapper for the WKV6 Pallas kernel (model layout (B,S,H,hd))."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.wkv6 import wkv6_bh
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, lw, u, *, chunk: int = 16,
+         interpret: Optional[bool] = None):
+    """r/k/v/lw (B,S,H,hd); u (H,hd) -> out (B,S,H,hd)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, S, H, hd = r.shape
+    to = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    out = wkv6_bh(to(r), to(k), to(v), to(lw), uf, chunk=chunk,
+                  interpret=interpret)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Sequential-recurrence oracle for WKV6 (the literal definition)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def wkv6_ref(r, k, v, lw, u):
+    """r/k/v/lw (BH, S, hd) f32; u (BH, hd).  Literal step-by-step scan."""
+    BH, S, hd = r.shape
+    r = np.asarray(r, np.float64)
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    w = np.exp(np.asarray(lw, np.float64))
+    u = np.asarray(u, np.float64)
+    out = np.zeros_like(r)
+    state = np.zeros((BH, hd, hd))
+    for t in range(S):
+        kv = k[:, t, :, None] * v[:, t, None, :]  # (BH, hd, hd)
+        att = state + u[:, :, None] * kv
+        out[:, t] = np.einsum("bd,bde->be", r[:, t], att)
+        state = w[:, t, :, None] * state + kv
+    return jnp.asarray(out, jnp.float32)

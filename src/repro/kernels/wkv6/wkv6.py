@@ -1,0 +1,86 @@
+"""Pallas TPU kernel for the RWKV6 (Finch) recurrence, chunked.
+
+    out_t = r_t · (S_{t-1} + u ⊙ k_t ⊗ v_t);   S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+
+Grid = (B*H, n_chunks) with the chunk axis innermost; the (hd, hd) f32 state
+lives in VMEM scratch and carries across chunk steps (sequential TPU grid
+execution).  Intra-chunk terms use the explicit masked decay tensor — the
+numerically-safe formulation shared with the jnp path
+(repro.models.ssm._wkv6_chunked, incl. the RWKV_MIN_LOG_W clamp).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state, *, chunk, hd):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    r = r_ref[0].astype(jnp.float32)  # (Q, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)  # log decay, clamped <= 0
+    u = u_ref[0].astype(jnp.float32)  # (hd,)
+
+    seg = jnp.cumsum(lw, axis=0)  # inclusive (Q, hd)
+    segx = seg - lw  # exclusive
+    # intra-chunk: A[t,i] = sum_c r[t,c] k[i,c] exp(segx[t,c]-seg[i,c]), i<t
+    # exponents clamped <= 0 (masked upper-triangle entries would be inf)
+    decay = jnp.exp(jnp.minimum(segx[:, None, :] - seg[None, :, :], 0.0))
+    mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) \
+        > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    A = jnp.einsum("tc,ic,tic->ti", r, k, decay)
+    A = jnp.where(mask, A, 0.0)
+    out = A @ v
+    # bonus (current token): (r_t · (u ⊙ k_t)) v_t
+    bonus = jnp.sum(r * u[None, :] * k, axis=1)  # (Q,)
+    out = out + bonus[:, None] * v
+    # inter-chunk: r_t ⊙ exp(segx_t) against the carried state
+    out = out + (r * jnp.exp(segx)) @ state[...]
+    o_ref[0] = out.astype(o_ref.dtype)
+    # state update: S <- diag(prod w) S + sum_i (k_i ⊙ exp(seg_end - seg_i)) v_i^T
+    decay_to_end = jnp.exp(seg[-1][None, :] - seg)  # (Q, hd)
+    state[...] = (jnp.exp(seg[-1])[:, None] * state[...]
+                  + jax.lax.dot_general(
+                      (k * decay_to_end), v, (((0,), (0,)), ((), ())),
+                      preferred_element_type=jnp.float32))
+
+
+def wkv6_bh(r, k, v, lw, u, *, chunk: int = 16, interpret: bool = False):
+    """r/k/v/lw: (BH, S, hd); u: (BH, hd).  Returns out (BH, S, hd)."""
+    BH, S, hd = r.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0))
+        r = jnp.pad(r, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        lw = jnp.pad(lw, padw)
+    n_chunks = r.shape[1] // chunk
+    kern = functools.partial(_kernel, chunk=chunk, hd=hd)
+    out = pl.pallas_call(
+        kern,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, hd), lambda b, ci: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct(r.shape, r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u)
+    return out[:, :S]

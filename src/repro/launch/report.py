@@ -1,0 +1,73 @@
+"""Render the dry-run artifacts into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirpath="experiments/dryrun"):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_ms(x):
+    return f"{x*1e3:.1f}"
+
+
+def markdown_table(rows, mesh="16x16"):
+    out = ["| arch | shape | compute ms | memory ms (tpu-est) | collective ms"
+           " | dominant | useful FLOPs | peak HBM GB (tpu-est) | fits |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    shape_order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+                   "long_500k": 3}
+    sel = [r for r in rows if r["mesh"] == mesh]
+    sel.sort(key=lambda r: (r["arch"], shape_order.get(r["shape"], 9)))
+    for r in sel:
+        t = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(t['compute_s'])} | "
+            f"{fmt_ms(t['memory_s'])} ({fmt_ms(t['memory_s_tpu_est'])}) | "
+            f"{fmt_ms(t['collective_s'])} | {t['dominant']} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['memory']['peak_hbm_bytes']/1e9:.1f} "
+            f"({r['peak_hbm_tpu_est_bytes']/1e9:.1f}) | "
+            f"{'Y' if r['fits_hbm_16g_tpu_est'] else 'N'} |")
+    return "\n".join(out)
+
+
+def summary(rows):
+    worst = sorted(
+        (r for r in rows if r["mesh"] == "16x16"
+         and r["roofline"]["bound_s"] > 0),
+        key=lambda r: r["roofline"]["compute_s"] / r["roofline"]["bound_s"])
+    coll = sorted(
+        (r for r in rows if r["mesh"] == "16x16"),
+        key=lambda r: -r["roofline"]["collective_s"])
+    lines = ["worst roofline fraction (single-pod):"]
+    for r in worst[:5]:
+        t = r["roofline"]
+        lines.append(f"  {r['arch']}/{r['shape']}: "
+                     f"compute/bound={t['compute_s']/t['bound_s']:.3f} "
+                     f"dominant={t['dominant']}")
+    lines.append("most collective-bound:")
+    for r in coll[:5]:
+        lines.append(f"  {r['arch']}/{r['shape']}: "
+                     f"coll={r['roofline']['collective_s']*1e3:.0f}ms "
+                     f"compute={r['roofline']['compute_s']*1e3:.0f}ms")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = load(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    print(f"{len(rows)} artifacts\n")
+    print("## single-pod 16x16\n")
+    print(markdown_table(rows, "16x16"))
+    print("\n## multi-pod 2x16x16\n")
+    print(markdown_table(rows, "2x16x16"))
+    print()
+    print(summary(rows))

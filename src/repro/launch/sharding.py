@@ -1,0 +1,255 @@
+"""Logical-axis sharding rules per (architecture x shape x mesh).
+
+MaxText-style: params carry logical axis names (built by the ParamBuilder);
+``make_rules`` maps every logical name to a mesh axis (or None = replicate)
+based on divisibility and the shape kind.  The ShardingCtx applies activation
+constraints inside the model; param/optimizer shardings are derived from the
+axes tree.
+
+Key decisions (rationale in DESIGN.md §6):
+* batch        -> ("pod","data") when divisible (else ("data",), else None).
+* heads/mlp/vocab/inner -> "model" when divisible; attention activations for
+  small-head archs (qwen 40H, llama4 40H, gemma 8H) replicate over model
+  (weight-only TP) — recorded honestly in the roofline.
+* experts      -> expert parallelism over the data axes (all-to-all dispatch).
+* embed_fsdp   -> data axes for TRAIN (ZeRO-3-style weight sharding; optimizer
+  state follows params), replicated for inference shapes (weights fit via
+  TP+EP at serve time).
+* seq_act      -> "model" for train (Megatron-SP sequence-sharded residual
+  stream: bounds the remat stash for the big-d archs), None for inference.
+* kv cache time axis -> "data" only for long_500k (batch=1: flash-decoding
+  style sequence sharding); batch axis otherwise.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.layers import ShardingCtx
+
+
+def _div(a: int, b: int) -> bool:
+    return b > 0 and a > 0 and a % b == 0
+
+
+def make_rules(cfg: ModelConfig, mesh, shape: ShapeSpec) -> Dict[str, object]:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes.get("model", 1)
+    data_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    n_data = int(np.prod([sizes[a] for a in data_axes])) if data_axes else 1
+    is_train = shape.kind == "train"
+    is_decode = shape.kind == "decode"
+
+    # batch placement
+    gb = shape.global_batch
+    if _div(gb, n_data):
+        batch = data_axes if len(data_axes) > 1 else data_axes[0]
+    elif _div(gb, sizes.get("data", 1)):
+        batch = "data"
+    else:
+        batch = None
+
+    # expert parallelism axes.  Expert-rich archs (deepseek) use padded
+    # pure-EP weights (one expert per chip over data x model — hillclimb A);
+    # small-E archs shard experts over the data axes with TP'd expert FFNs.
+    from repro.models.moe import expert_alloc
+
+    E = cfg.n_experts
+    if E and expert_alloc(E) != E:
+        experts = ("data", "model")
+    elif _div(E, n_data):
+        experts = data_axes if len(data_axes) > 1 else data_axes[0]
+    elif _div(E, sizes.get("data", 1)):
+        experts = "data"
+    elif _div(E, model):
+        experts = "model"
+    else:
+        experts = None
+
+    def model_if(n):
+        return "model" if _div(n, model) else None
+
+    # Megatron-SP sequence sharding of the residual stream bounds the remat
+    # stash (saved block inputs).  It costs an AG+RS per block, so enable it
+    # only when the per-device stash would otherwise crowd out HBM.
+    stash_bytes = (gb / max(1, n_data)) * shape.seq_len * cfg.d_model * 2 \
+        * cfg.n_layers
+    seq_act = (model_if(shape.seq_len)
+               if (is_train and stash_bytes > 8e9) else None)
+    # pure-EP dispatch needs model-axis-unique tokens: sequence-shard the
+    # residual stream at prefill too for expert-rich archs (hillclimb A)
+    if cfg.n_experts >= 64 and shape.kind == "prefill":
+        seq_act = model_if(shape.seq_len)
+
+    rules: Dict[str, object] = {
+        # ---- activations ----
+        "batch": batch,
+        "seq": None,
+        "seq_act": seq_act,
+        "heads_act": model_if(cfg.n_heads),
+        # sequence-parallel attention fallback for head-unshardable archs
+        "attn_seq_q": (None if _div(cfg.n_heads, model)
+                       else model_if(shape.seq_len)),
+        "kv_heads_act": model_if(cfg.n_kv_heads),
+        "mlp_act": "model",
+        "expert_mlp_act": model_if(cfg.d_ff_expert),
+        "inner_act": model_if(cfg.d_inner),
+        # ---- weights ----
+        "embed_fsdp": ((data_axes if len(data_axes) > 1 else data_axes[0])
+                       if (is_train and data_axes) else None),
+        "vocab": model_if(cfg.padded_vocab),
+        "heads": model_if(cfg.n_heads),
+        "kv_heads": model_if(cfg.n_kv_heads),
+        # weight-storage fallback (hillclimb B iter 2): when heads don't
+        # divide the model axis, shard attention weights on head_dim instead
+        # (XLA re-shards activations to the seq-parallel layout cheaply)
+        "head_dim": (None if _div(cfg.n_heads, model)
+                     else model_if(cfg.head_dim)),
+        "qk_dim": None,
+        "mlp": "model",
+        "experts": experts,
+        # padded pure-EP keeps each expert's FFN whole on its chip
+        "expert_mlp": (None if experts == ("data", "model")
+                       else model_if(cfg.d_ff_expert)),
+        "qlora": None,
+        "kvlora": None,
+        "inner": model_if(cfg.d_inner),
+        "ssm_heads": model_if(cfg.ssm_heads),
+        "ssm_dim": None,
+        "state_nosplit": None,
+        "heads_x_dim": model_if(cfg.d_model if cfg.family == "ssm" else 0),
+        "mix": None,
+        "lora": None,
+        "conv": None,
+        "frame": None,
+        "embed_nosplit": None,
+        "inner_nosplit": None,
+        "experts_nosplit": None,
+        "layers": None,
+    }
+    # ---- cache time axis (KV caches dominate memory at 32k+) -------------
+    # batch-sharded cells put the cache time dim on "model"; the batch=1
+    # long-context cell shards time over BOTH data axes and model
+    # (flash-decoding style sequence sharding).
+    if _div(gb, n_data):
+        rules["kv_time"] = "model" if _div(shape.seq_len, model) else None
+    else:
+        full = tuple(data_axes) + ("model",)
+        n_full = n_data * model
+        if _div(shape.seq_len, n_full):
+            rules["kv_time"] = full
+        elif _div(shape.seq_len, model):
+            rules["kv_time"] = "model"
+        else:
+            rules["kv_time"] = None
+    # mlp dim check (all assigned d_ff are divisible by 16, but guard anyway)
+    if not _div(cfg.d_ff, model):
+        rules["mlp"] = None
+        rules["mlp_act"] = None
+    return rules
+
+
+def make_ctx(cfg: ModelConfig, mesh, shape: ShapeSpec) -> ShardingCtx:
+    return ShardingCtx(mesh, make_rules(cfg, mesh, shape))
+
+
+# ---------------------------------------------------------------------------
+# Input / state specs for the dry-run (ShapeDtypeStruct, zero allocation)
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, sh: ShardingCtx):
+    """ShapeDtypeStructs for a train/prefill batch."""
+    import jax.numpy as jnp
+
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32,
+                               sharding=sh.named_sharding("batch", None))
+    if cfg.is_enc_dec:
+        frames = jax.ShapeDtypeStruct(
+            (B, S, cfg.frame_dim), jnp.float32,
+            sharding=sh.named_sharding("batch", None, None))
+        return {"frames": frames, "tokens": tok}
+    return {"tokens": tok}
+
+
+def cache_axes_for(name: str, ndim: int, rules: Optional[Dict] = None):
+    """Logical axes for a cache leaf, identified by name (+ ndim for the
+    zamba mega segment whose leaves carry an extra per-group axis).
+
+    When KV heads shard over the model axis, the cache time axis must not
+    also claim "model" (a PartitionSpec may use each mesh axis once) — the
+    head axis gives the same memory win, so time drops the overlap.
+    """
+    rules = rules or {}
+    time_ax = "kv_time"
+    if rules.get("kv_heads_act") == "model":
+        kv_time = rules.get("kv_time")
+        axes = kv_time if isinstance(kv_time, tuple) else (kv_time,)
+        remaining = tuple(a for a in axes if a not in (None, "model"))
+        time_ax = ("kv_time_noverlap" if remaining else None)
+        rules.setdefault("kv_time_noverlap", remaining or None)
+    if name in ("k", "v"):  # (layers, B, T, Kv, hd)
+        return (None, "batch", time_ax, "kv_heads_act", None)
+    if name in ("ck", "cv"):  # cross-attention KV (encoder length)
+        return (None, "batch", time_ax, "kv_heads_act", None)
+    if name in ("latent", "krope"):  # (layers, B, T, r)
+        return (None, "batch", "kv_time", None)
+    if name == "wkv":  # (layers, B, h, hd, hd)
+        return (None, "batch", "ssm_heads_act", None, None)
+    if name in ("shift_tm", "shift_cm"):  # (layers, B, d)
+        return (None, "batch", None)
+    if name == "ssm":  # (layers[, per], B, h, p, n)
+        if ndim == 6:
+            return (None, None, "batch", "ssm_heads_act", None, None)
+        return (None, "batch", "ssm_heads_act", None, None)
+    if name == "conv":  # (layers[, per], B, w-1, conv_dim)
+        if ndim == 5:
+            return (None, None, "batch", None, None)
+        return (None, "batch", None, None)
+    return (None,) * ndim
+
+
+def cache_tree_axes(tree, rules=None):
+    """Map a cache pytree to logical-axes tuples (by leaf name)."""
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else None
+        return cache_axes_for(name, leaf.ndim, rules)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, sh: ShardingCtx,
+                enc_len: Optional[int] = None):
+    """ShapeDtypeStruct cache tree with shardings for a decode cell."""
+    from repro.models.model import init_decode_caches
+
+    shapes = jax.eval_shape(
+        lambda: init_decode_caches(cfg, shape.global_batch, shape.seq_len,
+                                   enc_len=enc_len))
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else None
+        axes = cache_axes_for(name, leaf.ndim, sh.rules)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=sh.named_sharding(*axes))
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+def cache_shardings(cfg: ModelConfig, sh: ShardingCtx, cache_shape_tree):
+    """NamedSharding tree for prefill cache OUTPUTS (same name rules)."""
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else None
+        axes = cache_axes_for(name, leaf.ndim, sh.rules)
+        return sh.named_sharding(*axes)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape_tree)
+
+
+def param_shardings(cfg: ModelConfig, sh: ShardingCtx, axes_tree):
+    return sh.param_shardings(axes_tree)

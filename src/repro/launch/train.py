@@ -1,0 +1,82 @@
+"""Training launcher: real-device entry point for any assigned arch.
+
+On a TPU fleet this runs under the usual multi-host bootstrap
+(jax.distributed.initialize); on this CPU container use --reduced for a
+smoke-scale run.  Includes the XLA latency-hiding-scheduler flags used for
+compute/collective overlap on real hardware (DESIGN.md §7).
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3_2_1b \
+        --reduced --steps 30
+"""
+import os
+
+_TPU_PERF_FLAGS = (
+    "--xla_tpu_enable_latency_hiding_scheduler=true "
+    "--xla_tpu_megacore_fusion_allow_ags=true "
+    "--xla_enable_async_collective_permute=true "
+)
+if os.environ.get("REPRO_TPU_FLAGS", "0") == "1":
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " " + _TPU_PERF_FLAGS)
+
+import argparse  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES_BY_NAME, get_config, get_reduced_config  # noqa: E402
+from repro.data import make_batches  # noqa: E402
+from repro.launch.mesh import make_mesh_for  # noqa: E402
+from repro.launch.sharding import make_ctx  # noqa: E402
+from repro.models.layers import NULL_SH  # noqa: E402
+from repro.training import (TrainHParams, checkpoint, init_train_state,  # noqa: E402
+                            make_optimizer_for, make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_2_1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = (get_reduced_config(args.arch) if args.reduced
+           else get_config(args.arch))
+    hp = TrainHParams(learning_rate=args.lr, grad_accum=args.grad_accum)
+    opt = make_optimizer_for(cfg, hp)
+    if args.model_parallel > 1:
+        mesh = make_mesh_for(model_parallel=args.model_parallel)
+        shape = SHAPES_BY_NAME["train_4k"]
+        sh = make_ctx(cfg, mesh, shape)
+    else:
+        sh = NULL_SH
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step_fn = jax.jit(make_train_step(cfg, sh, opt, hp))
+    start = 0
+    if args.ckpt and checkpoint.latest_step(args.ckpt):
+        state, start = checkpoint.restore(args.ckpt, state)
+        print(f"resumed at step {start}")
+    batches = make_batches(cfg, args.batch, args.seq, seed=0,
+                           start_step=start)
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        state, metrics = step_fn(state, batch)
+        if (i + 1) % 5 == 0:
+            print(f"step {i+1} loss {float(metrics['loss']):.4f} "
+                  f"({(time.time()-t0)/5:.2f}s/step)")
+            t0 = time.time()
+        if args.ckpt and (i + 1) % 20 == 0:
+            checkpoint.save(args.ckpt, i + 1, state)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

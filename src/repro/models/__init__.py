@@ -1,0 +1,24 @@
+from repro.models.layers import NULL_SH, ShardingCtx
+from repro.models.model import (
+    decode_step,
+    init_decode_caches,
+    init_params,
+    init_params_shapes,
+    param_axes,
+    prefill,
+    stack_plan,
+    train_loss,
+)
+
+__all__ = [
+    "NULL_SH",
+    "ShardingCtx",
+    "decode_step",
+    "init_decode_caches",
+    "init_params",
+    "init_params_shapes",
+    "param_axes",
+    "prefill",
+    "stack_plan",
+    "train_loss",
+]

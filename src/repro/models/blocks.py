@@ -1,0 +1,311 @@
+"""Per-family block functions — the BPRR placement granularity.
+
+Every block exposes three entry points used across the framework:
+
+* ``init_<kind>(key, cfg)``               -> (params, axes)
+* ``<kind>_full(params, cfg, sh, h, ...)`` -> (h, cache_entry)   train/prefill
+* ``<kind>_decode(params, cfg, sh, h, cache_entry, pos)`` -> (h, cache_entry)
+
+``cache_entry`` is the per-block serving state (KV / MLA latent / SSM state);
+train passes ignore it.  The stack drivers in ``repro.models.model`` scan
+these; the geo serving engine (``repro.serving.engine``) applies them one
+block at a time according to the paper's placement ``(a_j, m_j)``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    ParamBuilder,
+    ShardingCtx,
+    apply_mlp,
+    apply_norm,
+    init_mlp,
+    init_norm,
+)
+
+_BIG = 1 << 30
+
+
+def window_for_layer(cfg: ModelConfig, layer_idx):
+    """Traced per-layer sliding window (gemma3 local:global pattern).
+
+    Returns a scalar usable inside a scanned block: the window size for local
+    layers, or a huge value for global layers.  ``layer_idx`` may be traced.
+    """
+    if cfg.sliding_window <= 0:
+        return None
+    if cfg.local_global_period <= 0:
+        return cfg.sliding_window
+    is_global = (layer_idx + 1) % cfg.local_global_period == 0
+    return jnp.where(is_global, _BIG, cfg.sliding_window)
+
+
+# ---------------------------------------------------------------------------
+# Decoder block (dense / moe / vlm families; gemma3 pattern via window arg)
+# ---------------------------------------------------------------------------
+
+
+def init_decoder_block(key, cfg: ModelConfig):
+    pb = ParamBuilder(key)
+    pb.sub("ln1", init_norm, cfg)
+    if cfg.attn_kind == "mla":
+        pb.sub("attn", attn.init_mla, cfg)
+    else:
+        pb.sub("attn", attn.init_gqa, cfg)
+    pb.sub("ln2", init_norm, cfg)
+    if cfg.is_moe:
+        pb.sub("ffn", moe_mod.init_moe, cfg)
+    else:
+        pb.sub("ffn", init_mlp, cfg)
+    if cfg.sandwich_norm:
+        pb.sub("post_ln1", init_norm, cfg)
+        pb.sub("post_ln2", init_norm, cfg)
+    return pb.build()
+
+
+def decoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h, positions,
+                       layer_idx=0):
+    """Full-sequence decoder block.  Returns (h, cache_entry, aux)."""
+    win = window_for_layer(cfg, layer_idx)
+    x = apply_norm(params["ln1"], cfg, h)
+    if cfg.attn_kind == "mla":
+        a, kv = attn.apply_mla_full(params["attn"], cfg, sh, x, positions)
+        cache = {"latent": kv[0], "krope": kv[1]}
+    else:
+        a, kv = attn.apply_gqa_full(params["attn"], cfg, sh, x, positions, win)
+        cache = {"k": kv[0], "v": kv[1]}
+    if cfg.sandwich_norm:
+        a = apply_norm(params["post_ln1"], cfg, a)
+    h = h + a
+    x = apply_norm(params["ln2"], cfg, h)
+    aux = {}
+    if cfg.is_moe:
+        m, aux = moe_mod.apply_moe(params["ffn"], cfg, sh, x)
+    else:
+        m = apply_mlp(params["ffn"], cfg, sh, x)
+    if cfg.sandwich_norm:
+        m = apply_norm(params["post_ln2"], cfg, m)
+    h = sh.act(h + m, "batch", "seq_act", None)
+    return h, cache, aux
+
+
+def decoder_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, cache,
+                         pos, layer_idx=0):
+    """Single-token decoder block.  h (B,1,d).  Returns (h, cache)."""
+    win = window_for_layer(cfg, layer_idx)
+    x = apply_norm(params["ln1"], cfg, h)
+    if cfg.attn_kind == "mla":
+        a, lat, kr = attn.apply_mla_decode(
+            params["attn"], cfg, sh, x, cache["latent"], cache["krope"], pos)
+        cache = {"latent": lat, "krope": kr}
+    else:
+        a, ck, cv = attn.apply_gqa_decode(
+            params["attn"], cfg, sh, x, cache["k"], cache["v"], pos, win)
+        cache = {"k": ck, "v": cv}
+    if cfg.sandwich_norm:
+        a = apply_norm(params["post_ln1"], cfg, a)
+    h = h + a
+    x = apply_norm(params["ln2"], cfg, h)
+    if cfg.is_moe:
+        m, _ = moe_mod.apply_moe(params["ffn"], cfg, sh, x)
+    else:
+        m = apply_mlp(params["ffn"], cfg, sh, x)
+    if cfg.sandwich_norm:
+        m = apply_norm(params["post_ln2"], cfg, m)
+    return h + m, cache
+
+
+# ---------------------------------------------------------------------------
+# Encoder / decoder blocks (seamless enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def init_encoder_block(key, cfg: ModelConfig):
+    pb = ParamBuilder(key)
+    pb.sub("ln1", init_norm, cfg)
+    pb.sub("attn", attn.init_gqa, cfg)
+    pb.sub("ln2", init_norm, cfg)
+    pb.sub("ffn", init_mlp, cfg)
+    return pb.build()
+
+
+def encoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h, positions):
+    """Bidirectional self-attention encoder block."""
+    x = apply_norm(params["ln1"], cfg, h)
+    q = attn._q_proj(params["attn"], cfg, x)
+    k, v = attn._kv_proj(params["attn"], cfg, x)
+    if cfg.pos_kind == "rope":
+        cos, sin = attn.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        q = attn.apply_rope(q, cos, sin)
+        k = attn.apply_rope(k, cos, sin)
+    G = cfg.n_heads // cfg.n_kv_heads
+    k_exp = jnp.repeat(k, G, axis=2) if G > 1 else k
+    v_exp = jnp.repeat(v, G, axis=2) if G > 1 else v
+    out = attn.attention_core(q, k_exp, v_exp, positions, positions,
+                              causal=False)
+    a = jnp.einsum("bshk,hkd->bsd", out,
+                   params["attn"]["wo"].astype(x.dtype))
+    h = h + a
+    x = apply_norm(params["ln2"], cfg, h)
+    h = h + apply_mlp(params["ffn"], cfg, sh, x)
+    return sh.act(h, "batch", "seq_act", None)
+
+
+def init_cross_decoder_block(key, cfg: ModelConfig):
+    pb = ParamBuilder(key)
+    pb.sub("ln1", init_norm, cfg)
+    pb.sub("self_attn", attn.init_gqa, cfg)
+    pb.sub("ln_cross", init_norm, cfg)
+    pb.sub("cross_attn", attn.init_gqa, cfg)
+    pb.sub("ln2", init_norm, cfg)
+    pb.sub("ffn", init_mlp, cfg)
+    return pb.build()
+
+
+def cross_decoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h,
+                             positions, enc_h):
+    """Decoder block with cross-attention.  Returns (h, cache_entry)."""
+    x = apply_norm(params["ln1"], cfg, h)
+    a, kv = attn.apply_gqa_full(params["self_attn"], cfg, sh, x, positions)
+    h = h + a
+    x = apply_norm(params["ln_cross"], cfg, h)
+    ck, cv = attn.gqa_encoder_kv(params["cross_attn"], cfg, sh, enc_h)
+    a, _ = attn.apply_gqa_full(params["cross_attn"], cfg, sh, x, positions,
+                               cross_kv=(ck, cv))
+    h = h + a
+    x = apply_norm(params["ln2"], cfg, h)
+    h = h + apply_mlp(params["ffn"], cfg, sh, x)
+    h = sh.act(h, "batch", "seq_act", None)
+    cache = {"k": kv[0], "v": kv[1], "ck": ck, "cv": cv}
+    return h, cache
+
+
+def cross_decoder_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h,
+                               cache, pos):
+    x = apply_norm(params["ln1"], cfg, h)
+    a, ck, cv = attn.apply_gqa_decode(
+        params["self_attn"], cfg, sh, x, cache["k"], cache["v"], pos)
+    h = h + a
+    x = apply_norm(params["ln_cross"], cfg, h)
+    a, _, _ = attn.apply_gqa_decode(
+        params["cross_attn"], cfg, sh, x, cache["ck"], cache["cv"], pos,
+        cross=True)
+    h = h + a
+    x = apply_norm(params["ln2"], cfg, h)
+    h = h + apply_mlp(params["ffn"], cfg, sh, x)
+    return h, {"k": ck, "v": cv, "ck": cache["ck"], "cv": cache["cv"]}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (zamba2 backbone)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_block(key, cfg: ModelConfig):
+    pb = ParamBuilder(key)
+    pb.sub("ln", init_norm, cfg)
+    pb.sub("mixer", ssm_mod.init_mamba, cfg)
+    return pb.build()
+
+
+def mamba_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h):
+    x = apply_norm(params["ln"], cfg, h)
+    y, state = ssm_mod.apply_mamba_full(params["mixer"], cfg, sh, x)
+    return sh.act(h + y, "batch", "seq_act", None), state
+
+
+def mamba_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, state):
+    x = apply_norm(params["ln"], cfg, h)
+    y, state = ssm_mod.apply_mamba_decode(params["mixer"], cfg, sh, x, state)
+    return h + y, state
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 shared attention block (params shared across invocations)
+# ---------------------------------------------------------------------------
+
+
+def init_zamba_shared(key, cfg: ModelConfig):
+    """Attention+MLP on concat(hidden, embedding0), width 2*d_model."""
+    width = 2 * cfg.d_model
+    pb = ParamBuilder(key)
+    pb.sub("ln1", init_norm, cfg, width)
+    pb.sub("attn", attn.init_gqa, cfg, width)
+    pb.sub("ln2", init_norm, cfg, width)
+    pb.sub("ffn", init_mlp, cfg, width)
+    return pb.build()
+
+
+def zamba_shared_full(params, cfg: ModelConfig, sh: ShardingCtx, h, emb0,
+                      positions):
+    """Returns (h, cache_entry) — KV cache per invocation."""
+    xc = jnp.concatenate([h, emb0], axis=-1)
+    x = apply_norm(params["ln1"], cfg, xc)
+    a, kv = attn.apply_gqa_full(params["attn"], cfg, sh, x, positions)
+    h = h + a
+    xc = jnp.concatenate([h, emb0], axis=-1)
+    x = apply_norm(params["ln2"], cfg, xc)
+    h = h + apply_mlp(params["ffn"], cfg, sh, x)
+    return sh.act(h, "batch", "seq_act", None), {"k": kv[0], "v": kv[1]}
+
+
+def zamba_shared_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, emb0,
+                        cache, pos):
+    xc = jnp.concatenate([h, emb0], axis=-1)
+    x = apply_norm(params["ln1"], cfg, xc)
+    a, ck, cv = attn.apply_gqa_decode(
+        params["attn"], cfg, sh, x, cache["k"], cache["v"], pos)
+    h = h + a
+    xc = jnp.concatenate([h, emb0], axis=-1)
+    x = apply_norm(params["ln2"], cfg, xc)
+    h = h + apply_mlp(params["ffn"], cfg, sh, x)
+    return h, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_block(key, cfg: ModelConfig):
+    pb = ParamBuilder(key)
+    pb.sub("ln1", init_norm, cfg)
+    pb.sub("tm", ssm_mod.init_rwkv_tm, cfg)
+    pb.sub("ln2", init_norm, cfg)
+    pb.sub("cm", ssm_mod.init_rwkv_cm, cfg)
+    return pb.build()
+
+
+def rwkv_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h):
+    x = apply_norm(params["ln1"], cfg, h)
+    y, tm_state = ssm_mod.apply_rwkv_tm_full(params["tm"], cfg, sh, x)
+    h = h + y
+    x = apply_norm(params["ln2"], cfg, h)
+    y, cm_shift = ssm_mod.apply_rwkv_cm(params["cm"], cfg, sh, x)
+    h = sh.act(h + y, "batch", "seq_act", None)
+    state = {"wkv": tm_state["wkv"], "shift_tm": tm_state["shift"],
+             "shift_cm": cm_shift}
+    return h, state
+
+
+def rwkv_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, state):
+    x = apply_norm(params["ln1"], cfg, h)
+    y, tm_state = ssm_mod.apply_rwkv_tm_decode(
+        params["tm"], cfg, sh, x,
+        {"wkv": state["wkv"], "shift": state["shift_tm"]})
+    h = h + y
+    x = apply_norm(params["ln2"], cfg, h)
+    y, cm_shift = ssm_mod.apply_rwkv_cm(params["cm"], cfg, sh, x,
+                                        shift_state=state["shift_cm"])
+    h = h + y
+    state = {"wkv": tm_state["wkv"], "shift_tm": tm_state["shift"],
+             "shift_cm": cm_shift}
+    return h, state

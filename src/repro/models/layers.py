@@ -1,0 +1,288 @@
+"""Foundational layers: sharding context, param init, norms, RoPE/ALiBi, MLP.
+
+Conventions
+-----------
+* All modules are pure functions: ``init_*(key, cfg) -> (params, axes)`` and
+  ``apply_*(params, cfg, sh, ...) -> ...``.
+* ``params`` is a nested dict of jnp arrays; ``axes`` mirrors it with tuples of
+  *logical axis names* used by the sharding rules (see repro/launch/sharding).
+* ``sh`` is a ``ShardingCtx``: ``sh.act(x, *logical_axes)`` applies a
+  ``with_sharding_constraint`` when a mesh is active and is the identity
+  otherwise, so the same model code runs in smoke tests (1 CPU device) and in
+  the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Sharding context
+# ---------------------------------------------------------------------------
+
+
+class ShardingCtx:
+    """Maps logical axis names to mesh axes; no-op without a mesh.
+
+    ``rules`` maps a logical axis name to a mesh axis name, a tuple of mesh
+    axis names, or None (replicated).  Unknown logical names replicate.
+    """
+
+    def __init__(self, mesh=None, rules: Optional[Dict[str, object]] = None):
+        self.mesh = mesh
+        self.rules = dict(rules or {})
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*[self.rules.get(a) if a else None for a in logical])
+
+    def act(self, x, *logical: Optional[str]):
+        """Constrain an activation's sharding (identity without a mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*logical))
+        )
+
+    def named_sharding(self, *logical: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def param_shardings(self, axes_tree):
+        """NamedSharding pytree for a params tree given its axes tree."""
+        if self.mesh is None:
+            return None
+        return jax.tree.map(
+            lambda ax: NamedSharding(self.mesh, self.spec(*ax)),
+            axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+
+
+NULL_SH = ShardingCtx()
+
+
+# ---------------------------------------------------------------------------
+# Param creation
+# ---------------------------------------------------------------------------
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, shape: Sequence[int], axes: Tuple[str, ...], dtype,
+               scale: Optional[float] = None):
+    """Truncated-normal init with 1/sqrt(fan_in) default scale."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(1, fan_in))
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale
+    return w.astype(dtype), tuple(axes)
+
+
+class ParamBuilder:
+    """Collects (params, axes) pairs keyed by name with split PRNG keys."""
+
+    def __init__(self, key):
+        self.key = key
+        self.params: Dict[str, object] = {}
+        self.axes: Dict[str, object] = {}
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def dense(self, name, shape, axes, dtype, scale=None):
+        w, ax = dense_init(self._next(), shape, axes, dtype, scale)
+        self.params[name] = w
+        self.axes[name] = ax
+
+    def zeros(self, name, shape, axes, dtype):
+        self.params[name] = jnp.zeros(shape, dtype)
+        self.axes[name] = tuple(axes)
+
+    def ones(self, name, shape, axes, dtype):
+        self.params[name] = jnp.ones(shape, dtype)
+        self.axes[name] = tuple(axes)
+
+    def const(self, name, value, axes):
+        self.params[name] = value
+        self.axes[name] = tuple(axes)
+
+    def sub(self, name, init_fn, *args, **kw):
+        p, a = init_fn(self._next(), *args, **kw)
+        self.params[name] = p
+        self.axes[name] = a
+
+    def build(self):
+        return self.params, self.axes
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+
+def init_norm(key, cfg: ModelConfig, width: Optional[int] = None):
+    d = width or cfg.d_model
+    pb = ParamBuilder(key)
+    if cfg.norm_kind == "rmsnorm":
+        pb.ones("scale", (d,), ("embed_nosplit",), jnp.float32)
+    elif cfg.norm_kind == "layernorm":
+        pb.ones("scale", (d,), ("embed_nosplit",), jnp.float32)
+        pb.zeros("bias", (d,), ("embed_nosplit",), jnp.float32)
+    # nonparametric: no params
+    return pb.build()
+
+
+def apply_norm(params, cfg: ModelConfig, x):
+    """Normalisation with f32 *statistics* but element ops in x.dtype —
+    avoids materialising full-width f32 copies of the residual stream
+    (matters on backends with weak elementwise fusion; DESIGN.md §6)."""
+    d = x.shape[-1]
+    if cfg.norm_kind == "rmsnorm":
+        ss = jnp.einsum("...d,...d->...", x, x,
+                        preferred_element_type=jnp.float32)
+        inv = jax.lax.rsqrt(ss / d + cfg.norm_eps)
+        return x * inv[..., None].astype(x.dtype) \
+            * params["scale"].astype(x.dtype)
+    mean = (jnp.einsum("...d->...", x, preferred_element_type=jnp.float32)
+            / d)
+    centered = x - mean[..., None].astype(x.dtype)
+    var = jnp.einsum("...d,...d->...", centered, centered,
+                     preferred_element_type=jnp.float32) / d
+    out = centered * jax.lax.rsqrt(var + cfg.norm_eps)[..., None].astype(x.dtype)
+    if cfg.norm_kind == "layernorm":
+        out = out * params["scale"].astype(x.dtype) \
+            + params["bias"].astype(x.dtype)
+    return out
+
+
+def rms_norm_simple(x, scale, eps=1e-6):
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    inv = jax.lax.rsqrt(ss / x.shape[-1] + eps)
+    return x * inv[..., None].astype(x.dtype) * scale.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary / ALiBi positions
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, dim: int, theta: float):
+    """cos/sin tables for ``positions`` (any shape), rotating ``dim`` dims."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, D); cos/sin: (..., S, D/2) broadcast over heads.
+
+    Tables are built in f32 (phase accuracy at long positions) but the
+    rotation itself runs in x.dtype to avoid f32 copies of q/k."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def alibi_slopes(n_heads: int):
+    """Standard ALiBi geometric slopes (BLOOM)."""
+    p = 2 ** int(np.floor(np.log2(n_heads)))
+    base = 2.0 ** (-8.0 / p)
+    slopes = base ** np.arange(1, p + 1)
+    if p < n_heads:
+        extra_base = 2.0 ** (-4.0 / p)
+        extra = extra_base ** np.arange(1, 2 * (n_heads - p) + 1, 2)
+        slopes = np.concatenate([slopes, extra])
+    return jnp.asarray(slopes, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg: ModelConfig):
+    pb = ParamBuilder(key)
+    pb.dense("tok", (cfg.padded_vocab, cfg.d_model), ("vocab", "embed_nosplit"),
+             _dtype(cfg), scale=1.0)
+    if cfg.frontend == "frames":
+        pb.dense("frame_proj", (cfg.frame_dim, cfg.d_model),
+                 ("frame", "embed_nosplit"), _dtype(cfg))
+    if not cfg.tie_embeddings:
+        pb.dense("head", (cfg.d_model, cfg.padded_vocab),
+                 ("embed_fsdp", "vocab"), _dtype(cfg))
+    pb.sub("final_norm", init_norm, cfg)
+    return pb.build()
+
+
+def embed_tokens(params, cfg: ModelConfig, sh: ShardingCtx, tokens):
+    out = jnp.take(params["tok"], tokens, axis=0)
+    return sh.act(out, "batch", "seq", None)
+
+
+def embed_frames(params, cfg: ModelConfig, sh: ShardingCtx, frames):
+    out = frames.astype(_dtype(cfg)) @ params["frame_proj"]
+    return sh.act(out, "batch", "seq", None)
+
+
+def lm_head(params, cfg: ModelConfig, sh: ShardingCtx, h):
+    h = apply_norm(params["final_norm"], cfg, h)
+    w = params["tok"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("...d,dv->...v", h, w.astype(h.dtype))
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    pad = vocab_pad_bias(cfg)
+    if pad is not None:
+        logits = logits + pad.astype(logits.dtype)
+    return sh.act(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Gated / plain MLP
+# ---------------------------------------------------------------------------
+
+
+def vocab_pad_bias(cfg: ModelConfig):
+    """Additive bias masking padded vocab columns out of softmax/CE."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return None
+    idx = jnp.arange(cfg.padded_vocab)
+    return jnp.where(idx < cfg.vocab_size, 0.0, -1e30).astype(jnp.float32)
+
+
+def init_mlp(key, cfg: ModelConfig, width: Optional[int] = None,
+             d_ff: Optional[int] = None):
+    d = width or cfg.d_model
+    f = d_ff or cfg.d_ff
+    pb = ParamBuilder(key)
+    dt = _dtype(cfg)
+    if cfg.norm_kind == "layernorm":  # plain gelu MLP (bloom / seamless style)
+        pb.dense("wi", (d, f), ("embed_fsdp", "mlp"), dt)
+        pb.dense("wo", (f, cfg.d_model), ("mlp", "embed_fsdp"), dt)
+    else:  # gated silu
+        pb.dense("wg", (d, f), ("embed_fsdp", "mlp"), dt)
+        pb.dense("wu", (d, f), ("embed_fsdp", "mlp"), dt)
+        pb.dense("wo", (f, cfg.d_model), ("mlp", "embed_fsdp"), dt)
+    return pb.build()
+
+
+def apply_mlp(params, cfg: ModelConfig, sh: ShardingCtx, x):
+    if "wi" in params:
+        h = jax.nn.gelu(x @ params["wi"].astype(x.dtype))
+        h = sh.act(h, "batch", "seq", "mlp_act")
+        return h @ params["wo"].astype(x.dtype)
+    g = jax.nn.silu(x @ params["wg"].astype(x.dtype))
+    u = x @ params["wu"].astype(x.dtype)
+    h = sh.act(g * u, "batch", "seq", "mlp_act")
+    return h @ params["wo"].astype(x.dtype)

@@ -1,0 +1,498 @@
+"""Model API: parameter init, train loss, prefill, decode — for all families.
+
+A model's stack is a list of *scan segments* (``StackPlan``); each segment is
+``lax.scan``'d over stacked per-layer params.  Segment layouts per family:
+
+* dense / moe / vlm (incl. gemma3's 5:1 local:global, driven by a per-layer
+  index scan input): ``[("blocks", decoder, n_layers)]``
+* seamless enc-dec:   ``[("enc", encoder, 24), ("dec", cross_decoder, 24)]``
+* zamba2 hybrid:      ``[("mega", 6 mamba + shared attn, 13), ("tail", mamba, 3)]``
+  (shared attention params live outside the scan and are closed over)
+* rwkv6:              ``[("blocks", rwkv, n_layers)]``
+
+Scan keeps compile time ~O(1) in depth; the dry-run corrects XLA's
+count-the-body-once cost accounting per segment (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models.layers import (
+    NULL_SH,
+    ShardingCtx,
+    embed_frames,
+    embed_tokens,
+    init_embedding,
+    lm_head,
+)
+
+_LOSS_CHUNKS = 4
+
+
+# ---------------------------------------------------------------------------
+# Stack plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SegmentSpec:
+    name: str
+    kind: str  # decoder | enc | dec | mega | mamba | rwkv
+    n: int  # scan length
+    blocks_per_step: int = 1
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n * self.blocks_per_step
+
+
+def stack_plan(cfg: ModelConfig) -> List[SegmentSpec]:
+    if cfg.is_enc_dec:
+        return [SegmentSpec("enc", "enc", cfg.n_enc_layers),
+                SegmentSpec("dec", "dec", cfg.n_dec_layers)]
+    if cfg.family == "hybrid":
+        period = cfg.shared_attn_period
+        n_mega, n_tail = divmod(cfg.n_layers, period)
+        plan = [SegmentSpec("mega", "mega", n_mega, blocks_per_step=period)]
+        if n_tail:
+            plan.append(SegmentSpec("tail", "mamba", n_tail))
+        return plan
+    if cfg.family == "ssm":
+        return [SegmentSpec("blocks", "rwkv", cfg.n_layers)]
+    return [SegmentSpec("blocks", "decoder", cfg.n_layers)]
+
+
+_SEG_INIT = {
+    "decoder": B.init_decoder_block,
+    "enc": B.init_encoder_block,
+    "dec": B.init_cross_decoder_block,
+    "mamba": B.init_mamba_block,
+    "rwkv": B.init_rwkv_block,
+}
+
+
+def _tuple_leaf(x):
+    return isinstance(x, tuple)
+
+
+def _stack_axes(axes, extra=("layers",)):
+    return jax.tree.map(lambda a: tuple(extra) + a, axes, is_leaf=_tuple_leaf)
+
+
+def _shape_axes(init_fn, *args):
+    """(ShapeDtypeStruct params, axes) of an init without allocating.
+
+    The axes tree is static python data built during tracing, captured via a
+    side channel (``jax.eval_shape`` cannot return string leaves).
+    """
+    box = {}
+
+    def f(k):
+        p, a = init_fn(k, *args)
+        box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["axes"]
+
+
+def _vmap_init(init_fn, key, n, cfg):
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k, cfg)[0])(keys)
+    _, axes = _shape_axes(init_fn, cfg)
+    return params, _stack_axes(axes)
+
+
+def init_params(key, cfg: ModelConfig):
+    """Returns (params, axes) — axes mirrors params with logical-name tuples."""
+    keys = jax.random.split(key, 8)
+    params: Dict = {}
+    axes: Dict = {}
+    p, a = init_embedding(keys[0], cfg)
+    params["embed"], axes["embed"] = p, a
+    params["segments"], axes["segments"] = {}, {}
+    for i, seg in enumerate(stack_plan(cfg)):
+        k = keys[2 + i]
+        if seg.kind == "mega":
+            per = seg.blocks_per_step
+
+            def mega_one(kk, cfg=cfg, per=per):
+                return _vmap_init(B.init_mamba_block, kk, per, cfg)
+
+            kk = jax.random.split(k, seg.n)
+            ps = jax.vmap(lambda kx: mega_one(kx)[0])(kk)
+            _, ax = _shape_axes(mega_one)
+            params["segments"][seg.name] = {"mamba": ps}
+            axes["segments"][seg.name] = {"mamba": _stack_axes(ax)}
+        else:
+            ps, ax = _vmap_init(_SEG_INIT[seg.kind], k, seg.n, cfg)
+            params["segments"][seg.name] = ps
+            axes["segments"][seg.name] = ax
+    if cfg.family == "hybrid":
+        p, a = B.init_zamba_shared(keys[1], cfg)
+        params["shared"], axes["shared"] = p, a
+    return params, axes
+
+
+@functools.lru_cache(maxsize=32)
+def init_params_shapes(cfg: ModelConfig):
+    """(ShapeDtypeStruct params tree, axes tree) without allocation."""
+    return _shape_axes(init_params, cfg)
+
+
+def param_axes(cfg: ModelConfig):
+    """Axes tree without materialising params (for sharding rules)."""
+    return init_params_shapes(cfg)[1]
+
+
+# ---------------------------------------------------------------------------
+# Segment scan bodies (shared by forward passes AND the dry-run's exact
+# scan-cost correction, which lowers each body separately — DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+def make_full_body(seg: SegmentSpec, cfg: ModelConfig, sh: ShardingCtx,
+                   positions, emb0=None, enc_h=None, collect_caches=False,
+                   shared_params=None):
+    """Returns body(carry, (params_slice, x)) for a full-sequence scan.
+
+    carry: (h, aux_acc) for "decoder"; h otherwise.
+    """
+    if seg.kind == "decoder":
+        def body(carry, x):
+            hh, aux_acc = carry
+            p, idx = x
+            hh, cache, aux = B.decoder_block_full(p, cfg, sh, hh, positions,
+                                                  idx)
+            aux_acc = {k2: aux_acc[k2] + jnp.float32(aux.get(k2, 0.0))
+                       for k2 in aux_acc}
+            return (hh, aux_acc), (cache if collect_caches else 0)
+        return body
+    if seg.kind == "rwkv":
+        def body(carry, x):
+            hh, state = B.rwkv_block_full(x[0], cfg, sh, carry)
+            return hh, (state if collect_caches else 0)
+        return body
+    if seg.kind == "mamba":
+        def body(carry, x):
+            hh, state = B.mamba_block_full(x[0], cfg, sh, carry)
+            return hh, (state if collect_caches else 0)
+        return body
+    if seg.kind == "mega":
+        def body(carry, x):
+            p = x[0]
+            hh = carry
+            m_states = []
+            for j in range(seg.blocks_per_step):
+                pj = jax.tree.map(lambda q: q[j], p["mamba"])
+                hh, st = B.mamba_block_full(pj, cfg, sh, hh)
+                m_states.append(st)
+            hh, attn_cache = B.zamba_shared_full(shared_params, cfg, sh, hh,
+                                                 emb0, positions)
+            m_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *m_states)
+            ys = ({"mamba": m_stack, "attn": attn_cache}
+                  if collect_caches else 0)
+            return hh, ys
+        return body
+    if seg.kind == "enc":
+        def body(carry, x):
+            return B.encoder_block_full(x[0], cfg, sh, carry, positions), 0
+        return body
+    if seg.kind == "dec":
+        def body(carry, x):
+            hh, cache = B.cross_decoder_block_full(x[0], cfg, sh, carry,
+                                                   positions, enc_h)
+            return hh, (cache if collect_caches else 0)
+        return body
+    raise ValueError(f"unexpected segment kind {seg.kind}")
+
+
+def make_decode_body(seg: SegmentSpec, cfg: ModelConfig, sh: ShardingCtx,
+                     pos, emb0=None, shared_params=None):
+    """Returns body(h, (params_slice, cache_slice, *extras)) -> (h, cache)."""
+    if seg.kind == "decoder":
+        def body(carry, x):
+            p, c, idx = x
+            return B.decoder_block_decode(p, cfg, sh, carry, c, pos, idx)
+        return body
+    if seg.kind == "rwkv":
+        def body(carry, x):
+            p, c = x
+            return B.rwkv_block_decode(p, cfg, sh, carry, c)
+        return body
+    if seg.kind == "mamba":
+        def body(carry, x):
+            p, c = x
+            return B.mamba_block_decode(p, cfg, sh, carry, c)
+        return body
+    if seg.kind == "mega":
+        def body(carry, x):
+            p, c = x
+            hh = carry
+            new_m = []
+            for j in range(seg.blocks_per_step):
+                pj = jax.tree.map(lambda q: q[j], p["mamba"])
+                cj = jax.tree.map(lambda q: q[j], c["mamba"])
+                hh, st = B.mamba_block_decode(pj, cfg, sh, hh, cj)
+                new_m.append(st)
+            hh, attn_c = B.zamba_shared_decode(shared_params, cfg, sh, hh,
+                                               emb0, c["attn"], pos)
+            m_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+            return hh, {"mamba": m_stack, "attn": attn_c}
+        return body
+    if seg.kind == "dec":
+        def body(carry, x):
+            p, c = x
+            return B.cross_decoder_block_decode(p, cfg, sh, carry, c, pos)
+        return body
+    raise ValueError(seg.kind)
+
+
+def _maybe_remat(body, remat):
+    if remat:
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    return body
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward_full(params, cfg: ModelConfig, sh: ShardingCtx, batch,
+                 remat: bool = False, collect_caches: bool = False,
+                 cache_len: Optional[int] = None):
+    """Run the stack over full sequences.
+
+    Returns (h_final, aux, caches) where caches is a dict segment -> stacked
+    cache entries (only if collect_caches).
+    """
+    if cfg.is_enc_dec:
+        return _forward_encdec(params, cfg, sh, batch, remat, collect_caches,
+                               cache_len)
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    h = embed_tokens(params["embed"], cfg, sh, tokens)
+    h = sh.act(h, "batch", "seq_act", None)
+    emb0 = h
+    caches: Dict = {}
+    aux_total = {"moe_aux_loss": jnp.float32(0.0),
+                 "moe_drop_frac": jnp.float32(0.0)}
+
+    for seg in stack_plan(cfg):
+        seg_params = params["segments"][seg.name]
+        body = _maybe_remat(
+            make_full_body(seg, cfg, sh, positions, emb0=emb0,
+                           collect_caches=collect_caches,
+                           shared_params=params.get("shared")), remat)
+        if seg.kind == "decoder":
+            (h, aux_total), ys = jax.lax.scan(
+                body, (h, aux_total), (seg_params, jnp.arange(seg.n)))
+        else:
+            h, ys = jax.lax.scan(body, h, (seg_params, None), length=seg.n)
+        if collect_caches:
+            caches[seg.name] = ys
+    if collect_caches and cache_len is not None:
+        caches = _pad_caches(caches, cfg, cache_len, S)
+    return h, aux_total, caches
+
+
+def _forward_encdec(params, cfg: ModelConfig, sh: ShardingCtx, batch, remat,
+                    collect_caches, cache_len):
+    frames = batch["frames"]
+    tokens = batch["tokens"]
+    plan = {s.name: s for s in stack_plan(cfg)}
+    enc_pos = jnp.arange(frames.shape[1])
+    dec_pos = jnp.arange(tokens.shape[1])
+    enc_h = embed_frames(params["embed"], cfg, sh, frames)
+
+    enc_body = _maybe_remat(
+        make_full_body(plan["enc"], cfg, sh, enc_pos), remat)
+    enc_h, _ = jax.lax.scan(enc_body, enc_h, (params["segments"]["enc"], None))
+
+    h = embed_tokens(params["embed"], cfg, sh, tokens)
+    dec_body = _maybe_remat(
+        make_full_body(plan["dec"], cfg, sh, dec_pos, enc_h=enc_h,
+                       collect_caches=collect_caches), remat)
+    h, ys = jax.lax.scan(dec_body, h, (params["segments"]["dec"], None))
+    caches = {}
+    aux = {"moe_aux_loss": jnp.float32(0.0), "moe_drop_frac": jnp.float32(0.0)}
+    if collect_caches:
+        caches["dec"] = ys
+        if cache_len is not None:
+            caches = _pad_caches(caches, cfg, cache_len, tokens.shape[1])
+    return h, aux, caches
+
+
+_PADDED_CACHE_KEYS = frozenset({"k", "v", "latent", "krope"})
+
+
+def _pad_caches(caches, cfg: ModelConfig, cache_len: int, cur_len: int):
+    """Grow KV-type cache time axes (axis 2: layers, B, T, ...) to cache_len.
+
+    SSM states and cross-attention caches ("ck"/"cv") are length-free and
+    left untouched.  Padding is by leaf *name* so shape coincidences (e.g.
+    wkv head counts equal to cur_len) can never mis-pad.
+    """
+    if cache_len < cur_len:
+        raise ValueError("cache_len must be >= prefill length")
+    if cache_len == cur_len:
+        return caches
+
+    def pad_leaf(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else None
+        if name in _PADDED_CACHE_KEYS and x.ndim >= 3 and x.shape[2] == cur_len:
+            widths = [(0, 0)] * x.ndim
+            widths[2] = (0, cache_len - cur_len)
+            return jnp.pad(x, widths)
+        return x
+
+    return jax.tree_util.tree_map_with_path(pad_leaf, caches)
+
+
+# ---------------------------------------------------------------------------
+# Loss (next-token CE, chunked over sequence to bound logits memory)
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params, cfg: ModelConfig, sh: ShardingCtx, batch,
+               remat: bool = True):
+    """Mean next-token cross-entropy (+ MoE aux loss).  Returns (loss, metrics)."""
+    h, aux, _ = forward_full(params, cfg, sh, batch, remat=remat)
+    tokens = batch["tokens"]
+    Bsz, S = tokens.shape
+    n_chunks = _LOSS_CHUNKS if S % _LOSS_CHUNKS == 0 and S >= _LOSS_CHUNKS else 1
+    csz = S // n_chunks
+    total = jnp.float32(0.0)
+    denom = Bsz * (S - 1)
+    for i in range(n_chunks):
+        hs = h[:, i * csz: (i + 1) * csz]
+        logits = lm_head(params["embed"], cfg, sh, hs).astype(jnp.float32)
+        # labels: next token; positions beyond S-1 are masked out
+        idx = jnp.arange(i * csz, (i + 1) * csz)
+        valid = idx < (S - 1)
+        labels = jnp.take(tokens, jnp.minimum(idx + 1, S - 1), axis=1)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        ce = (logz - gold) * valid[None, :]
+        total = total + jnp.sum(ce)
+    loss = total / denom
+    metrics = {"ce_loss": loss}
+    if cfg.is_moe:
+        loss = loss + 0.01 * aux["moe_aux_loss"] / max(1, cfg.n_layers)
+        metrics["moe_aux_loss"] = aux["moe_aux_loss"]
+        metrics["moe_drop_frac"] = aux["moe_drop_frac"] / max(1, cfg.n_layers)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, sh: ShardingCtx, batch,
+            cache_len: Optional[int] = None):
+    """Process the prompt; returns (last-token logits, caches)."""
+    h, _, caches = forward_full(params, cfg, sh, batch, remat=False,
+                                collect_caches=True, cache_len=cache_len)
+    logits = lm_head(params["embed"], cfg, sh, h[:, -1:])
+    return logits[:, 0], caches
+
+
+def decode_step(params, cfg: ModelConfig, sh: ShardingCtx, caches, tokens,
+                pos):
+    """One decode step.  tokens (B,), pos scalar.  Returns (logits, caches)."""
+    h = embed_tokens(params["embed"], cfg, sh, tokens[:, None])
+    emb0 = h
+    new_caches = {}
+    for seg in stack_plan(cfg):
+        if seg.kind == "enc":
+            continue  # encoder has no decode-time work (cross KV is cached)
+        seg_params = params["segments"][seg.name]
+        cache = caches[seg.name]
+        body = make_decode_body(seg, cfg, sh, pos, emb0=emb0,
+                                shared_params=params.get("shared"))
+        if seg.kind == "decoder":
+            xs = (seg_params, cache, jnp.arange(seg.n))
+        else:
+            xs = (seg_params, cache)
+        h, ys = jax.lax.scan(body, h, xs)
+        new_caches[seg.name] = ys
+    logits = lm_head(params["embed"], cfg, sh, h)
+    return logits[:, 0], new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (for the dry-run decode cells and the serving engine)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_caches(cfg: ModelConfig, batch_size: int, cache_len: int,
+                       enc_len: Optional[int] = None):
+    """Zero-initialised cache pytree for decode at a given cache length."""
+    Bsz, T = batch_size, cache_len
+    cdt = jnp.dtype(cfg.param_dtype)
+    caches: Dict = {}
+    for seg in stack_plan(cfg):
+        n = seg.n
+        if seg.kind == "decoder":
+            if cfg.attn_kind == "mla":
+                caches[seg.name] = {
+                    "latent": jnp.zeros((n, Bsz, T, cfg.kv_lora_rank), cdt),
+                    "krope": jnp.zeros((n, Bsz, T, cfg.rope_head_dim), cdt),
+                }
+            else:
+                kv = (n, Bsz, T, cfg.n_kv_heads, cfg.head_dim)
+                caches[seg.name] = {"k": jnp.zeros(kv, cdt),
+                                    "v": jnp.zeros(kv, cdt)}
+        elif seg.kind == "dec":
+            kv = (n, Bsz, T, cfg.n_kv_heads, cfg.head_dim)
+            ckv = (n, Bsz, enc_len or T, cfg.n_kv_heads, cfg.head_dim)
+            caches[seg.name] = {"k": jnp.zeros(kv, cdt),
+                                "v": jnp.zeros(kv, cdt),
+                                "ck": jnp.zeros(ckv, cdt),
+                                "cv": jnp.zeros(ckv, cdt)}
+        elif seg.kind == "rwkv":
+            h_, hd = cfg.ssm_heads, cfg.ssm_head_dim
+            caches[seg.name] = {
+                "wkv": jnp.zeros((n, Bsz, h_, hd, hd), jnp.float32),
+                "shift_tm": jnp.zeros((n, Bsz, cfg.d_model), jnp.float32),
+                "shift_cm": jnp.zeros((n, Bsz, cfg.d_model), jnp.float32),
+            }
+        elif seg.kind in ("mamba", "mega"):
+            h_, p_, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            m_state = {
+                "ssm": jnp.zeros((n, Bsz, h_, p_, ns), jnp.float32),
+                "conv": jnp.zeros((n, Bsz, cfg.conv_width - 1, conv_dim),
+                                  jnp.float32),
+            }
+            if seg.kind == "mega":
+                per = seg.blocks_per_step
+                m_state = {
+                    "ssm": jnp.zeros((n, per, Bsz, h_, p_, ns), jnp.float32),
+                    "conv": jnp.zeros((n, per, Bsz, cfg.conv_width - 1,
+                                       conv_dim), jnp.float32),
+                }
+                kv = (n, Bsz, T, cfg.n_kv_heads, cfg.head_dim)
+                caches[seg.name] = {
+                    "mamba": m_state,
+                    "attn": {"k": jnp.zeros(kv, cdt),
+                             "v": jnp.zeros(kv, cdt)},
+                }
+            else:
+                caches[seg.name] = m_state
+        elif seg.kind == "enc":
+            continue
+    return caches

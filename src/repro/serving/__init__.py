@@ -1,0 +1,5 @@
+from repro.serving.engine import BlockServer, GeoServingSystem, generate
+from repro.serving.scheduler import AdmissionScheduler, ServedRequest
+
+__all__ = ["AdmissionScheduler", "BlockServer", "GeoServingSystem",
+           "ServedRequest", "generate"]

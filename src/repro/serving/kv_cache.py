@@ -1,0 +1,51 @@
+"""Per-block serving caches for the geo engine (single-session granularity).
+
+The engine executes one block at a time according to the BPRR placement, so
+caches here are per (server, session, layer) — unlike the stacked scan
+caches in repro.models.model used by the monolithic serve steps.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def new_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    cdt = jnp.dtype(cfg.param_dtype)
+    if kind == "decoder":
+        if cfg.attn_kind == "mla":
+            return {
+                "latent": jnp.zeros((batch, max_len, cfg.kv_lora_rank), cdt),
+                "krope": jnp.zeros((batch, max_len, cfg.rope_head_dim), cdt),
+            }
+        kv = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(kv, cdt), "v": jnp.zeros(kv, cdt)}
+    if kind == "rwkv":
+        h, hd = cfg.ssm_heads, cfg.ssm_head_dim
+        return {
+            "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "shift_tm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+            "shift_cm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        }
+    raise NotImplementedError(
+        f"engine cache for block kind {kind!r}; BPRR semantics for the "
+        "remaining families run through the simulator and monolithic steps")
+
+
+def write_prefill_kv(cache: Dict, kv, length: int) -> Dict:
+    """Insert full-sequence K/V (or MLA latent) into a preallocated cache."""
+    out = dict(cache)
+    if "latent" in cache:
+        latent, krope = kv
+        out["latent"] = cache["latent"].at[:, :length].set(
+            latent.astype(cache["latent"].dtype))
+        out["krope"] = cache["krope"].at[:, :length].set(
+            krope.astype(cache["krope"].dtype))
+    else:
+        k, v = kv
+        out["k"] = cache["k"].at[:, :length].set(k.astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[:, :length].set(v.astype(cache["v"].dtype))
+    return out

@@ -1,0 +1,50 @@
+"""Admission scheduler: OnlineBPRR (Alg. 2) in front of the geo engine.
+
+The controller decides WHEN a request may start (WS-RR waiting under the
+design concurrency |R|) on the virtual clock; the engine executes the actual
+block-level computation.  Used by examples/geo_serve.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.online import OnlineBPRR
+from repro.core.perf_model import Problem
+from repro.serving.engine import GeoServingSystem, generate
+
+
+@dataclass
+class ServedRequest:
+    rid: int
+    arrival: float
+    start: float
+    first_token: float
+    per_token: float
+    total: float
+    tokens: np.ndarray
+
+
+class AdmissionScheduler:
+    def __init__(self, system: GeoServingSystem, R: Optional[int] = None,
+                 arrival_rate: float = 0.1):
+        self.system = system
+        self.controller = OnlineBPRR(system.problem, R=R,
+                                     arrival_rate=arrival_rate)
+
+    def serve(self, rid: int, tokens: np.ndarray, arrival: float,
+              n_new: int, client: int = 0) -> ServedRequest:
+        route, start, end, sid_ctl = self.controller.admit(client, arrival)
+        if route is None:
+            raise RuntimeError("admission failed: no feasible route")
+        out, vt = generate(self.system, tokens, n_new, client=client)
+        wait = start - arrival
+        prefill_share = vt / max(1, n_new + 1)
+        self.controller.finish(sid_ctl)
+        return ServedRequest(
+            rid=rid, arrival=arrival, start=start,
+            first_token=wait + prefill_share,
+            per_token=vt / max(1, n_new + 1),
+            total=wait + vt, tokens=out)

@@ -1,0 +1,14 @@
+from repro.sim.cluster import (A100, MIG, clustered_scenario,
+                               scattered_scenario)
+from repro.sim.simulator import (ALGORITHMS, SimConfig, SimResult,
+                                 run_comparison, simulate)
+from repro.sim.topologies import (TOPOLOGY_SPECS, Topology, make_topology,
+                                  place_servers)
+from repro.sim.workload import Request, poisson_requests
+
+__all__ = [
+    "A100", "ALGORITHMS", "MIG", "Request", "SimConfig", "SimResult",
+    "TOPOLOGY_SPECS", "Topology", "clustered_scenario", "make_topology",
+    "place_servers", "poisson_requests", "run_comparison",
+    "scattered_scenario", "simulate",
+]

@@ -1,0 +1,268 @@
+"""Discrete-event simulator for distributed LLM inference (paper §4 byproduct).
+
+Replicates the *decision logic* of both the PETALS baseline and the proposed
+two-time-scale BPRR under the validated performance models:
+
+* session duration from eq (1) (prefill + (l_out−1) per-token),
+* cache-slot accounting per server:  ⌊(M_j − s_m m_j)/s_c⌋ block-slots,
+  sessions occupy k_j slots from start to completion (eq (5)/(20)),
+* proposed: WS-RR waiting via eq (20) + no-overbooking commitment,
+* PETALS:  memory-oblivious routing + binary-exponential-backoff retries
+  (1,2,4,...s, 60 s cap — §3.3.2 footnote / §4.1),
+* ablations: 'optimized_order', 'optimized_number', 'optimized_rr' (§4.3).
+
+Metrics follow §4.1: average per-token time over ALL tokens
+(= total completion / l_out, waiting included), first-token time, and
+per-remaining-token time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.milp import solve_online_routing
+from repro.core.perf_model import (Placement, Problem, Route,
+                                   route_per_token_time, route_prefill_time)
+from repro.core.placement import (auto_R, cg_bp, max_feasible_R,
+                                  optimized_number_bp, optimized_order_bp,
+                                  petals_bp, petals_m)
+from repro.core.routing import (ServerState, edge_waiting_times,
+                                petals_route, shortest_path_route, ws_rr)
+from repro.sim.workload import Request, poisson_requests
+
+ALGORITHMS = ("petals", "proposed", "optimized_order", "optimized_number",
+              "optimized_rr")
+
+
+@dataclass
+class SimConfig:
+    algorithm: str = "proposed"
+    n_requests: int = 100
+    rate: float = 0.1
+    seed: int = 0
+    R: Optional[int] = None  # design concurrency (None = auto rule)
+    backoff_max: float = 60.0
+    client: int = 0
+
+
+@dataclass
+class SimResult:
+    algorithm: str
+    per_token_all: float  # mean total/l_out  (paper's primary metric)
+    first_token: float  # mean wait + prefill
+    per_token_rest: float  # mean decode per-token
+    wait: float
+    drop_rate: float
+    decision_time_s: float  # algorithm running time (Table 6)
+    placement: Placement = None
+    requests: List[Dict] = field(default_factory=list)
+
+
+class _Timeline:
+    """Per-server cache-slot commitments [(start, end, k_blocks)]."""
+
+    def __init__(self, problem: Problem, placement: Placement):
+        self.problem = problem
+        self.placement = placement
+        m = placement.m
+        self.cap = np.floor((problem.mem() - problem.s_m * m)
+                            / problem.s_c).astype(np.int64)
+        self.cap = np.maximum(self.cap, 0)
+        self.commits: List[List[Tuple[float, float, int]]] = [
+            [] for _ in range(problem.n_servers)]
+
+    def usage_max(self, j: int, t0: float, t1: float) -> int:
+        """Max concurrent slot usage on server j over [t0, t1)."""
+        events = []
+        for s, e, k in self.commits[j]:
+            if s < t1 and e > t0:
+                events.append((max(s, t0), k))
+                events.append((min(e, t1), -k))
+        if not events:
+            return 0
+        events.sort()
+        cur = peak = 0
+        for _, dk in events:
+            cur += dk
+            peak = max(peak, cur)
+        return peak
+
+    def fits(self, route: Route, t: float, dur: float) -> bool:
+        for j, k in zip(route.servers, route.blocks):
+            if self.usage_max(j, t, t + dur) + k > self.cap[j]:
+                return False
+        return True
+
+    def earliest_start(self, route: Route, t: float, dur: float) -> float:
+        cands = {t}
+        for j in route.servers:
+            for s, e, k in self.commits[j]:
+                if e > t:
+                    cands.add(e)
+                if s > t:
+                    cands.add(s)
+        for u in sorted(cands):
+            if self.fits(route, u, dur):
+                return u
+        return np.inf
+
+    def commit(self, route: Route, start: float, dur: float):
+        for j, k in zip(route.servers, route.blocks):
+            self.commits[j].append((start, start + dur, k))
+
+    def states_at(self, t: float) -> Dict[int, ServerState]:
+        """eq (20) view: active-or-committed sessions as (remaining, k)."""
+        states: Dict[int, ServerState] = {}
+        for j, lst in enumerate(self.commits):
+            rem, blk = [], []
+            for s, e, k in lst:
+                if e > t:
+                    rem.append(e - t)
+                    blk.append(k)
+            if rem:
+                states[j] = ServerState(rem, blk)
+        return states
+
+
+def _backoff_attempts(t: float, horizon: float, cap: float):
+    yield t
+    delay = 1.0
+    u = t
+    while u < t + horizon:
+        u += delay
+        yield u
+        delay = min(delay * 2, cap)
+
+
+def _make_placement(problem: Problem, cfg: SimConfig, join_order
+                    ) -> Tuple[Placement, int]:
+    import time as _time
+
+    t0 = _time.perf_counter()
+    if cfg.R is not None:
+        R = cfg.R
+    else:
+        # auto rule (after Cor. 3.6): arrivals during an expected session
+        rough = 1.5 * problem.workload.l_out  # ~1.5 s/token prior estimate
+        R = auto_R(problem, cfg.rate, rough)
+    if cfg.algorithm == "petals":
+        placement = petals_bp(problem, join_order=join_order)
+    elif cfg.algorithm == "proposed":
+        placement, _ = cg_bp(problem, R)
+    elif cfg.algorithm == "optimized_order":
+        placement = optimized_order_bp(problem, R)
+    elif cfg.algorithm == "optimized_number":
+        placement = optimized_number_bp(problem, R)
+    elif cfg.algorithm == "optimized_rr":
+        placement = petals_bp(problem, join_order=join_order)
+    else:
+        raise ValueError(cfg.algorithm)
+    dt = _time.perf_counter() - t0
+    return placement, R, dt
+
+
+def simulate(problem: Problem, cfg: SimConfig,
+             requests: Optional[List[Request]] = None) -> SimResult:
+    import time as _time
+
+    rng = np.random.default_rng(cfg.seed + 1)
+    join_order = rng.permutation(problem.n_servers)  # random join (§4.1)
+    placement, R, place_time = _make_placement(problem, cfg, join_order)
+    if requests is None:
+        requests = poisson_requests(cfg.n_requests, cfg.rate,
+                                    client=cfg.client, seed=cfg.seed)
+    tl = _Timeline(problem, placement)
+    rows = []
+    decision_time = place_time
+    lw = problem.workload
+    for req in requests:
+        t = req.arrival
+        t0 = _time.perf_counter()
+        wait_est = 0.0
+        if cfg.algorithm in ("proposed",):
+            route, _, wait_est = ws_rr(problem, placement, req.client,
+                                       tl.states_at(t))
+        elif cfg.algorithm == "optimized_rr":
+            waiting = edge_waiting_times(problem, placement, tl.states_at(t))
+            route, _ = solve_online_routing(problem, placement, req.client,
+                                            waiting)
+            if route is None:
+                route = petals_route(problem, placement, req.client)
+        elif cfg.algorithm in ("optimized_order", "optimized_number"):
+            route = petals_route(problem, placement, req.client)
+        else:  # petals
+            route = petals_route(problem, placement, req.client)
+        decision_time += _time.perf_counter() - t0
+        if route is None:
+            rows.append(dict(drop=True))
+            continue
+
+        prefill = route_prefill_time(problem, route, req.client)
+        per_tok = route_per_token_time(problem, route, req.client)
+        dur = prefill + (lw.l_out - 1) * per_tok
+        earliest = tl.earliest_start(route, t, dur)
+        if not np.isfinite(earliest):
+            rows.append(dict(drop=True))
+            continue
+        if cfg.algorithm == "proposed":
+            start = earliest
+        else:
+            # PETALS-style exponential-backoff retry until memory frees
+            start = np.inf
+            for u in _backoff_attempts(t, horizon=earliest - t + 130.0,
+                                       cap=cfg.backoff_max):
+                if u >= earliest and tl.fits(route, u, dur):
+                    start = u
+                    break
+            if not np.isfinite(start):
+                start = earliest
+        tl.commit(route, start, dur)
+        wait = start - t
+        rows.append(dict(
+            drop=False, wait=wait, first_token=wait + prefill,
+            per_token_rest=per_tok, total=wait + dur,
+            per_token_all=(wait + dur) / lw.l_out,
+            hops=len(route.servers)))
+
+    ok = [r for r in rows if not r.get("drop")]
+    drop_rate = 1.0 - len(ok) / max(1, len(rows))
+    mean = lambda k: float(np.mean([r[k] for r in ok])) if ok else np.inf
+    return SimResult(
+        algorithm=cfg.algorithm,
+        per_token_all=mean("per_token_all"),
+        first_token=mean("first_token"),
+        per_token_rest=mean("per_token_rest"),
+        wait=mean("wait"),
+        drop_rate=drop_rate,
+        decision_time_s=decision_time / max(1, len(requests)),
+        placement=placement,
+        requests=rows,
+    )
+
+
+def run_comparison(problem: Problem, algorithms=("petals", "proposed"),
+                   n_requests: int = 100, rate: float = 0.1,
+                   seeds=(0, 1, 2, 3, 4), R: Optional[int] = None
+                   ) -> Dict[str, Dict[str, float]]:
+    """Monte-Carlo comparison (paper: 5 experiment / 20 sim runs)."""
+    out = {}
+    for alg in algorithms:
+        metrics = []
+        for seed in seeds:
+            res = simulate(problem, SimConfig(
+                algorithm=alg, n_requests=n_requests, rate=rate, seed=seed,
+                R=R))
+            metrics.append(res)
+        out[alg] = {
+            "per_token_all": float(np.mean([m.per_token_all for m in metrics])),
+            "first_token": float(np.mean([m.first_token for m in metrics])),
+            "per_token_rest": float(np.mean([m.per_token_rest
+                                             for m in metrics])),
+            "wait": float(np.mean([m.wait for m in metrics])),
+            "decision_time_s": float(np.mean([m.decision_time_s
+                                              for m in metrics])),
+            "drop_rate": float(np.mean([m.drop_rate for m in metrics])),
+        }
+    return out

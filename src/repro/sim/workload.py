@@ -1,0 +1,24 @@
+"""Poisson request workload (paper §4.1: N_R requests at rate λ from a
+proxy client)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Request:
+    rid: int
+    client: int
+    arrival: float
+
+
+def poisson_requests(n_requests: int, rate: float, client: int = 0,
+                     seed: int = 0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_requests)
+    times = np.cumsum(gaps)
+    return [Request(rid=i, client=client, arrival=float(t))
+            for i, t in enumerate(times)]

@@ -1,0 +1,130 @@
+"""Optimizers (pure-jax pytree implementations): AdamW and Adafactor.
+
+Adafactor keeps factored second moments (row/col means) for matrices — the
+memory knob for the largest assigned archs (DESIGN.md §6).  Both optimizers
+keep state in f32 regardless of param dtype and share the same interface:
+
+    opt = make_optimizer(name, lr=..., ...)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state, step)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    name: str
+
+
+def _map_flat(fn, ref_tree, *trees):
+    """Map ``fn`` over leaves of ``ref_tree`` with parallel trees whose
+    per-leaf entries may themselves be pytrees (e.g. adafactor stats)."""
+    flat, treedef = jax.tree_util.tree_flatten(ref_tree)
+    others = [treedef.flatten_up_to(t) for t in trees]
+    results = [fn(*args) for args in zip(flat, *others)]
+    n_out = len(results[0])
+    return tuple(treedef.unflatten([r[i] for r in results])
+                 for i in range(n_out))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads, jnp.float32(0.0)
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def make_adamw(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.95,
+               eps: float = 1e-8, weight_decay: float = 0.0,
+               grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(params, grads, state, step):
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1.0 - b1) * g
+            v = b2 * v + (1.0 - b2) * jnp.square(g)
+            step_ = lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                          + weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - step_).astype(p.dtype), m, v
+
+        params, m, v = _map_flat(upd, params, grads, state["m"], state["v"])
+        return params, {"m": m, "v": v}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+def make_adafactor(lr: float = 1e-4, decay: float = 0.8, eps: float = 1e-30,
+                   clip_threshold: float = 1.0,
+                   weight_decay: float = 0.0) -> Optimizer:
+    """Factored Adafactor (no momentum) — O(rows+cols) second-moment state."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"stats": jax.tree.map(one, params)}
+
+    def update(params, grads, state, step):
+        t = step.astype(jnp.float32) + 1.0
+        rho = 1.0 - t ** (-decay)
+
+        def one(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = rho * s["vr"] + (1 - rho) * jnp.mean(g2, axis=-1)
+                vc = rho * s["vc"] + (1 - rho) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                prec = (vr / denom)[..., None] * vc[..., None, :]
+                upd = g * jax.lax.rsqrt(jnp.maximum(prec, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = rho * s["v"] + (1 - rho) * g2
+                upd = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + eps)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            newp = p.astype(jnp.float32) - lr * (
+                upd + weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), new_s
+
+        params, stats = _map_flat(one, params, grads, state["stats"])
+        return params, {"stats": stats}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return make_adamw(**kw)
+    if name == "adafactor":
+        return make_adafactor(**kw)
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,158 @@
+"""Training step: loss + grad (with remat), grad-accum microbatching,
+optimizer update, and the int8-compressed inter-pod gradient sync primitive.
+
+The returned ``train_step(state, batch)`` is pure and jit-able; sharding comes
+entirely from the ShardingCtx constraints inside the model plus the
+in/out_shardings attached by the caller (launch/dryrun.py, launch/train.py).
+
+Distributed-optimization tricks implemented here (DESIGN.md §7):
+* grad-accum microbatching via ``lax.scan`` (activation-memory knob),
+* optional int8-quantized all-reduce for the inter-pod (DCI, slow-link)
+  gradient reduction — the TPU analogue of gradient compression over the
+  paper's WAN links (``int8_allreduce``; numerically tested),
+* donated state buffers; XLA latency-hiding scheduler flags in launch/.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ShardingCtx
+from repro.models.model import train_loss
+from repro.training.optimizer import Optimizer, make_optimizer
+
+
+@dataclass(frozen=True)
+class TrainHParams:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    grad_accum: int = 1  # microbatches per step
+    remat: bool = True
+
+
+def init_train_state(key, cfg: ModelConfig, opt: Optimizer, params=None):
+    from repro.models.model import init_params
+
+    if params is None:
+        params, _ = init_params(key, cfg)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, sh: ShardingCtx, opt: Optimizer,
+                    hp: TrainHParams = TrainHParams()):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        return train_loss(params, cfg, sh, mb, remat=hp.remat)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def accumulated(params, batch):
+        n = hp.grad_accum
+
+        def split(x):
+            return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            g_acc = carry
+            (loss, metrics), g = grad_fn(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return g_acc, metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        g_acc, metrics = jax.lax.scan(body, zeros, micro)
+        grads = jax.tree.map(lambda g: g / n, g_acc)
+        metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        return grads, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if hp.grad_accum > 1:
+            grads, metrics = accumulated(params, batch)
+        else:
+            grads, metrics = single(params, batch)
+        new_params, new_opt = opt.update(params, grads, state["opt"],
+                                         state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_optimizer_for(cfg: ModelConfig, hp: TrainHParams) -> Optimizer:
+    return make_optimizer(cfg.optimizer, lr=hp.learning_rate,
+                          weight_decay=hp.weight_decay,
+                          **({"grad_clip": hp.grad_clip}
+                             if cfg.optimizer == "adamw" else {}))
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression (inter-pod slow-link all-reduce)
+# ---------------------------------------------------------------------------
+
+
+def int8_quantize(x, axis=-1):
+    """Symmetric per-slice int8 quantisation.  Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def int8_allreduce(x, axis_name: str):
+    """All-reduce with int8-compressed payloads (use inside shard_map).
+
+    Reduce-scatter in int8 (via all_to_all), dequantised local sum, then an
+    int8 all-gather — ~4x less wire traffic than a bf16 ring all-reduce on the
+    slow inter-pod links.  Mean (not sum) semantics are NOT applied; caller
+    divides if needed.  x: any float array with leading dim divisible by the
+    axis size.
+    """
+    n = jax.lax.psum(1, axis_name)
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunks = flat.reshape(n, -1)
+    q, scale = int8_quantize(chunks, axis=-1)
+    # reduce-scatter: each member receives its chunk from everyone
+    q_t = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                             tiled=False)
+    s_t = jax.lax.all_to_all(scale, axis_name, split_axis=0, concat_axis=0,
+                             tiled=False)
+    local_sum = jnp.sum(int8_dequantize(q_t, s_t), axis=0)  # (chunk,)
+    # second compression stage for the gather
+    q2, s2 = int8_quantize(local_sum[None], axis=-1)
+    q_all = jax.lax.all_gather(q2[0], axis_name)  # (n, chunk)
+    s_all = jax.lax.all_gather(s2[0], axis_name)  # (n, 1)
+    out = int8_dequantize(q_all, s_all)
+    out = out.reshape(-1)[: int(np_prod(orig_shape))]
+    return out.reshape(orig_shape).astype(x.dtype)
+
+
+def np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= s
+    return out

@@ -1,0 +1,83 @@
+"""Exact assigned-architecture configs (assignment table values)."""
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+
+EXACT = {
+    "deepseek_v2_236b": dict(n_layers=60, d_model=5120, n_heads=128,
+                             n_kv_heads=128, d_ff=1536, vocab_size=102400,
+                             n_experts=160, moe_top_k=6, n_shared_experts=2,
+                             kv_lora_rank=512),
+    "llama4_scout_17b_a16e": dict(n_layers=48, d_model=5120, n_heads=40,
+                                  n_kv_heads=8, d_ff=8192,
+                                  vocab_size=202048, n_experts=16,
+                                  moe_top_k=1),
+    "qwen2_5_32b": dict(n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8,
+                        d_ff=27648, vocab_size=152064, qkv_bias=True),
+    "gemma3_4b": dict(n_layers=34, d_model=2560, n_heads=8, n_kv_heads=4,
+                      d_ff=10240, vocab_size=262144, local_global_period=6),
+    "llama3_2_1b": dict(n_layers=16, d_model=2048, n_heads=32, n_kv_heads=8,
+                        d_ff=8192, vocab_size=128256),
+    "olmo_1b": dict(n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+                    d_ff=8192, vocab_size=50304, norm_kind="nonparametric"),
+    "chameleon_34b": dict(n_layers=48, d_model=8192, n_heads=64,
+                          n_kv_heads=8, d_ff=22016, vocab_size=65536),
+    "seamless_m4t_large_v2": dict(n_enc_layers=24, n_dec_layers=24,
+                                  d_model=1024, n_heads=16, n_kv_heads=16,
+                                  d_ff=8192, vocab_size=256206),
+    "zamba2_7b": dict(n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+                      d_ff=14336, vocab_size=32000, ssm_state=64),
+    "rwkv6_7b": dict(n_layers=32, d_model=4096, d_ff=14336,
+                     vocab_size=65536, attn_kind="none"),
+}
+
+PARAM_RANGES = {  # published sizes, billions (sanity band)
+    "deepseek_v2_236b": (220, 250), "llama4_scout_17b_a16e": (100, 115),
+    "qwen2_5_32b": (30, 35), "gemma3_4b": (3.5, 4.5),
+    "llama3_2_1b": (1.0, 1.5), "olmo_1b": (1.0, 1.4),
+    "chameleon_34b": (32, 36), "seamless_m4t_large_v2": (1.2, 2.6),
+    "zamba2_7b": (6.3, 7.7), "rwkv6_7b": (6.3, 7.9),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_values(arch):
+    cfg = get_config(arch)
+    for field, want in EXACT[arch].items():
+        assert getattr(cfg, field) == want, (arch, field)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_band(arch):
+    cfg = get_config(arch)
+    lo, hi = PARAM_RANGES[arch]
+    n = cfg.param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_same_family(arch):
+    cfg, red = get_config(arch), get_reduced_config(arch)
+    assert red.family == cfg.family
+    assert red.attn_kind == cfg.attn_kind
+    assert red.is_moe == cfg.is_moe
+    assert red.is_enc_dec == cfg.is_enc_dec
+    assert red.param_count() < 5e6
+
+
+def test_moe_active_params():
+    cfg = get_config("deepseek_v2_236b")
+    assert 18e9 < cfg.active_param_count() < 25e9  # ~21B active
+
+
+def test_shapes_assignment():
+    # long_500k only for sub-quadratic archs; others document the skip
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        names = {s.name for s in cfg.shapes()}
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= names
+        if arch in ("gemma3_4b", "zamba2_7b", "rwkv6_7b"):
+            assert "long_500k" in names
+        else:
+            assert "long_500k" not in names
+            assert "long_500k" in cfg.skip_reasons()

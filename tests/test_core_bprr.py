@@ -1,0 +1,153 @@
+"""Core BPRR: Lemma 3.1 feasibility, performance models, CG-BP structure,
+bounds, MILP optimality — including hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LLMSpec, Placement, Problem, ServerSpec, Workload,
+                        capacity, cg_bp, cg_feasible_R, cg_upper_bound,
+                        conservative_m, lower_bound, max_feasible_R,
+                        petals_bp, petals_route, route_blocks,
+                        route_feasible, route_per_token_time,
+                        shortest_path_route)
+from repro.core.milp import brute_force_bprr, solve_bprr_milp
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+def _problem(rng, L=5, n=4, C=2, mem_scale=6.0):
+    llm = LLMSpec("t", L, block_bytes=4.0, cache_bytes_per_token=0.25)
+    servers = [ServerSpec(j, mem_bytes=float(4.0 * (1 + rng.integers(1, int(mem_scale)))),
+                          tau=float(0.05 + 0.3 * rng.random()))
+               for j in range(n)]
+    rtt = 0.02 + 0.3 * rng.random((C, n))
+    return Problem(llm, servers, C, rtt, 4 * rtt, workload=Workload(2, 2))
+
+
+@SETTINGS
+@given(st.integers(0, 10_000))
+def test_cg_bp_invariants(seed):
+    rng = np.random.default_rng(seed)
+    prob = _problem(rng)
+    R = int(rng.integers(1, 6))
+    pl, info = cg_bp(prob, R)
+    m = conservative_m(prob, R)
+    assert (pl.m == m).all()
+    # conservative m: worst-case memory always feasible (line 1 rationale)
+    worst = prob.s_m * pl.m + prob.s_c * R * pl.m
+    assert (worst <= prob.mem() + 1e-9).all()
+    # capacity (15) >= R whenever the server hosts blocks
+    cap = capacity(prob, pl.m)
+    assert (cap[pl.m > 0] >= R).all()
+    # block ranges valid
+    assert (pl.a >= 0).all() and (pl.a + pl.m <= prob.L).all()
+    if info.feasible:
+        # remark after Lemma 3.3: fastest K servers tile the blocks
+        order = info.order
+        e = 0
+        for rank, j in enumerate(order[: info.K]):
+            if pl.m[j] <= 0:
+                continue
+            if rank < info.K - 1:
+                assert pl.a[j] == e
+                e += pl.m[j]
+            else:
+                assert pl.a[j] == prob.L - pl.m[j]
+
+
+@SETTINGS
+@given(st.integers(0, 10_000))
+def test_feasible_routes_and_bound(seed):
+    rng = np.random.default_rng(seed)
+    prob = _problem(rng)
+    R = int(rng.integers(1, 5))
+    pl, info = cg_bp(prob, R)
+    if not info.feasible:
+        assert not cg_feasible_R(prob, R) or pl.feasible_cover(prob.L)
+        return
+    ub = cg_upper_bound(prob, R)
+    lb = lower_bound(prob)
+    assert lb <= ub + 1e-9
+    for c in range(prob.n_clients):
+        route, cost = shortest_path_route(prob, pl, c)
+        assert route is not None
+        # Lemma 3.1 feasibility of the produced chain
+        assert route_feasible(pl, prob.L, route.servers)
+        assert sum(route.blocks) == prob.L
+        t = route_per_token_time(prob, route, c)
+        assert abs(t - cost) < 1e-9
+        # Theorem 3.5: achieved per-token time within the bound
+        assert t <= ub + 1e-9
+
+
+@SETTINGS
+@given(st.integers(0, 10_000))
+def test_lemma31_random_chains(seed):
+    rng = np.random.default_rng(seed)
+    L, n = 6, 5
+    a = rng.integers(0, L, n)
+    m = np.minimum(rng.integers(1, L + 1, n), L - a)
+    pl = Placement(a=a, m=m)
+    perm = rng.permutation(n)[: rng.integers(1, n + 1)]
+    chain = tuple(int(x) for x in perm)
+    ok = route_feasible(pl, L, chain)
+    # manual induction check (paper's proof)
+    e = 0
+    manual = True
+    for j in chain:
+        if not (m[j] > 0 and a[j] <= e <= a[j] + m[j] - 1):
+            manual = False
+            break
+        e = a[j] + m[j]
+    manual = manual and e == L
+    assert ok == manual
+
+
+def test_milp_matches_bruteforce():
+    rng = np.random.default_rng(3)
+    llm = LLMSpec("t", 3, block_bytes=4.0, cache_bytes_per_token=1.0)
+    servers = [ServerSpec(j, mem_bytes=float(14 + 4 * rng.random()),
+                          tau=float(0.1 + 0.2 * rng.random()))
+               for j in range(3)]
+    rtt = 0.05 + 0.2 * rng.random((2, 3))
+    prob = Problem(llm, servers, 2, rtt, rtt * 5, workload=Workload(2, 1))
+    reqs = [0, 1]
+    res = solve_bprr_milp(prob, reqs)
+    bf, _ = brute_force_bprr(prob, reqs)
+    assert res.status == 0
+    assert abs(res.objective - bf) < 1e-6
+    for r, route in enumerate(res.routes):
+        assert route_feasible(res.placement, prob.L, route.servers)
+
+
+def test_fig5_suboptimality_example():
+    """The paper's Fig. 5: CG-BPRR = L(t+tau) vs OPT = t + tau*L."""
+    L, t, tau = 3, 1.0, 0.1
+    s_c = 1.0
+    llm = LLMSpec("toy", L, L * s_c, 0.0, cache_bytes_const=s_c)
+    servers = [ServerSpec(j, (L + 1) * L * s_c, tau) for j in range(L * L)]
+    prob = Problem(llm, servers, 1, np.full((1, L * L), t),
+                   np.full((1, L * L), t))
+    pl, info = cg_bp(prob, L * L)
+    assert (pl.m == 1).all()
+    route, _ = shortest_path_route(prob, pl, 0)
+    assert abs(route_per_token_time(prob, route, 0) - L * (t + tau)) < 1e-9
+
+
+def test_max_feasible_R_monotone():
+    rng = np.random.default_rng(0)
+    prob = _problem(rng, mem_scale=8)
+    Rmax = max_feasible_R(prob)
+    if Rmax >= 1:
+        assert cg_feasible_R(prob, Rmax)
+    assert not cg_feasible_R(prob, Rmax + 1)
+
+
+def test_petals_route_feasible():
+    rng = np.random.default_rng(1)
+    prob = _problem(rng, n=5)
+    pl = petals_bp(prob)
+    if pl.feasible_cover(prob.L):
+        route = petals_route(prob, pl, 0)
+        assert route is not None
+        assert route_feasible(pl, prob.L, route.servers)

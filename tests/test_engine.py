@@ -1,0 +1,103 @@
+"""Geo serving engine: block-partition equivalence, exact failover recovery,
+elastic scale-out, and straggler avoidance."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core import LLMSpec, Problem, ServerSpec, Workload
+from repro.models import NULL_SH, decode_step, init_params, prefill
+from repro.serving import GeoServingSystem, generate
+
+
+def _setup(arch="llama3_2_1b", n_servers=4, R=2):
+    cfg = get_reduced_config(arch)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    llm = LLMSpec("toy", cfg.n_layers, block_bytes=100.0,
+                  cache_bytes_per_token=1.0)
+    servers = [ServerSpec(j, mem_bytes=500.0, tau=0.01 * (j + 1))
+               for j in range(n_servers)]
+    rtt = np.full((1, n_servers), 0.02)
+    prob = Problem(llm, servers, 1, rtt, rtt * 3, workload=Workload(4, 8))
+    system = GeoServingSystem(cfg, params, prob, algorithm="proposed", R=R)
+    return cfg, params, prob, system
+
+
+def _reference_tokens(cfg, params, toks, n_new):
+    logits, caches = prefill(params, cfg, NULL_SH,
+                             {"tokens": jnp.asarray(toks)[None]},
+                             cache_len=len(toks) + n_new + 4)
+    seq = [int(jnp.argmax(logits[0]))]
+    pos = len(toks)
+    for _ in range(n_new - 1):
+        lg, caches = decode_step(params, cfg, NULL_SH, caches,
+                                 jnp.asarray([seq[-1]]), pos)
+        seq.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    return seq
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "rwkv6_7b"])
+def test_engine_matches_monolithic(arch):
+    cfg, params, prob, system = _setup(arch)
+    rng = np.random.RandomState(0)
+    toks = rng.randint(2, cfg.vocab_size, 7)
+    out, vt = generate(system, toks, 5)
+    ref = _reference_tokens(cfg, params, toks, 5)
+    assert list(out[len(toks): len(toks) + 5]) == ref
+    assert vt > 0
+
+
+def test_failover_recovery_exact():
+    cfg, params, prob, system = _setup()
+    rng = np.random.RandomState(0)
+    toks = rng.randint(2, cfg.vocab_size, 7)
+    ref = _reference_tokens(cfg, params, toks, 5)
+    sid, logits = system.submit(toks)
+    seq = [int(jnp.argmax(logits[0]))]
+    lg = system.decode(sid, seq[-1])
+    seq.append(int(jnp.argmax(lg[0])))
+    victim = system.sessions[sid].route.servers[0]
+    system.kill_server(victim)
+    for _ in range(3):
+        lg = system.decode(sid, seq[-1])
+        seq.append(int(jnp.argmax(lg[0])))
+    assert seq == ref, "post-failover generation must be identical"
+    assert victim not in system.sessions[sid].route.servers
+
+
+def test_new_sessions_avoid_dead_servers():
+    cfg, params, prob, system = _setup()
+    rng = np.random.RandomState(1)
+    toks = rng.randint(2, cfg.vocab_size, 5)
+    system.kill_server(0)
+    sid, _ = system.submit(toks)
+    assert 0 not in system.sessions[sid].route.servers
+
+
+def test_elastic_join():
+    cfg, params, prob, system = _setup(n_servers=2)
+    spec = ServerSpec(99, mem_bytes=500.0, tau=0.001)  # much faster server
+    system.join_server(spec, rtt_token_col=[0.02], rtt_prefill_col=[0.06])
+    assert system.problem.n_servers == 3
+    rng = np.random.RandomState(2)
+    toks = rng.randint(2, cfg.vocab_size, 5)
+    sid, _ = system.submit(toks)
+    # the fast new server should host blocks and attract routing
+    assert 2 in system.sessions[sid].route.servers
+
+
+def test_straggler_avoidance():
+    cfg, params, prob, system = _setup(n_servers=4)
+    rng = np.random.RandomState(3)
+    toks = rng.randint(2, cfg.vocab_size, 5)
+    sid0, _ = system.submit(toks)
+    fast_route = system.sessions[sid0].route.servers
+    system.finish(sid0)
+    # make the previously chosen first server 100x slower
+    system.set_slowdown(int(fast_route[0]), 100.0)
+    sid1, _ = system.submit(toks)
+    assert system.sessions[sid1].route.servers[0] != fast_route[0]

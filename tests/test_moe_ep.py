@@ -1,0 +1,61 @@
+"""Pure-EP shard_map MoE dispatch == global sort-dispatch (no-drop regime).
+
+The EP path (hillclimb A, EXPERIMENTS.md §Perf) pads experts and dispatches
+via all_to_all inside shard_map; with generous capacity both paths compute
+the same routed-expert mixture.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models.layers import NULL_SH, ShardingCtx
+from repro.models import moe as moe_mod
+
+
+def _pad_params(params, E, E_alloc):
+    out = dict(params)
+    for k in ("wg", "wu", "wo"):
+        w = params[k]
+        pad = np.zeros((E_alloc - E,) + w.shape[1:], w.dtype)
+        out[k] = jnp.concatenate([w, jnp.asarray(pad)], axis=0)
+    return out
+
+
+def test_ep_matches_global():
+    cfg = get_reduced_config("deepseek_v2_236b").replace(capacity_factor=8.0)
+    E = cfg.n_experts
+    params, _ = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    assert params["wg"].shape[0] == E  # reduced config stays unpadded
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(2, 16, cfg.d_model), jnp.float32) * 0.3
+
+    ref, aux_ref = moe_mod.apply_moe(params, cfg, NULL_SH, x)
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sh = ShardingCtx(mesh, {"batch": "data", "seq_act": None})
+    padded = _pad_params(params, E, 2 * E)
+    got, aux = moe_mod._apply_moe_ep(padded, cfg, sh, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+    assert float(aux["moe_drop_frac"]) < 1e-6
+    np.testing.assert_allclose(float(aux["moe_aux_loss"]),
+                               float(aux_ref["moe_aux_loss"]), rtol=1e-4)
+
+
+def test_expert_alloc_padding_rule():
+    assert moe_mod.expert_alloc(160) == 256
+    assert moe_mod.expert_alloc(64) == 256
+    assert moe_mod.expert_alloc(16) == 16  # small-E archs unpadded
+    assert moe_mod.expert_alloc(8) == 8
+    assert moe_mod.expert_alloc(300) == 512
+
+
+def test_ep_eligibility_guards():
+    cfg = get_reduced_config("deepseek_v2_236b")
+    params, _ = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((2, 16, cfg.d_model), jnp.float32)
+    # no mesh -> always global path
+    assert not moe_mod._ep_eligible(params, cfg, NULL_SH, x)
