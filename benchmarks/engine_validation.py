@@ -1,7 +1,20 @@
-"""Perf-model validation (paper Figs 2/3/11/12 analogue): the engine's
-block-level execution confirms the linear dependence of per-token time on
-#processed blocks, independence from concurrent sessions within memory, and
-the memory model (2)/(5) — cross-validating the simulator."""
+"""Perf-model + simulator cross-validation against the REAL engine.
+
+Two parts (paper Figs 2/3/11/12 analogue + §4 concurrency dynamics):
+
+1. block-linearity: the engine's block-level execution confirms the linear
+   dependence of per-token time on #processed blocks (eq. (1)).
+2. concurrency cross-validation: the SAME Poisson trace is played through
+   the discrete-event simulator and through the continuous-batching engine
+   (real JAX forward passes, WS-RR admission, shared cache pools) at design
+   concurrency R ∈ {1, 4, 8}; we report the relative error of mean
+   per-token and first-token times between the two paths.  Agreement within
+   a few percent validates that the simulator's waiting/memory dynamics
+   (eq. (5)/(20)) match what the engine actually does under interleaved
+   sessions.
+
+Run:  PYTHONPATH=src:. python benchmarks/engine_validation.py
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -9,13 +22,80 @@ import numpy as np
 from benchmarks.common import emit, timed
 
 
+def _concurrency_problem():
+    from repro.core import LLMSpec, Problem, ServerSpec, Workload
+
+    llm = LLMSpec("xval", 8, block_bytes=50.0, cache_bytes_per_token=0.5)
+    servers = [
+        ServerSpec(0, 500.0, 0.004, tau_prefill_base=0.002,
+                   tau_prefill_per_token=0.0005),
+        ServerSpec(1, 500.0, 0.004, tau_prefill_base=0.002,
+                   tau_prefill_per_token=0.0005),
+        ServerSpec(2, 260.0, 0.020, tau_prefill_base=0.004,
+                   tau_prefill_per_token=0.001),
+        ServerSpec(3, 260.0, 0.020, tau_prefill_base=0.004,
+                   tau_prefill_per_token=0.001),
+        ServerSpec(4, 260.0, 0.020, tau_prefill_base=0.004,
+                   tau_prefill_per_token=0.001),
+    ]
+    rtt = np.array([[0.01, 0.01, 0.03, 0.03, 0.03]])
+    return Problem(llm, servers, 1, rtt, 3 * rtt, workload=Workload(8, 12))
+
+
+def cross_validate(R: int, n_requests: int = 10, rate: float = 1.0,
+                   seed: int = 0):
+    """Returns (engine metrics, sim metrics, relative errors) for one R."""
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.models import init_params
+    from repro.serving import ContinuousBatchingScheduler, GeoServingSystem
+    from repro.sim import SimConfig, simulate
+    from repro.sim.workload import poisson_requests, prompts_for
+
+    problem = _concurrency_problem()
+    lw = problem.workload
+    requests = poisson_requests(n_requests, rate, seed=seed)
+
+    # --- simulator path ---------------------------------------------------
+    sim = simulate(problem, SimConfig("proposed", n_requests=n_requests,
+                                      rate=rate, seed=seed, R=R),
+                   requests=requests)
+
+    # --- engine path (same trace, same R) ---------------------------------
+    cfg = get_reduced_config("llama3_2_1b").replace(n_layers=problem.L)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    system = GeoServingSystem(cfg, params, problem, algorithm="proposed",
+                              R=R, max_new_tokens=lw.l_out,
+                              max_sessions=max(8, R))
+    sched = ContinuousBatchingScheduler(system, R=R, arrival_rate=rate)
+    prompts = prompts_for(requests, lw.l_in, cfg.vocab_size, seed=seed)
+    for req, toks in zip(requests, prompts):
+        sched.submit(req.rid, toks, req.arrival, n_new=lw.l_out,
+                     client=req.client)
+    served = [r for r in sched.run() if not r.dropped]
+
+    eng = {
+        "per_token_all": float(np.mean([r.per_token for r in served])),
+        "first_token": float(np.mean([r.first_token for r in served])),
+        "wait": float(np.mean([r.wait for r in served])),
+        "max_concurrency": sched.max_concurrency,
+    }
+    simm = {
+        "per_token_all": sim.per_token_all,
+        "first_token": sim.first_token,
+        "wait": sim.wait,
+    }
+    err = {k: abs(eng[k] - simm[k]) / max(simm[k], 1e-12)
+           for k in ("per_token_all", "first_token")}
+    return eng, simm, err
+
+
 def run(full: bool = False):
     import jax
 
     from repro.configs import get_reduced_config
-    from repro.core import (LLMSpec, Problem, ServerSpec, Workload,
-                            route_per_token_time, server_memory_use,
-                            shortest_path_route)
+    from repro.core import LLMSpec, Problem, ServerSpec, Workload
     from repro.models import init_params
     from repro.serving import GeoServingSystem, generate
 
@@ -50,6 +130,20 @@ def run(full: bool = False):
     emit("perfmodel.linearity", 0.0,
          f"per-block slope (2-block route)={slope2/2*1e3:.2f}ms "
          f"(8-block)={slope8/8*1e3:.2f}ms (model tau={tau*1e3:.1f}ms)")
+
+    # §4-style cross-validation under concurrency
+    n_requests = 20 if full else 10
+    for R in (1, 4, 8):
+        (eng, simm, err), us = timed(cross_validate, R,
+                                     n_requests=n_requests)
+        emit(f"xval.R{R}", us,
+             f"per_token eng={eng['per_token_all']*1e3:.2f}ms "
+             f"sim={simm['per_token_all']*1e3:.2f}ms "
+             f"err={err['per_token_all']:.1%} | "
+             f"first_token eng={eng['first_token']*1e3:.1f}ms "
+             f"sim={simm['first_token']*1e3:.1f}ms "
+             f"err={err['first_token']:.1%} | "
+             f"max_conc={eng['max_concurrency']}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,31 @@
+"""Version-compatibility shims for the jax API churn this repo straddles.
+
+* ``shard_map``: jax >= 0.6 exposes ``jax.shard_map`` with ``check_vma``;
+  0.4.x only has ``jax.experimental.shard_map.shard_map`` with the older
+  ``check_rep`` spelling of the same knob.
+* ``jax.sharding.AxisType`` (used by ``repro.launch.mesh.compat_make_mesh``)
+  only exists on newer versions; ``jax.make_mesh`` grew the ``axis_types``
+  kwarg at the same time.
+
+Keeping the adapters in one module means every caller (models, launch,
+tests) stays version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` adapter; ``check`` maps to check_vma/check_rep."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        try:
+            return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check)
+        except TypeError:  # transitional versions spell it check_rep
+            return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)

@@ -123,6 +123,9 @@ class CostSummary:
 
 def summarize_compiled(compiled) -> CostSummary:
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # jax <= 0.4.x: one dict per program
+        ca = ca[0] if ca else {}
+    ca = ca or {}
     colls = parse_collectives(compiled.as_text())
     return CostSummary(
         flops=float(ca.get("flops", 0.0) or 0.0),

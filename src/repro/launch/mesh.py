@@ -4,6 +4,12 @@
 importing this module never touches jax device state; the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import and only then builds the mesh.
+
+``compat_make_mesh`` papers over the ``jax.sharding.AxisType`` API churn:
+newer jax versions want explicit axis types (and deprecate the implicit
+default), older versions (<= 0.4.x) don't expose ``AxisType`` at all and
+``jax.make_mesh`` rejects the ``axis_types`` kwarg.  All mesh construction
+in this repo (and the tests) goes through this helper.
 """
 from __future__ import annotations
 
@@ -12,20 +18,31 @@ from typing import Optional, Tuple
 import jax
 
 
+def compat_make_mesh(shape, axis_names):
+    """Version-compatible ``jax.make_mesh`` with Auto axis types when the
+    running jax supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                tuple(shape), tuple(axis_names),
+                axis_types=(axis_type.Auto,) * len(axis_names))
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(tuple(shape), tuple(axis_names))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_mesh_for(n_devices: Optional[int] = None, model_parallel: int = 1):
     """Small utility mesh for tests/examples (1..N local devices)."""
     n = n_devices or len(jax.devices())
     data = n // model_parallel
-    return jax.make_mesh(
-        (data, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((data, model_parallel), ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> dict:

@@ -1,5 +1,13 @@
-from repro.serving.engine import BlockServer, GeoServingSystem, generate
-from repro.serving.scheduler import AdmissionScheduler, ServedRequest
+from repro.serving.engine import (BlockServer, EngineSession,
+                                  GeoServingSystem, generate)
+from repro.serving.kv_cache import (CachePool, make_pool_decode_step,
+                                    new_block_cache, new_cache_pool_tree,
+                                    write_prefill_kv)
+from repro.serving.scheduler import (AdmissionScheduler,
+                                     ContinuousBatchingScheduler,
+                                     ServedRequest)
 
-__all__ = ["AdmissionScheduler", "BlockServer", "GeoServingSystem",
-           "ServedRequest", "generate"]
+__all__ = ["AdmissionScheduler", "BlockServer", "CachePool",
+           "ContinuousBatchingScheduler", "EngineSession", "GeoServingSystem",
+           "ServedRequest", "generate", "make_pool_decode_step",
+           "new_block_cache", "new_cache_pool_tree", "write_prefill_kv"]

@@ -1,23 +1,36 @@
-"""Geo-distributed serving engine: the PETALS architecture natively in JAX.
+"""Geo-distributed serving engine: the PETALS architecture natively in JAX,
+with continuous batching across sessions.
 
 Executes REAL block-level forward passes according to a BPRR placement with
 client-centric (hub-spoke) communication and client-side input caches —
 the paper's Fig. 1 — while a virtual clock accounts time with the validated
 performance models (eq. (1)): the engine cross-validates the simulator.
 
-Fault tolerance (DESIGN.md §7):
-* client-side per-hop input caches ⇒ on server failure, the failed block
-  range is re-routed over surviving servers and the cached inputs are
-  replayed to rebuild attention caches (tested: post-failover logits equal
-  the no-failure run bit-for-bit).
-* elastic join/leave triggers CG-BP re-placement at the slow time scale.
-* stragglers: per-server slowdown factors feed the routing costs, so WS-RR
-  avoids slow servers; `speculative` re-dispatch duplicates a late hop.
+Multi-session execution (eq. (5)/(20) semantics):
+
+* every server keeps ONE stacked cache pool (``repro.serving.kv_cache``)
+  whose rows are per-session slots; a single jitted step — vmapped over
+  rows, scanned over the server's layers — decodes every resident session
+  at once.  The pool shape is fixed, so the step traces exactly once per
+  server: admitting/retiring sessions flips mask bits instead of re-tracing,
+  and per-session results are bit-for-bit identical whether a session runs
+  alone or among ``max_sessions`` neighbours.
+* cache block-slots follow the paper's memory model: server j has
+  ⌊(M_j − s_m·m_j)/s_c⌋ slots; a session routed through k_j of its blocks
+  occupies k_j slots from start to retirement (no-overbooking commitment).
+  ``try_admit_session``/``retire_session`` enforce the budget; the
+  continuous-batching scheduler (repro.serving.scheduler) defers sessions
+  that do not fit and re-admits them as slots free.
+
+Fault tolerance (DESIGN.md §7) is unchanged in spirit and now concurrent:
+client-side per-hop input caches let a failed block range be re-routed over
+surviving servers and replayed exactly — with any number of co-resident
+sessions.  Elastic join/leave triggers CG-BP re-placement at the slow time
+scale; stragglers feed per-server slowdowns into the routing costs.
 
 Supported block families: "decoder" (dense / MoE / VLM / gemma-pattern) and
 "rwkv" (attention-free).  Hybrid/enc-dec run through the monolithic serve
-steps + simulator (same BPRR decisions; engine support is a straightforward
-extension).
+steps + simulator (same BPRR decisions).
 """
 from __future__ import annotations
 
@@ -33,11 +46,10 @@ from repro.configs.base import ModelConfig
 from repro.core.perf_model import Placement, Problem, Route
 from repro.core.placement import petals_bp
 from repro.core.routing import petals_route, shortest_path_route
-from repro.core.topology import RoutingGraph, route_blocks
-from repro.models import blocks as B
 from repro.models.layers import NULL_SH, embed_tokens, lm_head
 from repro.models.model import stack_plan
-from repro.serving.kv_cache import new_block_cache, write_prefill_kv
+from repro.serving.kv_cache import (CachePool, make_pool_decode_step,
+                                    make_prefill_block)
 
 
 def _block_kind(cfg: ModelConfig) -> str:
@@ -51,95 +63,127 @@ def _block_kind(cfg: ModelConfig) -> str:
         f"geo engine supports decoder/rwkv stacks; got {kinds}")
 
 
-def _layer_params(params, layer: int):
-    return jax.tree.map(lambda x: x[layer], params["segments"]["blocks"])
-
-
 @dataclass
-class SessionHops:
+class EngineSession:
     """Client-side state for one session."""
 
     sid: int
     client: int
     route: Route
-    pos: int = 0
-    max_len: int = 0
+    prompt_len: int
+    n_new: int
+    arrival: float = 0.0
+    start: float = 0.0
+    pos: int = 0  # next cache write position
+    tokens: List[int] = field(default_factory=list)  # prompt + generated
+    n_generated: int = 0
+    state: str = "admitted"  # admitted | active | done
     # per-hop input history (the PETALS fault-tolerance cache)
     hop_inputs: List[List[jnp.ndarray]] = field(default_factory=list)
-    virtual_time: float = 0.0
+    virtual_time: float = 0.0  # accumulated service time (prefill + decode)
+    prefill_time: float = 0.0
+    per_token_time: float = 0.0
+    end: float = float("inf")
+    last_logits: Optional[jnp.ndarray] = None  # logits behind tokens[-1]
+    # transient per-round hidden state
+    _h: Optional[jnp.ndarray] = None
 
 
 class BlockServer:
-    """One 'server': params for its block range + per-session caches."""
+    """One 'server': params for its block range + a stacked session pool."""
 
     def __init__(self, sid: int, cfg: ModelConfig, params, a: int, m: int,
+                 *, n_rows: int, max_len: int, cap_slots: int,
                  slowdown: float = 1.0):
         self.sid = sid
         self.cfg = cfg
         self.kind = _block_kind(cfg)
         self.a, self.m = int(a), int(m)
-        self.layers = [_layer_params(params, l) for l in range(a, a + m)]
-        self.caches: Dict[Tuple[int, int], Dict] = {}  # (session, layer)
+        # per-layer params, stacked on axis 0 over THIS server's range
+        self.stacked = jax.tree.map(lambda x: x[self.a: self.a + self.m],
+                                    params["segments"]["blocks"])
+        self.layer_ids = jnp.arange(self.a, self.a + self.m, dtype=jnp.int32)
+        self.pool = CachePool(cfg, self.kind, self.m, n_rows, max_len,
+                              cap_slots)
         self.alive = True
         self.slowdown = slowdown
+        self._step = make_pool_decode_step(cfg, self.kind)
+        self._prefill_block = make_prefill_block(cfg, self.kind)
+
+    # -- session admission bookkeeping --------------------------------------
+    def fits(self, sid: int, k_blocks: int) -> bool:
+        return self.pool.fits(sid, k_blocks)
+
+    def admit(self, sid: int, k_blocks: int) -> int:
+        return self.pool.alloc(sid, k_blocks)
 
     def evict(self, sid: int):
-        for key in [k for k in self.caches if k[0] == sid]:
-            del self.caches[key]
+        self.pool.release(sid)
 
     def n_sessions(self) -> int:
-        return len({k[0] for k in self.caches})
+        return self.pool.n_sessions()
 
-    def process_full(self, sid: int, h, lo: int, hi: int, positions,
-                     max_len: int):
-        """Prefill blocks [lo, hi) for a session; builds caches."""
+    # -- compute ------------------------------------------------------------
+    def _layer_params(self, l_rel: int):
+        return jax.tree.map(lambda x: x[l_rel], self.stacked)
+
+    def prefill_range(self, sid: int, h, lo: int, hi: int, positions):
+        """Prefill blocks [lo, hi) for one session; fills its pool row."""
         assert self.alive, f"server {self.sid} is dead"
+        row = self.pool.rows[sid]
         S = h.shape[1]
+        entries = []
         for l in range(lo, hi):
-            p = self.layers[l - self.a]
+            p = self._layer_params(l - self.a)
             if self.kind == "decoder":
-                h, kv_cache, _ = B.decoder_block_full(
-                    p, self.cfg, NULL_SH, h, positions, l)
-                cache = new_block_cache(self.cfg, "decoder", h.shape[0],
-                                        max_len)
-                if self.cfg.attn_kind == "mla":
-                    cache = write_prefill_kv(
-                        cache, (kv_cache["latent"], kv_cache["krope"]), S)
-                else:
-                    cache = write_prefill_kv(
-                        cache, (kv_cache["k"], kv_cache["v"]), S)
-            else:  # rwkv
-                h, state = B.rwkv_block_full(p, self.cfg, NULL_SH, h)
-                cache = state
-            self.caches[(sid, l)] = cache
+                h, cache, _ = self._prefill_block(
+                    p, h, positions, jnp.int32(l))
+            else:
+                h, cache = self._prefill_block(p, h)
+            entries.append(cache)
+        self.pool.write_prefill_range(lo - self.a, hi - self.a, row,
+                                      entries, S)
         return h
 
-    def process_decode(self, sid: int, h, lo: int, hi: int, pos: int):
+    def decode_rows(self, h_rows, pos_rows, layer_active):
+        """THE batched step: one jitted call decodes all masked rows."""
         assert self.alive, f"server {self.sid} is dead"
-        for l in range(lo, hi):
-            p = self.layers[l - self.a]
-            cache = self.caches[(sid, l)]
-            if self.kind == "decoder":
-                h, cache = B.decoder_block_decode(
-                    p, self.cfg, NULL_SH, h, cache, pos, l)
-            else:
-                h, cache = B.rwkv_block_decode(p, self.cfg, NULL_SH, h, cache)
-            self.caches[(sid, l)] = cache
-        return h
+        h_out, self.pool.tree = self._step(
+            self.stacked, self.pool.tree, h_rows, pos_rows, layer_active,
+            self.layer_ids)
+        return h_out
+
+    def decode_range(self, sid: int, h, lo: int, hi: int, pos: int):
+        """Single-session decode of blocks [lo, hi) via the pooled step (the
+        same program as the batched path — bit-for-bit identical)."""
+        row = self.pool.rows[sid]
+        N = self.pool.n_rows
+        h_rows = jnp.zeros((N,) + h.shape[1:], h.dtype).at[row].set(h[0])
+        pos_rows = jnp.zeros((N,), jnp.int32).at[row].set(pos)
+        mask = np.zeros((self.m, N), bool)
+        mask[lo - self.a: hi - self.a, row] = True
+        h_out = self.decode_rows(h_rows, pos_rows, jnp.asarray(mask))
+        return h_out[row][None]
 
 
 class GeoServingSystem:
-    """Client-centric distributed inference with online BPRR."""
+    """Client-centric distributed inference with online BPRR and
+    continuous batching across sessions."""
 
     def __init__(self, cfg: ModelConfig, params, problem: Problem,
                  algorithm: str = "proposed", R: Optional[int] = None,
-                 max_new_tokens: int = 64):
+                 max_new_tokens: int = 64, max_sessions: int = 8,
+                 max_seq_len: Optional[int] = None):
         assert problem.L == cfg.n_layers
         self.cfg = cfg
         self.params = params
         self.problem = problem
         self.algorithm = algorithm
         self.max_new_tokens = max_new_tokens
+        self.max_sessions = int(max_sessions)
+        self.max_seq_len = int(
+            max_seq_len if max_seq_len is not None
+            else problem.workload.l_in + max_new_tokens + 32)
         if algorithm == "proposed":
             from repro.core.placement import auto_R, cg_bp
             self.R = R if R is not None else auto_R(problem, 0.1, 60.0)
@@ -149,10 +193,20 @@ class GeoServingSystem:
             self.placement = petals_bp(problem)
         self.servers: Dict[int, BlockServer] = {}
         self._build_servers()
-        self.sessions: Dict[int, SessionHops] = {}
+        self.sessions: Dict[int, EngineSession] = {}
         self._sid = 0
+        self._embed = jax.jit(
+            lambda emb, tok: embed_tokens(emb, cfg, NULL_SH, tok))
+        self._lm_head = jax.jit(
+            lambda emb, h: lm_head(emb, cfg, NULL_SH, h))
 
     # ------------------------------------------------------------------
+    def _cap_slots(self, j: int, m: int) -> int:
+        spec = self.problem.servers[j]
+        cap = int(np.floor(
+            (spec.mem_bytes - self.problem.s_m * m) / self.problem.s_c))
+        return max(cap, 0)
+
     def _build_servers(self):
         for j in range(self.problem.n_servers):
             a, m = int(self.placement.a[j]), int(self.placement.m[j])
@@ -160,7 +214,13 @@ class GeoServingSystem:
                 continue
             if j in self.servers:
                 continue  # keep live objects (running sessions hold caches)
-            self.servers[j] = BlockServer(j, self.cfg, self.params, a, m)
+            cap = self._cap_slots(j, m)
+            # pool arrays need >= 1 row for fixed jit shapes, but the
+            # block-slot budget stays honest: cap == 0 admits nothing
+            n_rows = max(1, min(self.max_sessions, cap))
+            self.servers[j] = BlockServer(
+                j, self.cfg, self.params, a, m, n_rows=n_rows,
+                max_len=self.max_seq_len, cap_slots=cap)
 
     def alive_placement(self) -> Placement:
         a = np.array(self.placement.a)
@@ -173,9 +233,205 @@ class GeoServingSystem:
         return Placement(a=a, m=m)
 
     # ------------------------------------------------------------------
+    # Session lifecycle (continuous batching API)
+    # ------------------------------------------------------------------
+    def create_session(self, tokens: np.ndarray, client: int, route: Route,
+                       n_new: int, arrival: float = 0.0) -> int:
+        """Register an admitted session (no compute, no slots yet)."""
+        S = len(tokens)
+        if S + n_new > self.max_seq_len:
+            raise ValueError(
+                f"prompt {S} + n_new {n_new} exceeds max_seq_len "
+                f"{self.max_seq_len}; raise max_seq_len at engine build")
+        sid = self._sid
+        self._sid += 1
+        self.sessions[sid] = EngineSession(
+            sid=sid, client=client, route=route, prompt_len=S, n_new=n_new,
+            arrival=arrival, tokens=[int(t) for t in np.asarray(tokens)],
+            hop_inputs=[[] for _ in route.servers])
+        return sid
+
+    def fits_session(self, sid: int) -> bool:
+        """True iff every route server has a free row AND block-slots for
+        this session (no-overbooking check)."""
+        sess = self.sessions[sid]
+        return all(self.servers[j].alive and self.servers[j].fits(sid, k)
+                   for j, k in zip(sess.route.servers, sess.route.blocks))
+
+    def try_admit_session(self, sid: int, now: float = 0.0) -> bool:
+        """Claim slots and run the prefill.  Returns False (and claims
+        nothing) when some server's pool is exhausted — the caller defers
+        and re-admits after a retirement."""
+        sess = self.sessions[sid]
+        if not self.fits_session(sid):
+            return False
+        for j, k in zip(sess.route.servers, sess.route.blocks):
+            self.servers[j].admit(sid, k)
+        sess.start = now
+        self._prefill(sess)
+        sess.state = "active"
+        sess.end = (sess.start + sess.prefill_time
+                    + max(sess.n_new - 1, 0) * sess.per_token_time)
+        # the prefill's last-position logits give the first generated token
+        logits = self._lm_head(self.params["embed"], sess._h[:, -1:])
+        sess.last_logits = logits[0, 0]
+        sess.tokens.append(int(jnp.argmax(logits[0, 0])))
+        sess.n_generated = 1
+        sess._h = None
+        return True
+
+    def _prefill(self, sess: EngineSession):
+        prompt = jnp.asarray(sess.tokens[: sess.prompt_len],
+                             jnp.int32)[None, :]
+        h = self._embed(self.params["embed"], prompt)
+        positions = jnp.arange(sess.prompt_len)
+        e = 0
+        for hop, (j, k) in enumerate(zip(sess.route.servers,
+                                         sess.route.blocks)):
+            srv = self.servers[j]
+            sess.hop_inputs[hop].append(h)
+            h = srv.prefill_range(sess.sid, h, e, e + k, positions)
+            sess.prefill_time += (
+                self.problem.rtt_prefill[sess.client, j]
+                + k * self.problem.servers[j].tau_prefill(
+                    self.problem.workload.l_in) * srv.slowdown)
+            e += k
+        sess.pos = sess.prompt_len
+        sess.virtual_time += sess.prefill_time
+        sess.per_token_time = self._route_per_token(sess)
+        sess._h = h
+
+    def _route_per_token(self, sess: EngineSession) -> float:
+        t = 0.0
+        for j, k in zip(sess.route.servers, sess.route.blocks):
+            t += (self.problem.rtt_token[sess.client, j]
+                  + k * self.problem.servers[j].tau
+                  * self.servers[j].slowdown)
+        return t
+
+    def decode_round(self, sids: Optional[List[int]] = None) -> Dict[int, int]:
+        """One continuous-batching round: every listed active session (all
+        unfinished active sessions when ``sids`` is None) advances one token
+        through its route; co-resident sessions share ONE pooled step per
+        (hop, server) group.  Returns {sid: new_token}."""
+        if sids is None:
+            sids = [s.sid for s in self.sessions.values()
+                    if s.state == "active" and s.n_generated < s.n_new]
+        group = [self.sessions[sid] for sid in sids
+                 if self.sessions[sid].state == "active"]
+        if not group:
+            return {}
+        for sess in group:
+            tok = jnp.asarray([[sess.tokens[-1]]], jnp.int32)
+            sess._h = self._embed(self.params["embed"], tok)
+        self._traverse(group)
+        out = {}
+        for sess in group:
+            if sess.state != "active":  # aborted by unservable failover
+                continue
+            sess.pos += 1
+            logits = self._lm_head(self.params["embed"], sess._h)
+            sess.last_logits = logits[0, 0]
+            nxt = int(jnp.argmax(logits[0, 0]))
+            sess.tokens.append(nxt)
+            sess.n_generated += 1
+            sess.virtual_time += sess.per_token_time
+            sess._h = None
+            out[sess.sid] = nxt
+        return out
+
+    def _traverse(self, group: List[EngineSession]):
+        """Advance every session in ``group`` through its full route (one
+        token's worth of work), batching per (hop, server)."""
+        progress = {s.sid: 0 for s in group}
+        while True:
+            pending = [s for s in group
+                       if s.state == "active"
+                       and progress[s.sid] < len(s.route.servers)]
+            if not pending:
+                return
+            # failover first: splice routes of sessions facing a dead server
+            for s in pending:
+                hop = progress[s.sid]
+                while not self.servers[s.route.servers[hop]].alive:
+                    try:
+                        self._failover(s, hop)
+                    except RuntimeError:
+                        # no survivor has capacity for THIS session: fail it
+                        # alone — co-resident sessions must keep decoding.
+                        # A lone session propagates (legacy decode semantics).
+                        if len(group) == 1:
+                            raise
+                        self._abort_session(s)
+                        break
+            pending = [s for s in pending if s.state == "active"]
+            groups: Dict[int, List[EngineSession]] = {}
+            for s in pending:
+                groups.setdefault(s.route.servers[progress[s.sid]],
+                                  []).append(s)
+            for j, members in groups.items():
+                srv = self.servers[j]
+                N = srv.pool.n_rows
+                d = members[0]._h.shape[-1]
+                h_buf = np.zeros((N, 1, d), np.asarray(members[0]._h).dtype)
+                pos_buf = np.zeros((N,), np.int32)
+                mask = np.zeros((srv.m, N), bool)
+                spans = {}
+                for s in members:
+                    hop = progress[s.sid]
+                    row = srv.pool.rows[s.sid]
+                    e_lo = sum(s.route.blocks[:hop])
+                    k = s.route.blocks[hop]
+                    s.hop_inputs[hop].append(s._h)
+                    h_buf[row] = np.asarray(s._h[0])
+                    pos_buf[row] = s.pos
+                    mask[e_lo - srv.a: e_lo + k - srv.a, row] = True
+                    spans[s.sid] = (row, k)
+                h_out = srv.decode_rows(jnp.asarray(h_buf),
+                                        jnp.asarray(pos_buf),
+                                        jnp.asarray(mask))
+                for s in members:
+                    row, k = spans[s.sid]
+                    s._h = h_out[row][None]
+                    progress[s.sid] += 1
+
+    def _abort_session(self, sess: EngineSession):
+        """Mark a session unservable (failover found no capacity) and free
+        its slots; the record stays in ``sessions`` for the scheduler to
+        report as dropped."""
+        sess.state = "failed"
+        sess._h = None
+        for j in set(sess.route.servers):
+            if j in self.servers:
+                self.servers[j].evict(sess.sid)
+
+    def retire_session(self, sid: int) -> Optional[EngineSession]:
+        """Free the session's rows/block-slots on every server; returns the
+        session record (metrics live on it)."""
+        sess = self.sessions.pop(sid, None)
+        if sess is None:
+            return None
+        if sess.state != "failed":
+            sess.state = "done"
+        for j in set(sess.route.servers):
+            if j in self.servers:
+                self.servers[j].evict(sid)
+        return sess
+
+    def concurrency(self) -> int:
+        return sum(1 for s in self.sessions.values() if s.state == "active")
+
+    def slot_usage(self) -> Dict[int, Tuple[int, int]]:
+        """{server: (block-slots used, capacity)} — invariant-check hook."""
+        return {j: (srv.pool.slots_used, srv.pool.cap_slots)
+                for j, srv in self.servers.items()}
+
+    # ------------------------------------------------------------------
+    # Legacy single-session API (implemented on the pooled machinery)
+    # ------------------------------------------------------------------
     def submit(self, tokens: np.ndarray, client: int = 0, now: float = 0.0
                ) -> Tuple[int, jnp.ndarray]:
-        """Start a session (prefill).  tokens: (S,).  Returns (sid, logits)."""
+        """Start a session immediately (prefill).  Returns (sid, logits)."""
         alive = self.alive_placement()
         if self.algorithm == "proposed":
             route, _ = shortest_path_route(self.problem, alive, client)
@@ -183,63 +439,35 @@ class GeoServingSystem:
             route = petals_route(self.problem, alive, client)
         if route is None:
             raise RuntimeError("no feasible route")
-        sid = self._sid
-        self._sid += 1
-        S = len(tokens)
-        max_len = S + self.max_new_tokens
-        sess = SessionHops(sid=sid, client=client, route=route, pos=S,
-                           max_len=max_len,
-                           hop_inputs=[[] for _ in route.servers])
-        h = embed_tokens(self.params["embed"], self.cfg, NULL_SH,
-                         jnp.asarray(tokens)[None, :])
-        positions = jnp.arange(S)
-        e = 0
-        for hop, (j, k) in enumerate(zip(route.servers, route.blocks)):
-            sess.hop_inputs[hop].append(h)
-            h = self.servers[j].process_full(sid, h, e, e + k, positions,
-                                             max_len)
-            sess.virtual_time += (self.problem.rtt_prefill[client, j]
-                                  + k * self.problem.servers[j].tau_prefill(
-                                      self.problem.workload.l_in)
-                                  * self.servers[j].slowdown)
-            e += k
-        logits = lm_head(self.params["embed"], self.cfg, NULL_SH, h[:, -1:])
-        self.sessions[sid] = sess
-        return sid, logits[:, 0]
+        sid = self.create_session(tokens, client, route,
+                                  n_new=self.max_new_tokens, arrival=now)
+        if not self.try_admit_session(sid, now=now):
+            self.sessions.pop(sid)
+            raise RuntimeError("no free cache slots for immediate admission")
+        return sid, self.sessions[sid].last_logits[None]
 
     def decode(self, sid: int, token: int) -> jnp.ndarray:
-        """One decode step through the session's chain."""
+        """One decode step through the session's chain.  The caller picks
+        the token for the last position — a provisional argmax tail left by
+        ``try_admit_session``/``decode_round`` is replaced, not duplicated."""
         sess = self.sessions[sid]
-        h = embed_tokens(self.params["embed"], self.cfg, NULL_SH,
-                         jnp.asarray([[token]], jnp.int32))
-        e = 0
-        hop = 0
-        while hop < len(sess.route.servers):
-            j = sess.route.servers[hop]
-            k = sess.route.blocks[hop]
-            if not self.servers[j].alive:
-                self._failover(sess, hop)  # splices the route in place
-                continue  # retry the same hop with the replacement chain
-            srv = self.servers[j]
-            sess.hop_inputs[hop].append(h)
-            h = srv.process_decode(sid, h, e, e + k, sess.pos)
-            sess.virtual_time += (
-                self.problem.rtt_token[sess.client, j]
-                + k * self.problem.servers[j].tau * srv.slowdown)
-            e += k
-            hop += 1
+        if len(sess.tokens) == sess.pos + 1:
+            sess.tokens[-1] = int(token)  # unprocessed provisional tail
+        else:
+            sess.tokens.append(int(token))
+        sess.n_generated = len(sess.tokens) - sess.prompt_len
+        tok = jnp.asarray([[int(token)]], jnp.int32)
+        sess._h = self._embed(self.params["embed"], tok)
+        self._traverse([sess])
         sess.pos += 1
-        logits = lm_head(self.params["embed"], self.cfg, NULL_SH, h)
+        sess.virtual_time += self._route_per_token(sess)
+        logits = self._lm_head(self.params["embed"], sess._h)
+        sess.last_logits = logits[0, 0]
+        sess._h = None
         return logits[:, 0]
 
     def finish(self, sid: int):
-        sess = self.sessions.pop(sid, None)
-        if sess is None:
-            return
-        for j in set(sess.route.servers):
-            if j in self.servers:
-                self.servers[j].evict(sid)
-
+        self.retire_session(sid)
 
     # ------------------------------------------------------------------
     # Fault tolerance
@@ -286,7 +514,7 @@ class GeoServingSystem:
         route, _ = shortest_path_route(subproblem, sub, client)
         return route.servers if route is not None else None
 
-    def _failover(self, sess: SessionHops, hop: int):
+    def _failover(self, sess: EngineSession, hop: int):
         """Replace the dead server at ``hop`` by a chain of alive servers and
         replay the client-side cached inputs to rebuild their caches."""
         dead_j = sess.route.servers[hop]
@@ -296,7 +524,6 @@ class GeoServingSystem:
         if chain is None:
             raise RuntimeError(
                 f"no surviving servers cover blocks [{e_lo},{e_hi})")
-        # rebuild caches on the replacement chain by replaying inputs
         inputs = sess.hop_inputs[hop]
         prompt_h = inputs[0]
         S = prompt_h.shape[1]
@@ -309,30 +536,43 @@ class GeoServingSystem:
             k = int(min(alive.a[j] + alive.m[j], e_hi) - e)
             repl_routes.append((j, e, e + k))
             e += k
-        # replay prefill
+        # claim slots on the replacement chain, then replay
+        for j, lo, hi2 in repl_routes:
+            if not self.servers[j].fits(sess.sid, hi2 - lo):
+                raise RuntimeError(
+                    f"failover target {j} has no free cache slots")
+        for j, lo, hi2 in repl_routes:
+            self.servers[j].admit(sess.sid, hi2 - lo)
+        # replay, recording each replacement hop's OWN input history so a
+        # later failure of any replacement hop replays correct activations
+        new_histories: List[List[jnp.ndarray]] = [[] for _ in repl_routes]
         hs = prompt_h
         positions = jnp.arange(S)
-        for j, lo, hi2 in repl_routes:
-            hs_out = self.servers[j].process_full(
-                sess.sid, hs, lo, hi2, positions, sess.max_len)
-            hs = hs_out
+        for i, (j, lo, hi2) in enumerate(repl_routes):
+            new_histories[i].append(hs)
+            hs = self.servers[j].prefill_range(sess.sid, hs, lo, hi2,
+                                               positions)
         # replay each decoded token
         for t_idx, h_tok in enumerate(inputs[1:]):
             pos = S + t_idx
             hh = h_tok
-            for j, lo, hi2 in repl_routes:
-                hh = self.servers[j].process_decode(sess.sid, hh, lo, hi2,
-                                                    pos)
+            for i, (j, lo, hi2) in enumerate(repl_routes):
+                new_histories[i].append(hh)
+                hh = self.servers[j].decode_range(sess.sid, hh, lo, hi2, pos)
         # splice the replacement chain into the route
         new_servers[hop: hop + 1] = [j for j, _, _ in repl_routes]
         new_blocks[hop: hop + 1] = [hi2 - lo for _, lo, hi2 in repl_routes]
-        # inputs history: replacement hops share the old hop's history
-        sess.hop_inputs[hop: hop + 1] = [list(inputs)
-                                         for _ in repl_routes]
+        sess.hop_inputs[hop: hop + 1] = new_histories
         sess.route = Route(servers=tuple(new_servers),
                            blocks=tuple(new_blocks))
         if dead_j in self.servers:
             self.servers[dead_j].evict(sess.sid)
+        # remaining tokens are billed at the NEW route's cost; the virtual
+        # retirement time shifts accordingly
+        sess.per_token_time = self._route_per_token(sess)
+        sess.end = (sess.start + sess.virtual_time
+                    + max(sess.n_new - sess.n_generated, 0)
+                    * sess.per_token_time)
 
     # ------------------------------------------------------------------
     def set_slowdown(self, j: int, factor: float):

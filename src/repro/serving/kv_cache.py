@@ -1,16 +1,38 @@
-"""Per-block serving caches for the geo engine (single-session granularity).
+"""Serving caches for the geo engine.
 
-The engine executes one block at a time according to the BPRR placement, so
-caches here are per (server, session, layer) — unlike the stacked scan
-caches in repro.models.model used by the monolithic serve steps.
+Two granularities:
+
+* ``new_block_cache`` / ``write_prefill_kv`` — single-session per-(server,
+  session, layer) caches.  Kept for API compatibility and for callers that
+  manage their own cache dicts.
+* ``CachePool`` — the continuous-batching layout: per server, ONE stacked
+  pytree whose leaves carry ``(n_layers, n_rows, ...)`` so a single jitted
+  block call (vmapped over rows, scanned over layers) serves every session
+  resident on that server.  Rows are allocated/freed per session; the pool
+  shape never changes, so the engine's decode step traces exactly once per
+  server regardless of how sessions come and go.
+
+Slot accounting follows eq. (5)/(20) of the paper: a server hosting ``m``
+blocks has ``⌊(M_j − s_m·m_j)/s_c⌋`` cache *block-slots*; a session routed
+through ``k`` of the server's blocks occupies ``k`` block-slots from start
+to retirement.  ``CachePool`` enforces both the row budget (physical arrays)
+and the block-slot budget (the paper's memory model) — the no-overbooking
+commitment.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import functools
+from typing import Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Single-session caches (legacy granularity, used by failover replay helpers)
+# ---------------------------------------------------------------------------
 
 
 def new_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
@@ -49,3 +71,196 @@ def write_prefill_kv(cache: Dict, kv, length: int) -> Dict:
         out["k"] = cache["k"].at[:, :length].set(k.astype(cache["k"].dtype))
         out["v"] = cache["v"].at[:, :length].set(v.astype(cache["v"].dtype))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Batched slot pools (continuous batching)
+# ---------------------------------------------------------------------------
+
+
+def new_cache_pool_tree(cfg: ModelConfig, kind: str, n_layers: int,
+                        n_rows: int, max_len: int):
+    """Stacked caches: leaves (n_layers, n_rows, ...)."""
+    cdt = jnp.dtype(cfg.param_dtype)
+    L, N, T = n_layers, n_rows, max_len
+    if kind == "decoder":
+        if cfg.attn_kind == "mla":
+            return {
+                "latent": jnp.zeros((L, N, T, cfg.kv_lora_rank), cdt),
+                "krope": jnp.zeros((L, N, T, cfg.rope_head_dim), cdt),
+            }
+        kv = (L, N, T, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(kv, cdt), "v": jnp.zeros(kv, cdt)}
+    if kind == "rwkv":
+        h, hd = cfg.ssm_heads, cfg.ssm_head_dim
+        return {
+            "wkv": jnp.zeros((L, N, h, hd, hd), jnp.float32),
+            "shift_tm": jnp.zeros((L, N, cfg.d_model), jnp.float32),
+            "shift_cm": jnp.zeros((L, N, cfg.d_model), jnp.float32),
+        }
+    raise NotImplementedError(
+        f"cache pool for block kind {kind!r}; remaining families run "
+        "through the simulator and monolithic serve steps")
+
+
+class CachePool:
+    """Row + block-slot bookkeeping around the stacked cache pytree of ONE
+    server.
+
+    * ``n_rows`` physical rows (the vmapped batch extent of the jitted step),
+    * ``cap_slots`` block-slots per eq. (5): ⌊(M_j − s_m·m_j)/s_c⌋ — a
+      session holding ``k`` of this server's blocks consumes ``k`` slots.
+    """
+
+    def __init__(self, cfg: ModelConfig, kind: str, n_layers: int,
+                 n_rows: int, max_len: int, cap_slots: int):
+        self.cfg = cfg
+        self.kind = kind
+        self.n_layers = n_layers
+        self.n_rows = n_rows
+        self.max_len = max_len
+        self.cap_slots = int(cap_slots)
+        self.tree = new_cache_pool_tree(cfg, kind, n_layers, n_rows, max_len)
+        self._free: List[int] = list(range(n_rows))
+        self.rows: Dict[int, int] = {}  # sid -> row
+        self.blocks: Dict[int, int] = {}  # sid -> k block-slots held
+        self.slots_used = 0
+
+    # -- admission ----------------------------------------------------------
+    def fits(self, sid: int, k_blocks: int) -> bool:
+        if sid in self.rows:
+            # re-entry (failover chain revisiting this server): no new row,
+            # but the ADDITIONAL blocks still count against the budget
+            return self.slots_used + k_blocks <= self.cap_slots
+        return bool(self._free) and (self.slots_used + k_blocks
+                                     <= self.cap_slots)
+
+    def alloc(self, sid: int, k_blocks: int) -> int:
+        """Claim one row + ``k_blocks`` slots.  Raises if over budget — the
+        scheduler must check ``fits`` first (no-overbooking commitment)."""
+        if self.slots_used + k_blocks > self.cap_slots:
+            raise RuntimeError(
+                f"block-slot overbooking: {self.slots_used}+{k_blocks} > "
+                f"{self.cap_slots}")
+        if sid in self.rows:  # re-entry: charge the extra blocks
+            self.blocks[sid] += int(k_blocks)
+            self.slots_used += int(k_blocks)
+            return self.rows[sid]
+        if not self._free:
+            raise RuntimeError("cache pool rows exhausted")
+        row = self._free.pop()
+        self.rows[sid] = row
+        self.blocks[sid] = int(k_blocks)
+        self.slots_used += int(k_blocks)
+        return row
+
+    def release(self, sid: int):
+        row = self.rows.pop(sid, None)
+        if row is None:
+            return
+        self.slots_used -= self.blocks.pop(sid, 0)
+        self._free.append(row)
+        # stale row contents are never observable: a new occupant's prefill
+        # overwrites [:prompt_len] (rwkv states entirely), and decode
+        # attention masks kv_pos <= pos — so no zeroing (a full pool copy
+        # per retirement) is needed.
+
+    def n_sessions(self) -> int:
+        return len(self.rows)
+
+    # -- prefill writes -----------------------------------------------------
+    def write_prefill_range(self, lo_rel: int, hi_rel: int, row: int,
+                            entries: List[Dict], length: int):
+        """Insert single-session per-layer cache entries (batch dim 1, one
+        per layer in [lo_rel, hi_rel)) into the pool row.  Staged as ONE
+        ranged update per leaf — a per-layer loop would copy the whole pool
+        O(layers) times.  KV-type leaves write [:length]; state leaves
+        (rwkv) overwrite whole."""
+        assert len(entries) == hi_rel - lo_rel
+        t = dict(self.tree)
+        if self.kind == "decoder":
+            keys = ("latent", "krope") if "latent" in t else ("k", "v")
+        else:
+            keys = ("wkv", "shift_tm", "shift_cm")
+        for key in keys:
+            stacked = jnp.stack([e[key][0] for e in entries]).astype(
+                t[key].dtype)
+            if self.kind == "decoder":
+                t[key] = t[key].at[lo_rel:hi_rel, row, :length].set(stacked)
+            else:
+                t[key] = t[key].at[lo_rel:hi_rel, row].set(stacked)
+        self.tree = t
+
+
+@functools.lru_cache(maxsize=None)
+def make_prefill_block(cfg: ModelConfig, kind: str):
+    """Jitted single-session per-layer prefill, shared across every server
+    of the same (cfg, kind) — jax's jit cache then reuses compiled programs
+    for servers with identical shapes."""
+    from repro.models import blocks as B
+    from repro.models.layers import NULL_SH
+
+    if kind == "decoder":
+        return jax.jit(lambda p, h, positions, lid: B.decoder_block_full(
+            p, cfg, NULL_SH, h, positions, lid))
+    return jax.jit(lambda p, h: B.rwkv_block_full(p, cfg, NULL_SH, h))
+
+
+@functools.lru_cache(maxsize=None)
+def make_pool_decode_step(cfg: ModelConfig, kind: str):
+    """Build THE jitted multi-session decode step, shared per (cfg, kind) —
+    each server calls it with its own (layers, rows) shapes.
+
+    step(stacked_params, pool_tree, h, pos, layer_active, layer_ids)
+      -> (h, pool_tree)
+
+    * ``stacked_params``: per-layer block params stacked on axis 0 (n_layers),
+    * ``pool_tree``: leaves (n_layers, n_rows, ...),
+    * ``h``: (n_rows, 1, d_model) hidden rows,
+    * ``pos``: (n_rows,) int32 cache write/attend position per row,
+    * ``layer_active``: (n_layers, n_rows) bool — row r runs layer l iff set
+      (a session's hop covers a contiguous sub-range of the server's blocks),
+    * ``layer_ids``: (n_layers,) int32 absolute layer indices (for per-layer
+      sliding-window patterns).
+
+    The computation always spans ALL rows with fixed shapes: adding or
+    removing sessions changes only the mask, never the traced program, so
+    per-session results are bit-for-bit identical between a crowded pool and
+    a pool with a single resident session.
+    """
+    from repro.models import blocks as B
+    from repro.models.layers import NULL_SH
+
+    def step(stacked_params, pool_tree, h, pos, layer_active, layer_ids):
+        def body(hc, xs):
+            p, cache, active, lid = xs
+
+            if kind == "decoder":
+                def one(hr, cr, pr):
+                    hh, cc = B.decoder_block_decode(
+                        p, cfg, NULL_SH, hr[None],
+                        jax.tree.map(lambda x: x[None], cr), pr, lid)
+                    return hh[0], jax.tree.map(lambda x: x[0], cc)
+
+                h2, c2 = jax.vmap(one)(hc, cache, pos)
+            else:  # rwkv
+                def one(hr, cr):
+                    hh, cc = B.rwkv_block_decode(
+                        p, cfg, NULL_SH, hr[None],
+                        jax.tree.map(lambda x: x[None], cr))
+                    return hh[0], jax.tree.map(lambda x: x[0], cc)
+
+                h2, c2 = jax.vmap(one)(hc, cache)
+            # inactive rows keep their hidden state and caches untouched
+            h2 = jnp.where(active[:, None, None], h2, hc)
+            c2 = jax.tree.map(
+                lambda new, old: jnp.where(
+                    active.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+                c2, cache)
+            return h2, c2
+
+        h, new_pool = jax.lax.scan(
+            body, h, (stacked_params, pool_tree, layer_active, layer_ids))
+        return h, new_pool
+
+    return jax.jit(step)

@@ -1,19 +1,36 @@
-"""Admission scheduler: OnlineBPRR (Alg. 2) in front of the geo engine.
+"""Continuous-batching scheduler: OnlineBPRR (Alg. 2) driving the geo engine
+with interleaved sessions.
 
-The controller decides WHEN a request may start (WS-RR waiting under the
-design concurrency |R|) on the virtual clock; the engine executes the actual
-block-level computation.  Used by examples/geo_serve.py.
+The controller decides WHEN a request may start — WS-RR waiting under the
+design concurrency |R| (eq. (20)) on the virtual clock — while the engine
+executes the actual block-level computation with all temporally-overlapping
+sessions sharing the per-server cache pools (one jitted step per server per
+round).  The event loop:
+
+  arrival  →  OnlineBPRR.admit (WS-RR route + committed start)
+  start    →  engine.try_admit_session (slots claimed, prefill runs);
+              a start that would overbook cache slots is DEFERRED and
+              re-admitted at the next retirement (no-overbooking invariant)
+  end      →  co-resident sessions decode in shared batched rounds until the
+              ending session has all its tokens; it then retires, frees its
+              block-slots, and deferred sessions are re-admitted
+
+Within a client, starts are FIFO (a later arrival never overtakes an
+earlier one of the same client).  Used by examples/geo_serve.py and
+benchmarks/engine_validation.py — the engine half of the simulator
+cross-validation.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Tuple
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.online import OnlineBPRR
-from repro.core.perf_model import Problem
-from repro.serving.engine import GeoServingSystem, generate
+from repro.serving.engine import GeoServingSystem
 
 
 @dataclass
@@ -21,30 +38,170 @@ class ServedRequest:
     rid: int
     arrival: float
     start: float
-    first_token: float
-    per_token: float
-    total: float
+    first_token: float  # wait + prefill (virtual)
+    per_token: float  # (wait + total service) / n_new — paper's §4.1 metric
+    total: float  # wait + service
     tokens: np.ndarray
+    wait: float = 0.0
+    per_token_rest: float = 0.0  # decode-phase per-token time
+    dropped: bool = False
+    n_deferrals: int = 0
 
 
-class AdmissionScheduler:
+@dataclass
+class _Pending:
+    rid: int
+    tokens: np.ndarray
+    arrival: float
+    n_new: int
+    client: int
+    sid: int = -1
+    sid_ctl: int = -1
+    deferrals: int = 0
+
+
+class ContinuousBatchingScheduler:
+    """Admission + continuous batching over a :class:`GeoServingSystem`."""
+
+    # event-kind priorities at equal timestamps: retire before start before
+    # a new arrival, so freed slots are visible to later decisions
+    _END, _START, _ARRIVAL = 0, 1, 2
+
     def __init__(self, system: GeoServingSystem, R: Optional[int] = None,
                  arrival_rate: float = 0.1):
         self.system = system
         self.controller = OnlineBPRR(system.problem, R=R,
                                      arrival_rate=arrival_rate)
+        self._events: List[Tuple[float, int, int, int]] = []  # (t,prio,seq,i)
+        self._seq = itertools.count()
+        self._requests: List[_Pending] = []
+        self._deferred: List[int] = []  # indices into _requests
+        self._last_start: Dict[int, float] = {}  # FIFO-within-client clamp
+        self.results: Dict[int, ServedRequest] = {}
+        self.max_concurrency = 0
 
-    def serve(self, rid: int, tokens: np.ndarray, arrival: float,
-              n_new: int, client: int = 0) -> ServedRequest:
-        route, start, end, sid_ctl = self.controller.admit(client, arrival)
+    # ------------------------------------------------------------------
+    def submit(self, rid: int, tokens: np.ndarray, arrival: float,
+               n_new: int, client: int = 0):
+        """Enqueue one request (no compute until ``run``)."""
+        idx = len(self._requests)
+        self._requests.append(_Pending(rid, np.asarray(tokens),
+                                       float(arrival), int(n_new),
+                                       int(client)))
+        heapq.heappush(self._events,
+                       (float(arrival), self._ARRIVAL, next(self._seq), idx))
+
+    # ------------------------------------------------------------------
+    def run(self) -> List[ServedRequest]:
+        """Drive the event loop until every submitted request completes.
+        Returns ServedRequests in rid order."""
+        while self._events:
+            t, prio, _, idx = heapq.heappop(self._events)
+            if prio == self._ARRIVAL:
+                self._on_arrival(t, idx)
+            elif prio == self._START:
+                self._on_start(t, idx)
+            else:
+                self._on_end(t, idx)
+        # nothing left to retire: permanently-deferred sessions can never be
+        # re-admitted — surface them as drops instead of vanishing
+        for didx in self._deferred:
+            req = self._requests[didx]
+            self.system.retire_session(req.sid)
+            self.controller.finish(req.sid_ctl)
+            self._drop(req)
+        self._deferred = []
+        return [self.results[r.rid] for r in
+                sorted(self._requests, key=lambda r: r.rid)
+                if r.rid in self.results]
+
+    def _drop(self, req: _Pending):
+        self.results[req.rid] = ServedRequest(
+            rid=req.rid, arrival=req.arrival, start=np.inf,
+            first_token=np.inf, per_token=np.inf, total=np.inf,
+            tokens=np.asarray(req.tokens), wait=np.inf, dropped=True,
+            n_deferrals=req.deferrals)
+
+    # ------------------------------------------------------------------
+    def _on_arrival(self, t: float, idx: int):
+        req = self._requests[idx]
+        route, start, _end, sid_ctl = self.controller.admit(req.client, t)
         if route is None:
-            raise RuntimeError("admission failed: no feasible route")
-        out, vt = generate(self.system, tokens, n_new, client=client)
-        wait = start - arrival
-        prefill_share = vt / max(1, n_new + 1)
-        self.controller.finish(sid_ctl)
-        return ServedRequest(
-            rid=rid, arrival=arrival, start=start,
-            first_token=wait + prefill_share,
-            per_token=vt / max(1, n_new + 1),
-            total=wait + vt, tokens=out)
+            self._drop(req)
+            return
+        # FIFO within client: never overtake an earlier same-client start
+        start = max(start, self._last_start.get(req.client, -np.inf))
+        self._last_start[req.client] = start
+        req.sid_ctl = sid_ctl
+        req.sid = self.system.create_session(req.tokens, req.client, route,
+                                             req.n_new, arrival=req.arrival)
+        heapq.heappush(self._events,
+                       (float(start), self._START, next(self._seq), idx))
+
+    def _on_start(self, t: float, idx: int):
+        req = self._requests[idx]
+        # FIFO within client is head-of-line: while an earlier same-client
+        # request sits deferred, later ones queue behind it instead of
+        # overtaking via a different route
+        blocked = any(self._requests[d].client == req.client
+                      for d in self._deferred)
+        if not blocked and self.system.try_admit_session(req.sid, now=t):
+            sess = self.system.sessions[req.sid]
+            heapq.heappush(self._events,
+                           (float(sess.end), self._END, next(self._seq), idx))
+            self.max_concurrency = max(self.max_concurrency,
+                                       self.system.concurrency())
+        else:
+            # cache-slot budget exhausted (or queued behind a deferred
+            # predecessor): defer, re-admit on retirement
+            req.deferrals += 1
+            self._deferred.append(idx)
+
+    def _on_end(self, t: float, idx: int):
+        req = self._requests[idx]
+        sess = self.system.sessions[req.sid]
+        # continuous batching: co-resident sessions share decode rounds until
+        # the ending session has produced all its tokens
+        while sess.state == "active" and sess.n_generated < sess.n_new:
+            self.system.decode_round()
+        done = self.system.retire_session(req.sid)
+        self.controller.finish(req.sid_ctl)
+        if done.state == "failed":  # unservable failover mid-generation
+            self._drop(req)
+        else:
+            wait = done.start - req.arrival
+            # virtual_time is the accumulated TRUE service time — equals
+            # prefill + (n_new-1)*per_token on a stable route, and stays
+            # correct when failover mid-generation changes the route cost
+            service = done.virtual_time
+            self.results[req.rid] = ServedRequest(
+                rid=req.rid, arrival=req.arrival, start=done.start,
+                first_token=wait + done.prefill_time,
+                per_token=(wait + service) / max(1, done.n_new),
+                total=wait + service,
+                tokens=np.asarray(done.tokens), wait=wait,
+                per_token_rest=done.per_token_time,
+                n_deferrals=req.deferrals)
+        # re-admission: retry deferred sessions in FIFO order; a client whose
+        # head-of-line request stays deferred keeps its later ones queued
+        still: List[int] = []
+        blocked_clients: set = set()
+        for didx in self._deferred:
+            dreq = self._requests[didx]
+            if dreq.client not in blocked_clients and \
+                    self.system.try_admit_session(dreq.sid, now=t):
+                dsess = self.system.sessions[dreq.sid]
+                heapq.heappush(
+                    self._events,
+                    (float(dsess.end), self._END, next(self._seq), didx))
+                self.max_concurrency = max(self.max_concurrency,
+                                           self.system.concurrency())
+            else:
+                blocked_clients.add(dreq.client)
+                still.append(didx)
+        self._deferred = still
+
+
+# Backwards-compatible name: the old serial AdmissionScheduler is subsumed —
+# one request at a time is just the R=1 special case of the event loop.
+AdmissionScheduler = ContinuousBatchingScheduler

@@ -4,11 +4,12 @@ from repro.sim.simulator import (ALGORITHMS, SimConfig, SimResult,
                                  run_comparison, simulate)
 from repro.sim.topologies import (TOPOLOGY_SPECS, Topology, make_topology,
                                   place_servers)
-from repro.sim.workload import Request, poisson_requests
+from repro.sim.workload import (Request, burst_requests, poisson_requests,
+                                prompts_for)
 
 __all__ = [
     "A100", "ALGORITHMS", "MIG", "Request", "SimConfig", "SimResult",
-    "TOPOLOGY_SPECS", "Topology", "clustered_scenario", "make_topology",
-    "place_servers", "poisson_requests", "run_comparison",
-    "scattered_scenario", "simulate",
+    "TOPOLOGY_SPECS", "Topology", "burst_requests", "clustered_scenario",
+    "make_topology", "place_servers", "poisson_requests", "prompts_for",
+    "run_comparison", "scattered_scenario", "simulate",
 ]

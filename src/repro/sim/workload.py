@@ -1,9 +1,16 @@
 """Poisson request workload (paper §4.1: N_R requests at rate λ from a
-proxy client)."""
+proxy client).
+
+The same trace feeds BOTH the discrete-event simulator
+(``repro.sim.simulator.simulate(..., requests=...)``) and the real engine
+(``repro.serving.ContinuousBatchingScheduler``) — the cross-validation in
+``benchmarks/engine_validation.py`` relies on byte-identical arrival
+processes on the two paths.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -16,9 +23,31 @@ class Request:
 
 
 def poisson_requests(n_requests: int, rate: float, client: int = 0,
-                     seed: int = 0) -> List[Request]:
+                     seed: int = 0,
+                     n_clients: Optional[int] = None) -> List[Request]:
+    """Poisson arrivals; with ``n_clients`` the issuing client is drawn
+    uniformly per request (multi-client traffic), otherwise all requests
+    come from ``client`` (the paper's proxy-client setup)."""
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate, size=n_requests)
     times = np.cumsum(gaps)
-    return [Request(rid=i, client=client, arrival=float(t))
-            for i, t in enumerate(times)]
+    if n_clients is not None:
+        clients = rng.integers(0, n_clients, size=n_requests)
+    else:
+        clients = np.full(n_requests, client)
+    return [Request(rid=i, client=int(c), arrival=float(t))
+            for i, (t, c) in enumerate(zip(times, clients))]
+
+
+def burst_requests(n_requests: int, at: float = 0.0, client: int = 0
+                   ) -> List[Request]:
+    """All requests arrive at once — the max-concurrency stress trace."""
+    return [Request(rid=i, client=client, arrival=float(at))
+            for i in range(n_requests)]
+
+
+def prompts_for(requests: Sequence[Request], l_in: int, vocab_size: int,
+                seed: int = 0) -> List[np.ndarray]:
+    """Deterministic per-request prompt tokens (ids >= 2) of length l_in."""
+    rng = np.random.default_rng(seed + 7)
+    return [rng.integers(2, vocab_size, size=l_in) for _ in requests]

@@ -1,0 +1,85 @@
+"""Shared test fixtures / shims.
+
+``hypothesis`` is an optional dev dependency (declared in
+requirements-dev.txt).  When it is missing we install a tiny API-compatible
+fallback into ``sys.modules`` *before* test collection so the property tests
+in test_core_bprr.py / test_routing_online.py / test_simulator.py still
+collect and run: ``@given(st.integers(a, b))`` draws a fixed number of
+deterministic pseudo-random examples per test instead of hypothesis' guided
+search.  With real hypothesis installed the shim is inert.
+"""
+from __future__ import annotations
+
+import sys
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:  # build the minimal fallback
+    import random
+    import types
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        """A strategy is just a draw(rng) callable."""
+
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    def _sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+    def _settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        """Returns a decorator stamping the example budget on the test."""
+
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def _given(*strategies, **kw_strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest must see a ZERO-argument
+            # signature (the drawn values are not fixtures).
+            def run():
+                n = getattr(run, "_shim_max_examples", _DEFAULT_EXAMPLES)
+                rng = random.Random(0xB9A11)
+                for _ in range(n):
+                    drawn = tuple(s.draw(rng) for s in strategies)
+                    kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                    fn(*drawn, **kw)
+
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run.__module__ = fn.__module__
+            run.hypothesis_shim = True
+            return run
+
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = _given
+    mod.settings = _settings
+    mod.assume = lambda cond: None
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = _integers
+    st_mod.floats = _floats
+    st_mod.booleans = _booleans
+    st_mod.sampled_from = _sampled_from
+
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

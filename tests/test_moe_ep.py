@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_reduced_config
+from repro.launch.mesh import compat_make_mesh
 from repro.models.layers import NULL_SH, ShardingCtx
 from repro.models import moe as moe_mod
 
@@ -33,8 +34,7 @@ def test_ep_matches_global():
 
     ref, aux_ref = moe_mod.apply_moe(params, cfg, NULL_SH, x)
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     sh = ShardingCtx(mesh, {"batch": "data", "seq_act": None})
     padded = _pad_params(params, E, 2 * E)
     got, aux = moe_mod._apply_moe_ep(padded, cfg, sh, x)

@@ -7,8 +7,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.configs import get_reduced_config
 from repro.data import make_batches
+from repro.launch.mesh import compat_make_mesh
 from repro.models import NULL_SH, init_params
 from repro.training import (TrainHParams, checkpoint, init_train_state,
                             int8_allreduce, make_optimizer,
@@ -66,14 +68,13 @@ def test_int8_allreduce_accuracy():
     from jax.sharding import PartitionSpec as P
 
     devs = jax.devices()
-    mesh = jax.make_mesh((len(devs),), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((len(devs),), ("x",))
     n = mesh.devices.size
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(n, 64, 8), jnp.float32)
 
-    f = jax.shard_map(lambda v: int8_allreduce(v[0], "x"), mesh=mesh,
-                      in_specs=P("x"), out_specs=P(), check_vma=False)
+    f = compat.shard_map(lambda v: int8_allreduce(v[0], "x"), mesh=mesh,
+                         in_specs=P("x"), out_specs=P())
     got = f(x)
     want = np.sum(np.asarray(x), axis=0)
     rel = np.abs(np.asarray(got) - want) / (np.abs(want) + 1e-3)
