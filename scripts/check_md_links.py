@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Markdown link check (stdlib only, used by the CI docs job).
+
+Verifies that every relative `[text](target)` link in the given markdown
+files/directories points at an existing file or directory.  External
+links (http/https/mailto) are skipped; `#anchor` suffixes are stripped
+(anchor existence is not checked).
+
+Usage:  python scripts/check_md_links.py README.md docs
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")  # links AND images
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def collect(paths):
+    for p in map(Path, paths):
+        if p.is_dir():
+            yield from sorted(p.rglob("*.md"))
+        else:
+            yield p
+
+
+def main(argv) -> int:
+    bad = []
+    n_links = 0
+    for md in collect(argv or ["README.md", "docs"]):
+        text = md.read_text(encoding="utf-8")
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:  # pure in-page anchor
+                continue
+            n_links += 1
+            if not (md.parent / target).exists():
+                line = text.count("\n", 0, m.start()) + 1
+                bad.append(f"{md}:{line}: broken link -> {m.group(1)}")
+    for b in bad:
+        print(b, file=sys.stderr)
+    print(f"checked {n_links} relative links, {len(bad)} broken")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

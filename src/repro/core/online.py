@@ -27,6 +27,10 @@ from repro.core.routing import ServerState, edge_waiting_times, ws_rr
 
 @dataclass
 class Session:
+    """One tracked session in the controller's bookkeeping: its committed
+    route and [start, end) interval on the virtual clock — the state that
+    feeds eq. (20) waiting estimates for later arrivals."""
+
     sid: int
     client: int
     route: Route

@@ -90,6 +90,10 @@ BLOOM_PETALS = LLMSpec(
 
 @dataclass(frozen=True)
 class Workload:
+    """Nominal request shape (§4.1): ``l_in`` prompt tokens in,
+    ``l_out`` generated tokens out — the lengths the cost and memory
+    models are evaluated at."""
+
     l_in: int = 20
     l_out: int = 128
 

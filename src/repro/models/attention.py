@@ -79,13 +79,16 @@ def _dense_attn(q, k, v, bias):
     return jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
 
 
-def _flash_attn(q, k, v, q_pos, kv_pos, window, slopes=None, causal=True):
+def _flash_attn(q, k, v, q_pos, kv_pos, window, slopes=None, causal=True,
+                q_start=0):
     """Double-chunked online-softmax attention (unrolled; no scan).
 
     (q-chunk, kv-chunk) pairs that are *statically* above the causal diagonal
     are skipped entirely — halving FLOPs vs dense-then-mask.  Safe with a
     traced ``window`` (a window only masks more, never less, than causal).
-    Assumes q_pos/kv_pos are aligned aranges when ``causal`` (self-attention).
+    Assumes q_pos/kv_pos are aligned aranges when ``causal`` (self-attention),
+    with queries offset by the static ``q_start`` (chunked prefill: queries
+    [q_start, q_start+S) attend over keys [0, q_start+S)).
     """
     B, S, H, D = q.shape
     T = k.shape[1]
@@ -109,7 +112,7 @@ def _flash_attn(q, k, v, q_pos, kv_pos, window, slopes=None, causal=True):
         acc = jnp.zeros((B, q_hi - q_lo, H, Dv), jnp.float32)
         for ki in range(n_kv):
             k_lo, k_hi = ki * KV_CHUNK, min(T, (ki + 1) * KV_CHUNK)
-            if causal and k_lo > q_hi - 1:
+            if causal and k_lo > q_start + q_hi - 1:
                 continue  # statically above the causal diagonal
             kc, vc = k[:, k_lo:k_hi], v[:, k_lo:k_hi]
             kp = kv_pos[k_lo:k_hi]
@@ -134,14 +137,20 @@ def _flash_attn(q, k, v, q_pos, kv_pos, window, slopes=None, causal=True):
 
 
 def attention_core(q, k, v, q_pos, kv_pos, window=None, slopes=None,
-                   causal=True):
-    """Dispatch dense vs flash based on static shapes."""
+                   causal=True, q_start=0):
+    """Dispatch dense vs flash based on static shapes.
+
+    ``q_start`` (static) is the absolute position of the first query — only
+    used by the flash path's static causal-skip when queries are a suffix of
+    the key range (chunked prefill); the mask itself is always positional.
+    """
     window = _BIG_WINDOW if window is None else window
     S, T = q.shape[1], k.shape[1]
     if T <= DENSE_MAX_T and S * T <= DENSE_MAX_T * DENSE_MAX_T // 4:
         bias = _mask_bias(q_pos, kv_pos, window, slopes, causal)
         return _dense_attn(q, k, v, bias)
-    return _flash_attn(q, k, v, q_pos, kv_pos, window, slopes, causal)
+    return _flash_attn(q, k, v, q_pos, kv_pos, window, slopes, causal,
+                       q_start)
 
 
 def decode_attention_xla(q, ck, cv, pos, window=None, slopes=None,
@@ -218,13 +227,20 @@ def gqa_encoder_kv(params, cfg: ModelConfig, sh: ShardingCtx, enc_h):
 
 
 def apply_gqa_full(params, cfg: ModelConfig, sh: ShardingCtx, x, positions,
-                   window=None, cross_kv=None):
+                   window=None, cross_kv=None, prefix_kv=None):
     """Full-sequence attention (train / prefill).
 
     Returns (out, (k, v)) — k/v in un-expanded (B,S,Kv,hd) layout for caching
     (None for cross-attention).  ``cross_kv``: encoder (k, v) — non-causal.
+
+    ``prefix_kv``: optional (k, v) of an already-prefilled prefix (chunked
+    prefill).  The chunk's queries attend over prefix + chunk keys; the
+    returned cache entry holds only the CHUNK's k/v (the prefix is already
+    cached).  ``positions`` must then be ``P + arange(S_chunk)`` where P is
+    the prefix length.
     """
     causal = cross_kv is None
+    q_start = 0
     q = _q_proj(params, cfg, x)
     if causal:
         k, v = _kv_proj(params, cfg, x)
@@ -237,8 +253,15 @@ def apply_gqa_full(params, cfg: ModelConfig, sh: ShardingCtx, x, positions,
             k = apply_rope(k, cos, sin)
         k = sh.act(k, "batch", "seq", "kv_heads_act", None)
         v = sh.act(v, "batch", "seq", "kv_heads_act", None)
-        kv_pos = positions
         kv_out = (k, v)
+        if prefix_kv is not None:
+            pk, pv = prefix_kv
+            q_start = pk.shape[1]
+            k = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+            v = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+            kv_pos = jnp.arange(k.shape[1])
+        else:
+            kv_pos = positions
     else:
         k, v = cross_kv
         kv_pos = jnp.arange(k.shape[1])
@@ -254,7 +277,7 @@ def apply_gqa_full(params, cfg: ModelConfig, sh: ShardingCtx, x, positions,
     v_exp = jnp.repeat(v, G, axis=2) if G > 1 else v
     slopes = alibi_slopes(cfg.n_heads) if cfg.pos_kind == "alibi" else None
     out = attention_core(q, k_exp, v_exp, positions, kv_pos, window, slopes,
-                         causal=causal)
+                         causal=causal, q_start=q_start)
     out = sh.act(out, "batch", "attn_seq_q", "heads_act", None)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return y, kv_out
@@ -337,29 +360,45 @@ def mla_latent(params, cfg: ModelConfig, x, positions):
     return latent, k_rope
 
 
-def apply_mla_full(params, cfg: ModelConfig, sh: ShardingCtx, x, positions):
+def apply_mla_full(params, cfg: ModelConfig, sh: ShardingCtx, x, positions,
+                   prefix_kv=None):
     """Full-sequence MLA (unabsorbed — faithful for train/prefill).
 
-    Returns (out, (latent, k_rope)) for caching.
+    Returns (out, (latent, k_rope)) for caching.  ``prefix_kv``: optional
+    (latent, k_rope) of an already-prefilled prefix (chunked prefill); the
+    prefix latents are up-projected alongside the chunk's and the chunk's
+    queries attend over both.  The returned cache entry holds only the
+    CHUNK's latent/k_rope.
     """
     q_nope, q_rope = _mla_q(params, cfg, x, positions)
     latent, k_rope = mla_latent(params, cfg, x, positions)
+    kv_out = (latent, k_rope)
+    q_start = 0
+    if prefix_kv is not None:
+        plat, pkr = prefix_kv
+        q_start = plat.shape[1]
+        latent = jnp.concatenate([plat.astype(latent.dtype), latent], axis=1)
+        k_rope = jnp.concatenate([pkr.astype(k_rope.dtype), k_rope], axis=1)
+        kv_pos = jnp.arange(latent.shape[1])
+    else:
+        kv_pos = positions
     k_nope = jnp.einsum("bsl,lhk->bshk", latent, params["wuk"].astype(x.dtype))
     v = jnp.einsum("bsl,lhk->bshk", latent, params["wuv"].astype(x.dtype))
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
-    k = jnp.concatenate(
-        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], q_rope.shape)], axis=-1
-    )
+    krope_bc = jnp.broadcast_to(
+        k_rope[:, :, None, :],
+        k_nope.shape[:3] + (k_rope.shape[-1],))
+    k = jnp.concatenate([k_nope, krope_bc], axis=-1)
     q = sh.act(q, "batch", "seq", "heads_act", None)
     k = sh.act(k, "batch", "seq", "heads_act", None)
     v = sh.act(v, "batch", "seq", "heads_act", None)
-    out = attention_core(q, k, v, positions, positions)
+    out = attention_core(q, k, v, positions, kv_pos, q_start=q_start)
     out = sh.act(out, "batch", "seq", "heads_act", None)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     # steer XLA to reduce-scatter (not all-reduce + slice) into the
     # sequence-sharded residual layout (hillclimb A iter 3)
     y = sh.act(y, "batch", "seq_act", None)
-    return y, (latent, k_rope)
+    return y, kv_out
 
 
 def apply_mla_decode(params, cfg: ModelConfig, sh: ShardingCtx, x,

@@ -72,15 +72,23 @@ def init_decoder_block(key, cfg: ModelConfig):
 
 
 def decoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h, positions,
-                       layer_idx=0):
-    """Full-sequence decoder block.  Returns (h, cache_entry, aux)."""
+                       layer_idx=0, prefix_kv=None):
+    """Full-sequence decoder block.  Returns (h, cache_entry, aux).
+
+    ``prefix_kv``: optional already-cached prefix for chunked prefill — a
+    (k, v) pair for GQA or (latent, krope) for MLA covering positions
+    [0, P).  ``positions`` must then be ``P + arange(S)``.  The returned
+    ``cache_entry`` always covers only the positions in ``h``.
+    """
     win = window_for_layer(cfg, layer_idx)
     x = apply_norm(params["ln1"], cfg, h)
     if cfg.attn_kind == "mla":
-        a, kv = attn.apply_mla_full(params["attn"], cfg, sh, x, positions)
+        a, kv = attn.apply_mla_full(params["attn"], cfg, sh, x, positions,
+                                    prefix_kv=prefix_kv)
         cache = {"latent": kv[0], "krope": kv[1]}
     else:
-        a, kv = attn.apply_gqa_full(params["attn"], cfg, sh, x, positions, win)
+        a, kv = attn.apply_gqa_full(params["attn"], cfg, sh, x, positions, win,
+                                    prefix_kv=prefix_kv)
         cache = {"k": kv[0], "v": kv[1]}
     if cfg.sandwich_norm:
         a = apply_norm(params["post_ln1"], cfg, a)

@@ -1,13 +1,19 @@
+"""The continuous-batching geo serving engine (see docs/serving.md):
+per-server cache pools, pooled decode + bucketed prefill steps, the
+event-loop scheduler, and the session/request record types."""
 from repro.serving.engine import (BlockServer, EngineSession,
                                   GeoServingSystem, generate)
-from repro.serving.kv_cache import (CachePool, make_pool_decode_step,
-                                    new_block_cache, new_cache_pool_tree,
-                                    write_prefill_kv)
+from repro.serving.kv_cache import (CachePool, bucket_for,
+                                    default_prefill_buckets,
+                                    make_pool_decode_step,
+                                    make_pool_prefill_step, new_block_cache,
+                                    new_cache_pool_tree, write_prefill_kv)
 from repro.serving.scheduler import (AdmissionScheduler,
                                      ContinuousBatchingScheduler,
                                      ServedRequest)
 
 __all__ = ["AdmissionScheduler", "BlockServer", "CachePool",
            "ContinuousBatchingScheduler", "EngineSession", "GeoServingSystem",
-           "ServedRequest", "generate", "make_pool_decode_step",
+           "ServedRequest", "bucket_for", "default_prefill_buckets",
+           "generate", "make_pool_decode_step", "make_pool_prefill_step",
            "new_block_cache", "new_cache_pool_tree", "write_prefill_kv"]

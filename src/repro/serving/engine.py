@@ -48,7 +48,10 @@ from repro.core.placement import petals_bp
 from repro.core.routing import petals_route, shortest_path_route
 from repro.models.layers import NULL_SH, embed_tokens, lm_head
 from repro.models.model import stack_plan
-from repro.serving.kv_cache import (CachePool, make_pool_decode_step,
+from repro.serving.kv_cache import (CachePool, bucket_for,
+                                    default_prefill_buckets,
+                                    make_pool_decode_step,
+                                    make_pool_prefill_step,
                                     make_prefill_block)
 
 
@@ -65,7 +68,9 @@ def _block_kind(cfg: ModelConfig) -> str:
 
 @dataclass
 class EngineSession:
-    """Client-side state for one session."""
+    """Client-side state for one session: its route, token buffer, per-hop
+    input history (the failover replay cache), and the virtual-clock
+    accounting (prefill / per-token / end times per eq. (1))."""
 
     sid: int
     client: int
@@ -77,7 +82,7 @@ class EngineSession:
     pos: int = 0  # next cache write position
     tokens: List[int] = field(default_factory=list)  # prompt + generated
     n_generated: int = 0
-    state: str = "admitted"  # admitted | active | done
+    state: str = "admitted"  # admitted | prefilling | active | failed | done
     # per-hop input history (the PETALS fault-tolerance cache)
     hop_inputs: List[List[jnp.ndarray]] = field(default_factory=list)
     virtual_time: float = 0.0  # accumulated service time (prefill + decode)
@@ -90,7 +95,14 @@ class EngineSession:
 
 
 class BlockServer:
-    """One 'server': params for its block range + a stacked session pool."""
+    """One 'server': params for its block range + a stacked session pool.
+
+    Exposes two pooled compute entry points, both vmapped over the pool's
+    rows and scanned over the hosted block range so they trace once per
+    server: :meth:`decode_rows` (one token for every masked row) and
+    :meth:`prefill_rows` (one padded prompt chunk for every masked row — the
+    bucket-group prefill path).
+    """
 
     def __init__(self, sid: int, cfg: ModelConfig, params, a: int, m: int,
                  *, n_rows: int, max_len: int, cap_slots: int,
@@ -109,6 +121,7 @@ class BlockServer:
         self.slowdown = slowdown
         self._step = make_pool_decode_step(cfg, self.kind)
         self._prefill_block = make_prefill_block(cfg, self.kind)
+        self._prefill_pool = make_pool_prefill_step(cfg, self.kind)
 
     # -- session admission bookkeeping --------------------------------------
     def fits(self, sid: int, k_blocks: int) -> bool:
@@ -145,6 +158,16 @@ class BlockServer:
                                       entries, S)
         return h
 
+    def prefill_rows(self, h_rows, layer_active, offset: int = 0):
+        """THE batched prefill: one jitted call prefills a (padded) prompt
+        chunk starting at ``offset`` for every masked row, writing the
+        chunk's K/V (or rwkv state) into the pool."""
+        assert self.alive, f"server {self.sid} is dead"
+        h_out, self.pool.tree = self._prefill_pool(
+            self.stacked, self.pool.tree, h_rows, layer_active,
+            self.layer_ids, offset)
+        return h_out
+
     def decode_rows(self, h_rows, pos_rows, layer_active):
         """THE batched step: one jitted call decodes all masked rows."""
         assert self.alive, f"server {self.sid} is dead"
@@ -166,15 +189,49 @@ class BlockServer:
         return h_out[row][None]
 
 
+@dataclass
+class _PrefillGroup:
+    """Co-admitted sessions sharing one route and one prompt-length bucket,
+    prefilled together in chunk rounds through the pooled prefill step.
+
+    ``bucket is None`` marks a chunked group: prompts longer than the
+    largest bucket, processed in max-bucket-sized chunks that interleave
+    with decode rounds (``GeoServingSystem.prefill_round``).
+    """
+
+    route: Route
+    bucket: Optional[int]
+    members: List[EngineSession]
+    offset: int = 0  # tokens prefilled so far (next chunk start)
+    # per-sid per-hop activation chunks, stitched into the client-side
+    # failover cache (EngineSession.hop_inputs) at completion
+    hop_chunks: Dict[int, List[List[jnp.ndarray]]] = field(
+        default_factory=dict)
+
+
 class GeoServingSystem:
     """Client-centric distributed inference with online BPRR and
-    continuous batching across sessions."""
+    continuous batching across sessions — for both decode (one pooled step
+    per server per round) and prefill (bucket groups of co-admitted
+    sessions, padded to a shared prompt-length bucket).
+
+    ``prefill_mode``: "batched" (default) coalesces same-round admissions
+    into bucket groups; "serial" keeps the legacy one-session-per-call
+    prefill — the bit-for-bit reference path for the batched one.
+    ``prefill_buckets``: prompt-length buckets; prompts are right-padded to
+    the smallest fitting bucket, and prompts longer than the largest bucket
+    are prefilled in max-bucket-sized chunks that interleave with decode
+    rounds.  Defaults to powers of two up to ``max_seq_len`` (no chunking).
+    """
 
     def __init__(self, cfg: ModelConfig, params, problem: Problem,
                  algorithm: str = "proposed", R: Optional[int] = None,
                  max_new_tokens: int = 64, max_sessions: int = 8,
-                 max_seq_len: Optional[int] = None):
+                 max_seq_len: Optional[int] = None,
+                 prefill_mode: str = "batched",
+                 prefill_buckets: Optional[Tuple[int, ...]] = None):
         assert problem.L == cfg.n_layers
+        assert prefill_mode in ("batched", "serial"), prefill_mode
         self.cfg = cfg
         self.params = params
         self.problem = problem
@@ -184,6 +241,14 @@ class GeoServingSystem:
         self.max_seq_len = int(
             max_seq_len if max_seq_len is not None
             else problem.workload.l_in + max_new_tokens + 32)
+        self.prefill_mode = prefill_mode
+        self._kind = _block_kind(cfg)
+        if prefill_buckets is None:
+            prefill_buckets = default_prefill_buckets(self.max_seq_len)
+        self.prefill_buckets = tuple(sorted(
+            {min(int(b), self.max_seq_len) for b in prefill_buckets}))
+        assert self.prefill_buckets, "prefill_buckets must be non-empty"
+        self._prefill_groups: List[_PrefillGroup] = []
         if algorithm == "proposed":
             from repro.core.placement import auto_R, cg_bp
             self.R = R if R is not None else auto_R(problem, 0.1, 60.0)
@@ -259,28 +324,184 @@ class GeoServingSystem:
                    for j, k in zip(sess.route.servers, sess.route.blocks))
 
     def try_admit_session(self, sid: int, now: float = 0.0) -> bool:
-        """Claim slots and run the prefill.  Returns False (and claims
-        nothing) when some server's pool is exhausted — the caller defers
-        and re-admits after a retirement."""
-        sess = self.sessions[sid]
-        if not self.fits_session(sid):
-            return False
-        for j, k in zip(sess.route.servers, sess.route.blocks):
-            self.servers[j].admit(sid, k)
-        sess.start = now
-        self._prefill(sess)
-        sess.state = "active"
-        sess.end = (sess.start + sess.prefill_time
-                    + max(sess.n_new - 1, 0) * sess.per_token_time)
-        # the prefill's last-position logits give the first generated token
-        logits = self._lm_head(self.params["embed"], sess._h[:, -1:])
-        sess.last_logits = logits[0, 0]
-        sess.tokens.append(int(jnp.argmax(logits[0, 0])))
-        sess.n_generated = 1
-        sess._h = None
-        return True
+        """Claim slots and run the prefill to completion (synchronous
+        single-session admission; any other pending prefill groups are also
+        driven to completion).  Returns False (and claims nothing) when
+        some server's pool is exhausted — the caller defers and re-admits
+        after a retirement."""
+        ok = self.try_admit_sessions([sid], now=now)
+        if ok:
+            self.drain_prefill()
+        return bool(ok)
 
-    def _prefill(self, sess: EngineSession):
+    def try_admit_sessions(self, sids: List[int], now: float = 0.0
+                           ) -> List[int]:
+        """Claim slots for every session that fits and coalesce the admitted
+        ones into bucket groups for batched prefill.  Returns the admitted
+        sids; the rest claimed nothing (the caller defers them).
+
+        Within one batch, admission is FIFO per client: once an earlier
+        session of a client fails to fit, later sessions of the same client
+        are not attempted (they would otherwise overtake it).
+
+        Prefill compute does NOT run here — the caller advances it with
+        :meth:`prefill_round` (interleaving decode rounds between chunks) or
+        :meth:`drain_prefill`.  In ``prefill_mode="serial"`` the legacy
+        one-session-at-a-time prefill runs immediately instead.
+        """
+        admitted: List[EngineSession] = []
+        failed_clients: set = set()
+        for sid in sids:
+            sess = self.sessions[sid]
+            if sess.client in failed_clients or not self.fits_session(sid):
+                failed_clients.add(sess.client)
+                continue
+            for j, k in zip(sess.route.servers, sess.route.blocks):
+                self.servers[j].admit(sid, k)
+            sess.start = now
+            admitted.append(sess)
+        if not admitted:
+            return []
+        if self.prefill_mode == "serial":
+            for sess in admitted:
+                self._prefill_serial(sess)
+                self._finalize_prefill(sess, sess._h[:, -1:])
+            return [s.sid for s in admitted]
+        # batched: group by (route, bucket).  rwkv states are recurrent, so
+        # rwkv groups use the EXACT prompt length (no padding, no chunking);
+        # decoder prompts longer than the largest bucket go to the chunked
+        # group of their route (bucket None).
+        groups: Dict[Tuple[Route, Optional[int]], List[EngineSession]] = {}
+        for sess in admitted:
+            sess.state = "prefilling"
+            if self._kind == "rwkv":
+                b: Optional[int] = sess.prompt_len
+            else:
+                b = bucket_for(self.prefill_buckets, sess.prompt_len)
+            groups.setdefault((sess.route, b), []).append(sess)
+        for (route, b), members in groups.items():
+            self._prefill_groups.append(_PrefillGroup(
+                route=route, bucket=b, members=members,
+                hop_chunks={s.sid: [[] for _ in route.servers]
+                            for s in members}))
+        return [s.sid for s in admitted]
+
+    # -- batched prefill ------------------------------------------------
+    def has_pending_prefill(self) -> bool:
+        """True while some admitted session still has prompt chunks left."""
+        return bool(self._prefill_groups)
+
+    def prefill_round(self) -> List[int]:
+        """Advance every pending bucket group by ONE chunk round (all hops).
+        Sessions whose prompt completes become active and emit their first
+        token.  Returns their sids.  Callers interleave this with
+        :meth:`decode_round` so long chunked prompts do not head-of-line
+        block resident sessions."""
+        done: List[int] = []
+        still: List[_PrefillGroup] = []
+        for g in self._prefill_groups:
+            done.extend(self._prefill_group_round(g))
+            if any(s.prompt_len > g.offset for s in g.members):
+                still.append(g)
+        self._prefill_groups = still
+        return done
+
+    def drain_prefill(self):
+        """Run prefill rounds until no admitted session is mid-prompt."""
+        while self._prefill_groups:
+            self.prefill_round()
+
+    def _prefill_plan(self, prompt_len: int) -> List[Tuple[int, int, int]]:
+        """Deterministic chunk plan [(offset, span, t_pad), ...] for one
+        prompt — a function of the prompt length ONLY (never of group
+        co-members), so a session runs the exact same pooled programs
+        whether admitted alone or inside a bucket group, and failover
+        replay can rebuild bit-identical caches from the plan."""
+        if self._kind == "rwkv":  # recurrent state: exact length, one shot
+            return [(0, prompt_len, prompt_len)]
+        b = bucket_for(self.prefill_buckets, prompt_len)
+        if b is not None:
+            return [(0, prompt_len, min(b, self.max_seq_len))]
+        chunk_unit = max(self.prefill_buckets)
+        plan: List[Tuple[int, int, int]] = []
+        off = 0
+        while off < prompt_len:
+            t_pad = min(chunk_unit, self.max_seq_len - off)
+            plan.append((off, min(prompt_len - off, t_pad), t_pad))
+            off += t_pad
+        return plan
+
+    def _prefill_group_round(self, g: _PrefillGroup) -> List[int]:
+        """One chunk round for one bucket group: embed the (padded) token
+        chunk of every member, run the pooled prefill step per hop, account
+        the virtual clock, and finalize members whose prompt completed."""
+        active = [s for s in g.members if s.prompt_len > g.offset]
+        # this round's padded width comes from the SAME plan failover replay
+        # uses (any active member's plan has an entry at g.offset, and t_pad
+        # is session-independent by construction) — one source of truth for
+        # the chunk schedule
+        ref_len = max(s.prompt_len for s in active)
+        t_pad = next(tp for off, _, tp in self._prefill_plan(ref_len)
+                     if off == g.offset)
+        spans = {s.sid: min(s.prompt_len - g.offset, t_pad) for s in active}
+        for s in active:
+            chunk = s.tokens[g.offset: g.offset + spans[s.sid]]
+            chunk = chunk + [0] * (t_pad - len(chunk))
+            s._h = self._embed(self.params["embed"],
+                               jnp.asarray([chunk], jnp.int32))
+        e = 0
+        for hop, (j, k) in enumerate(zip(g.route.servers, g.route.blocks)):
+            srv = self.servers[j]
+            N = srv.pool.n_rows
+            d = active[0]._h.shape[-1]
+            h_buf = np.zeros((N, t_pad, d), np.asarray(active[0]._h).dtype)
+            mask = np.zeros((srv.m, N), bool)
+            for s in active:
+                row = srv.pool.rows[s.sid]
+                # client-side failover cache: the UNPADDED chunk entering
+                # this hop (stitched to the full prompt at completion)
+                g.hop_chunks[s.sid][hop].append(s._h[:, : spans[s.sid]])
+                h_buf[row] = np.asarray(s._h[0])
+                mask[e - srv.a: e + k - srv.a, row] = True
+            h_out = srv.prefill_rows(jnp.asarray(h_buf), jnp.asarray(mask),
+                                     g.offset)
+            for s in active:
+                s._h = h_out[srv.pool.rows[s.sid]][None]
+            # Virtual clock, consistent with eq. (1): the group's chunk
+            # travels the hop as ONE message — its members share a single
+            # RTT — and each session is charged its own k·τ_prefill of
+            # block compute (member rows overlap inside the pooled step).
+            # Per-session latency therefore equals the serial eq. (1) value
+            # for unchunked groups; chunked prompts pay one RTT per chunk
+            # per hop plus τ^I evaluated at the actual chunk length.
+            for s in active:
+                # unchunked groups bill the workload's nominal l_in (like
+                # the simulator); chunked prompts bill the actual span
+                tau = self.problem.servers[j].tau_prefill(
+                    self.problem.workload.l_in if g.bucket is not None
+                    else spans[s.sid])
+                s.prefill_time += (self.problem.rtt_prefill[s.client, j]
+                                   + k * tau * srv.slowdown)
+            e += k
+        g.offset += t_pad
+        done: List[int] = []
+        for s in active:
+            if s.prompt_len <= g.offset:
+                for hop in range(len(g.route.servers)):
+                    parts = g.hop_chunks[s.sid][hop]
+                    s.hop_inputs[hop].append(
+                        parts[0] if len(parts) == 1
+                        else jnp.concatenate(parts, axis=1))
+                self._finalize_prefill(s, s._h[:, spans[s.sid] - 1:
+                                               spans[s.sid]])
+                done.append(s.sid)
+        return done
+
+    def _prefill_serial(self, sess: EngineSession):
+        """Legacy one-session-per-call prefill — the exact-length reference
+        path for the bucketed one (identical token streams; the bucketed
+        path's *structural* bit guarantee is solo-vs-group through the same
+        pooled program): per-layer block calls, eq. (1) accounting."""
         prompt = jnp.asarray(sess.tokens[: sess.prompt_len],
                              jnp.int32)[None, :]
         h = self._embed(self.params["embed"], prompt)
@@ -296,10 +517,22 @@ class GeoServingSystem:
                 + k * self.problem.servers[j].tau_prefill(
                     self.problem.workload.l_in) * srv.slowdown)
             e += k
+        sess._h = h
+
+    def _finalize_prefill(self, sess: EngineSession, h_last):
+        """Prefill done: close the virtual-clock accounting and emit the
+        first generated token from the prompt's last-position logits."""
         sess.pos = sess.prompt_len
         sess.virtual_time += sess.prefill_time
         sess.per_token_time = self._route_per_token(sess)
-        sess._h = h
+        sess.state = "active"
+        sess.end = (sess.start + sess.prefill_time
+                    + max(sess.n_new - 1, 0) * sess.per_token_time)
+        logits = self._lm_head(self.params["embed"], h_last)
+        sess.last_logits = logits[0, 0]
+        sess.tokens.append(int(jnp.argmax(logits[0, 0])))
+        sess.n_generated = 1
+        sess._h = None
 
     def _route_per_token(self, sess: EngineSession) -> float:
         t = 0.0
@@ -411,6 +644,11 @@ class GeoServingSystem:
         sess = self.sessions.pop(sid, None)
         if sess is None:
             return None
+        if sess.state == "prefilling":  # dropped mid-prompt: leave its group
+            for g in self._prefill_groups:
+                g.members = [s for s in g.members if s.sid != sid]
+            self._prefill_groups = [g for g in self._prefill_groups
+                                    if g.members]
         if sess.state != "failed":
             sess.state = "done"
         for j in set(sess.route.servers):
@@ -419,7 +657,9 @@ class GeoServingSystem:
         return sess
 
     def concurrency(self) -> int:
-        return sum(1 for s in self.sessions.values() if s.state == "active")
+        """Sessions currently holding cache slots (prefilling or decoding)."""
+        return sum(1 for s in self.sessions.values()
+                   if s.state in ("active", "prefilling"))
 
     def slot_usage(self) -> Dict[int, Tuple[int, int]]:
         """{server: (block-slots used, capacity)} — invariant-check hook."""
@@ -514,6 +754,37 @@ class GeoServingSystem:
         route, _ = shortest_path_route(subproblem, sub, client)
         return route.servers if route is not None else None
 
+    def _replay_prefill_range(self, sess: EngineSession, j: int, lo: int,
+                              hi: int, h_full):
+        """Failover replay of one hop's prompt prefill.  In batched mode the
+        replay follows the session's deterministic chunk plan through the
+        SAME pooled programs that built the original caches — zero pad
+        columns are bit-equivalent to the originals because padded positions
+        are causally masked out of every valid position's computation — so
+        the rebuilt caches are bit-identical.  Serial mode keeps the legacy
+        exact-length replay."""
+        srv = self.servers[j]
+        if self.prefill_mode == "serial":
+            return srv.prefill_range(sess.sid, h_full, lo, hi,
+                                     jnp.arange(h_full.shape[1]))
+        N = srv.pool.n_rows
+        d = h_full.shape[-1]
+        row = srv.pool.rows[sess.sid]
+        mask = np.zeros((srv.m, N), bool)
+        mask[lo - srv.a: hi - srv.a, row] = True
+        mask = jnp.asarray(mask)
+        outs = []
+        for off, span, t_pad in self._prefill_plan(h_full.shape[1]):
+            chunk = h_full[:, off: off + span]
+            if t_pad > span:
+                chunk = jnp.concatenate(
+                    [chunk, jnp.zeros((1, t_pad - span, d), chunk.dtype)], 1)
+            h_buf = jnp.zeros((N, t_pad, d), chunk.dtype).at[row].set(
+                chunk[0])
+            h_out = srv.prefill_rows(h_buf, mask, off)
+            outs.append(h_out[row][None, :span])
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+
     def _failover(self, sess: EngineSession, hop: int):
         """Replace the dead server at ``hop`` by a chain of alive servers and
         replay the client-side cached inputs to rebuild their caches."""
@@ -547,11 +818,9 @@ class GeoServingSystem:
         # later failure of any replacement hop replays correct activations
         new_histories: List[List[jnp.ndarray]] = [[] for _ in repl_routes]
         hs = prompt_h
-        positions = jnp.arange(S)
         for i, (j, lo, hi2) in enumerate(repl_routes):
             new_histories[i].append(hs)
-            hs = self.servers[j].prefill_range(sess.sid, hs, lo, hi2,
-                                               positions)
+            hs = self._replay_prefill_range(sess, j, lo, hi2, hs)
         # replay each decoded token
         for t_idx, h_tok in enumerate(inputs[1:]):
             pos = S + t_idx

@@ -22,7 +22,7 @@ commitment.
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +36,9 @@ from repro.configs.base import ModelConfig
 
 
 def new_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    """Allocate one per-(server, session, layer) cache: KV tensors for
+    ``decoder`` blocks (MLA latent/krope when ``cfg.attn_kind == 'mla'``) or
+    recurrent state for ``rwkv`` blocks."""
     cdt = jnp.dtype(cfg.param_dtype)
     if kind == "decoder":
         if cfg.attn_kind == "mla":
@@ -190,6 +193,124 @@ class CachePool:
             else:
                 t[key] = t[key].at[lo_rel:hi_rel, row].set(stacked)
         self.tree = t
+
+
+# ---------------------------------------------------------------------------
+# Prompt-length bucketing (batched prefill)
+# ---------------------------------------------------------------------------
+
+
+def default_prefill_buckets(max_prompt_len: int, base: int = 8
+                            ) -> Tuple[int, ...]:
+    """Power-of-two bucket lengths up to ``max_prompt_len``.
+
+    The returned tuple always ends with ``max_prompt_len`` itself, so by
+    default every admissible prompt fits some bucket and chunking never
+    triggers; pass an explicit smaller bucket set to the engine to force
+    chunked prefill for long prompts.
+    """
+    max_prompt_len = int(max_prompt_len)
+    assert max_prompt_len >= 1
+    out: List[int] = []
+    b = base
+    while b < max_prompt_len:
+        out.append(b)
+        b *= 2
+    out.append(max_prompt_len)
+    return tuple(out)
+
+
+def bucket_for(buckets: Sequence[int], length: int) -> Optional[int]:
+    """Smallest bucket >= ``length``; None when the prompt overflows every
+    bucket (the engine then chunks it into max-bucket-sized pieces)."""
+    for b in sorted(buckets):  # callers need not pre-sort
+        if b >= length:
+            return int(b)
+    return None
+
+
+@functools.lru_cache(maxsize=None)
+def make_pool_prefill_step(cfg: ModelConfig, kind: str):
+    """Build THE jitted multi-session prefill step, shared per (cfg, kind).
+
+    pstep(stacked_params, pool_tree, h, layer_active, layer_ids, offset=0)
+      -> (h, pool_tree)
+
+    * ``h``: (n_rows, T_chunk, d_model) right-padded hidden rows — one row
+      per co-admitted session of a bucket group (same row indices as the
+      decode step),
+    * ``offset``: STATIC chunk start position (0 for unchunked prompts);
+      decoder rows attend over their pool cache [0, offset) (the previously
+      prefilled chunks) plus the chunk itself, and the chunk's K/V is written
+      at [offset, offset+T_chunk),
+    * ``layer_active``: (n_layers, n_rows) bool — row r runs layer l iff set;
+      inactive rows keep their hidden state and cache untouched,
+    * ``layer_ids``: (n_layers,) int32 absolute layer indices.
+
+    Like the decode step, the program depends only on shapes — never on
+    which rows carry sessions — so per-session results are bit-for-bit
+    identical between a group of one and a full bucket group.  The program
+    retraces per (n_layers, n_rows, T_chunk, offset); buckets and chunk
+    offsets keep that set small and bounded.
+
+    RWKV pools must be called with ``offset == 0`` and ``T_chunk`` equal to
+    the TRUE prompt length (no padding, no chunking): the state is recurrent,
+    so trailing pad tokens would corrupt it.  The engine therefore groups
+    rwkv sessions by exact prompt length.
+    """
+    from repro.models import blocks as B
+    from repro.models.layers import NULL_SH
+
+    def step(stacked_params, pool_tree, h, layer_active, layer_ids, offset):
+        T = h.shape[1]
+        positions = offset + jnp.arange(T)
+
+        def body(hc, xs):
+            p, cache, active, lid = xs
+
+            if kind == "decoder":
+                mla = "latent" in cache
+
+                def one(hr, cr):
+                    if mla:
+                        prefix = (cr["latent"][None, :offset],
+                                  cr["krope"][None, :offset])
+                    else:
+                        prefix = (cr["k"][None, :offset],
+                                  cr["v"][None, :offset])
+                    hh, cc, _ = B.decoder_block_full(
+                        p, cfg, NULL_SH, hr[None], positions, lid,
+                        prefix_kv=prefix)
+                    return hh[0], jax.tree.map(lambda x: x[0], cc)
+
+                h2, chunk = jax.vmap(one)(hc, cache)
+                # masked ranged write of the chunk's entries at
+                # [offset, offset+T) — inactive rows keep their old cache
+                c2 = dict(cache)
+                for key, val in chunk.items():
+                    old = cache[key][:, offset:offset + T]
+                    msk = active.reshape((-1,) + (1,) * (val.ndim - 1))
+                    c2[key] = cache[key].at[:, offset:offset + T].set(
+                        jnp.where(msk, val.astype(old.dtype), old))
+            else:  # rwkv: full-sequence, exact length, whole-state write
+                def one(hr):
+                    hh, st = B.rwkv_block_full(p, cfg, NULL_SH, hr[None])
+                    return hh[0], jax.tree.map(lambda x: x[0], st)
+
+                h2, st = jax.vmap(one)(hc)
+                c2 = jax.tree.map(
+                    lambda new, old: jnp.where(
+                        active.reshape((-1,) + (1,) * (new.ndim - 1)),
+                        new.astype(old.dtype), old),
+                    st, cache)
+            h2 = jnp.where(active[:, None, None], h2, hc)
+            return h2, c2
+
+        h, new_pool = jax.lax.scan(
+            body, h, (stacked_params, pool_tree, layer_active, layer_ids))
+        return h, new_pool
+
+    return jax.jit(step, static_argnums=(5,))
 
 
 @functools.lru_cache(maxsize=None)

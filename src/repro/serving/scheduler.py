@@ -8,9 +8,14 @@ sessions sharing the per-server cache pools (one jitted step per server per
 round).  The event loop:
 
   arrival  →  OnlineBPRR.admit (WS-RR route + committed start)
-  start    →  engine.try_admit_session (slots claimed, prefill runs);
-              a start that would overbook cache slots is DEFERRED and
-              re-admitted at the next retirement (no-overbooking invariant)
+  start    →  same-timestamp starts are COALESCED into one batch:
+              engine.try_admit_sessions claims slots and groups the
+              admitted sessions by (route, prompt-length bucket) for
+              batched prefill; chunk rounds then interleave with decode
+              rounds so long prompts never head-of-line block resident
+              sessions.  A start that would overbook cache slots is
+              DEFERRED and re-admitted at the next retirement
+              (no-overbooking invariant)
   end      →  co-resident sessions decode in shared batched rounds until the
               ending session has all its tokens; it then retires, frees its
               block-slots, and deferred sessions are re-admitted
@@ -35,6 +40,10 @@ from repro.serving.engine import GeoServingSystem
 
 @dataclass
 class ServedRequest:
+    """Per-request result record: the §4.1 latency metrics on the virtual
+    clock (wait, first-token, per-token) plus the generated tokens and the
+    deferral/drop bookkeeping."""
+
     rid: int
     arrival: float
     start: float
@@ -63,9 +72,13 @@ class _Pending:
 class ContinuousBatchingScheduler:
     """Admission + continuous batching over a :class:`GeoServingSystem`."""
 
-    # event-kind priorities at equal timestamps: retire before start before
-    # a new arrival, so freed slots are visible to later decisions
-    _END, _START, _ARRIVAL = 0, 1, 2
+    # event-kind priorities at equal timestamps: retire first (freed slots
+    # visible to later decisions), then ALL arrivals, then starts.  Arrivals
+    # only touch controller bookkeeping — never engine slots — so admitting
+    # them before same-time starts changes no decision, and it guarantees a
+    # same-timestamp burst's zero-wait starts are all in the heap before the
+    # first one pops: they coalesce into one bucket-group admission batch.
+    _END, _ARRIVAL, _START = 0, 1, 2
 
     def __init__(self, system: GeoServingSystem, R: Optional[int] = None,
                  arrival_rate: float = 0.1):
@@ -100,7 +113,13 @@ class ContinuousBatchingScheduler:
             if prio == self._ARRIVAL:
                 self._on_arrival(t, idx)
             elif prio == self._START:
-                self._on_start(t, idx)
+                # coalesce same-timestamp starts into one admission batch —
+                # they form the engine's bucket groups for batched prefill
+                idxs = [idx]
+                while (self._events and self._events[0][0] == t
+                       and self._events[0][1] == self._START):
+                    idxs.append(heapq.heappop(self._events)[3])
+                self._on_start(t, idxs)
             else:
                 self._on_end(t, idx)
         # nothing left to retire: permanently-deferred sessions can never be
@@ -138,24 +157,49 @@ class ContinuousBatchingScheduler:
         heapq.heappush(self._events,
                        (float(start), self._START, next(self._seq), idx))
 
-    def _on_start(self, t: float, idx: int):
-        req = self._requests[idx]
-        # FIFO within client is head-of-line: while an earlier same-client
-        # request sits deferred, later ones queue behind it instead of
-        # overtaking via a different route
-        blocked = any(self._requests[d].client == req.client
-                      for d in self._deferred)
-        if not blocked and self.system.try_admit_session(req.sid, now=t):
-            sess = self.system.sessions[req.sid]
-            heapq.heappush(self._events,
-                           (float(sess.end), self._END, next(self._seq), idx))
-            self.max_concurrency = max(self.max_concurrency,
-                                       self.system.concurrency())
-        else:
-            # cache-slot budget exhausted (or queued behind a deferred
-            # predecessor): defer, re-admit on retirement
-            req.deferrals += 1
-            self._deferred.append(idx)
+    def _drain_prefill_interleaved(self):
+        """Advance pending prompt chunks one round at a time, giving the
+        resident active sessions a decode round between chunks (no
+        head-of-line blocking by long prompts)."""
+        while self.system.has_pending_prefill():
+            self.system.prefill_round()
+            if self.system.has_pending_prefill():
+                self.system.decode_round()
+
+    def _on_start(self, t: float, idxs: List[int]):
+        """Admit a batch of same-timestamp starts.  The engine coalesces
+        the fitting ones into (route, bucket) prefill groups."""
+        cands: List[int] = []
+        for idx in idxs:
+            req = self._requests[idx]
+            # FIFO within client is head-of-line: while an earlier
+            # same-client request sits deferred, later ones queue behind it
+            # instead of overtaking via a different route
+            if any(self._requests[d].client == req.client
+                   for d in self._deferred):
+                req.deferrals += 1
+                self._deferred.append(idx)
+            else:
+                cands.append(idx)
+        if not cands:
+            return
+        admitted = set(self.system.try_admit_sessions(
+            [self._requests[i].sid for i in cands], now=t))
+        self._drain_prefill_interleaved()
+        for idx in cands:
+            req = self._requests[idx]
+            if req.sid in admitted:
+                sess = self.system.sessions[req.sid]
+                heapq.heappush(
+                    self._events,
+                    (float(sess.end), self._END, next(self._seq), idx))
+                self.max_concurrency = max(self.max_concurrency,
+                                           self.system.concurrency())
+            else:
+                # cache-slot budget exhausted (or queued behind a same-batch
+                # predecessor): defer, re-admit on retirement
+                req.deferrals += 1
+                self._deferred.append(idx)
 
     def _on_end(self, t: float, idx: int):
         req = self._requests[idx]
@@ -183,13 +227,16 @@ class ContinuousBatchingScheduler:
                 per_token_rest=done.per_token_time,
                 n_deferrals=req.deferrals)
         # re-admission: retry deferred sessions in FIFO order; a client whose
-        # head-of-line request stays deferred keeps its later ones queued
+        # head-of-line request stays deferred keeps its later ones queued.
+        # Admission goes one session at a time (exact FIFO semantics), but
+        # chunked prompts still interleave their chunks with decode rounds.
         still: List[int] = []
         blocked_clients: set = set()
         for didx in self._deferred:
             dreq = self._requests[didx]
             if dreq.client not in blocked_clients and \
-                    self.system.try_admit_session(dreq.sid, now=t):
+                    self.system.try_admit_sessions([dreq.sid], now=t):
+                self._drain_prefill_interleaved()
                 dsess = self.system.sessions[dreq.sid]
                 heapq.heappush(
                     self._events,

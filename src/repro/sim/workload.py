@@ -46,8 +46,37 @@ def burst_requests(n_requests: int, at: float = 0.0, client: int = 0
             for i in range(n_requests)]
 
 
+def bursty_requests(n_bursts: int, burst_size: int, spacing: float,
+                    client: int = 0, start: float = 0.0,
+                    jitter: float = 0.0, seed: int = 0) -> List[Request]:
+    """Bursty arrivals: ``burst_size`` same-timestamp requests every
+    ``spacing`` seconds — the trace shape that produces coalescable prefill
+    groups in the engine (same-time starts admit together and share one
+    pooled bucket-group prefill).  ``jitter > 0`` adds an exponential
+    within-burst offset (mean ``jitter`` seconds) to each arrival, breaking
+    exact simultaneity for robustness studies."""
+    rng = np.random.default_rng(seed)
+    out: List[Request] = []
+    rid = 0
+    for b in range(n_bursts):
+        t0 = start + b * spacing
+        for _ in range(burst_size):
+            t = t0 + (float(rng.exponential(jitter)) if jitter > 0 else 0.0)
+            out.append(Request(rid=rid, client=client, arrival=t))
+            rid += 1
+    return out
+
+
 def prompts_for(requests: Sequence[Request], l_in: int, vocab_size: int,
                 seed: int = 0) -> List[np.ndarray]:
     """Deterministic per-request prompt tokens (ids >= 2) of length l_in."""
+    return prompts_for_lengths(requests, [l_in], vocab_size, seed=seed)
+
+
+def prompts_for_lengths(requests: Sequence[Request], lengths: Sequence[int],
+                        vocab_size: int, seed: int = 0) -> List[np.ndarray]:
+    """Deterministic per-request prompts cycling through ``lengths`` —
+    mixed-length traffic that exercises multi-bucket prefill groups."""
     rng = np.random.default_rng(seed + 7)
-    return [rng.integers(2, vocab_size, size=l_in) for _ in requests]
+    return [rng.integers(2, vocab_size, size=int(lengths[i % len(lengths)]))
+            for i in range(len(requests))]
