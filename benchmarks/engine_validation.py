@@ -1,6 +1,6 @@
 """Perf-model + simulator cross-validation against the REAL engine.
 
-Two parts (paper Figs 2/3/11/12 analogue + §4 concurrency dynamics):
+Three parts (paper Figs 2/3/11/12 analogue + §4 concurrency dynamics):
 
 1. block-linearity: the engine's block-level execution confirms the linear
    dependence of per-token time on #processed blocks (eq. (1)).
@@ -12,20 +12,55 @@ Two parts (paper Figs 2/3/11/12 analogue + §4 concurrency dynamics):
    a few percent validates that the simulator's waiting/memory dynamics
    (eq. (5)/(20)) match what the engine actually does under interleaved
    sessions.
+3. hybrid-topology cross-validation: the same trace served by a zamba2-style
+   hybrid stack (mamba + shared-attention blocks) with per-FAMILY block
+   compute weights (``LLMSpec.block_tau``) — the engine's family-polymorphic
+   state pools against the simulator's weighted eq. (1) accounting.
 
-Run:  PYTHONPATH=src:. python benchmarks/engine_validation.py
+Also emits a machine-readable ``BENCH_engine.json`` (tokens/s and
+cross-validation error per scenario) so CI can track the perf trajectory.
+
+Run:  PYTHONPATH=src:. python benchmarks/engine_validation.py [--full]
+      [--smoke] [--json PATH]
 """
 from __future__ import annotations
 
+import json
+import os
 import numpy as np
 
 from benchmarks.common import emit, timed
 
+# per-family relative block compute weights of the hybrid scenario: a
+# shared-attention block (mamba mixer + width-2d attention+MLP) costs ~2.5x
+# a plain mamba mixer; weights average ~1 so totals stay comparable to the
+# uniform scenario
+HYBRID_TAU = {"mamba": 0.7, "mamba_shared": 1.9}
 
-def _concurrency_problem():
+# collected by run(): scenario name -> metrics dict (written as JSON)
+_RESULTS = {}
+
+
+def _record(name: str, **metrics):
+    _RESULTS[name] = {k: (float(v) if isinstance(v, (int, float, np.floating))
+                          else v) for k, v in metrics.items()}
+
+
+def _xval_config(arch: str, L: int):
+    """Reduced engine config with exactly L BPRR blocks for one arch."""
+    from repro.configs import get_reduced_config
+
+    cfg = get_reduced_config(arch)
+    if cfg.n_layers != L:
+        cfg = cfg.replace(n_layers=L)
+    return cfg
+
+
+def _concurrency_problem(block_tau=None):
     from repro.core import LLMSpec, Problem, ServerSpec, Workload
 
-    llm = LLMSpec("xval", 8, block_bytes=50.0, cache_bytes_per_token=0.5)
+    llm = LLMSpec("xval", 8, block_bytes=50.0, cache_bytes_per_token=0.5,
+                  block_tau=block_tau)
     servers = [
         ServerSpec(0, 500.0, 0.004, tau_prefill_base=0.002,
                    tau_prefill_per_token=0.0005),
@@ -43,22 +78,28 @@ def _concurrency_problem():
 
 
 def cross_validate(R: int, n_requests: int = 10, rate: float = 1.0,
-                   seed: int = 0, trace: str = "poisson"):
+                   seed: int = 0, trace: str = "poisson",
+                   arch: str = "llama3_2_1b"):
     """Returns (engine metrics, sim metrics, relative errors) for one R.
 
     ``trace``: "poisson" (the paper's proxy-client arrivals) or "bursty"
     (4-request same-timestamp bursts — the coalescable-prefill workload:
-    the engine admits each burst as one bucket group)."""
+    the engine admits each burst as one bucket group).  ``arch`` picks the
+    served stack; "zamba2_7b" runs the hybrid topology with per-family
+    block compute weights (``HYBRID_TAU``)."""
     import jax
 
-    from repro.configs import get_reduced_config
-    from repro.models import init_params
+    from repro.models import init_params, stack_block_kinds
     from repro.serving import ContinuousBatchingScheduler, GeoServingSystem
     from repro.sim import SimConfig, simulate
     from repro.sim.workload import (bursty_requests, poisson_requests,
                                     prompts_for)
 
-    problem = _concurrency_problem()
+    cfg = _xval_config(arch, 8)
+    block_tau = None
+    if cfg.family == "hybrid":
+        block_tau = tuple(HYBRID_TAU[k] for k in stack_block_kinds(cfg))
+    problem = _concurrency_problem(block_tau=block_tau)
     lw = problem.workload
     if trace == "bursty":
         requests = bursty_requests(n_bursts=max(1, n_requests // 4),
@@ -72,7 +113,6 @@ def cross_validate(R: int, n_requests: int = 10, rate: float = 1.0,
                    requests=requests)
 
     # --- engine path (same trace, same R) ---------------------------------
-    cfg = get_reduced_config("llama3_2_1b").replace(n_layers=problem.L)
     params, _ = init_params(jax.random.PRNGKey(0), cfg)
     system = GeoServingSystem(cfg, params, problem, algorithm="proposed",
                               R=R, max_new_tokens=lw.l_out,
@@ -160,7 +200,27 @@ def prefill_throughput(R: int = 4, burst: int = 8, n_new: int = 4,
     return out
 
 
-def run(full: bool = False):
+def _emit_xval(name: str, eng, simm, err, us):
+    emit(name, us,
+         f"per_token eng={eng['per_token_all']*1e3:.2f}ms "
+         f"sim={simm['per_token_all']*1e3:.2f}ms "
+         f"err={err['per_token_all']:.1%} | "
+         f"first_token eng={eng['first_token']*1e3:.1f}ms "
+         f"sim={simm['first_token']*1e3:.1f}ms "
+         f"err={err['first_token']:.1%} | "
+         f"max_conc={eng['max_concurrency']}")
+    _record(name, per_token_eng=eng["per_token_all"],
+            per_token_sim=simm["per_token_all"],
+            first_token_eng=eng["first_token"],
+            first_token_sim=simm["first_token"],
+            err_per_token=err["per_token_all"],
+            err_first_token=err["first_token"],
+            max_concurrency=eng["max_concurrency"])
+
+
+def run(full: bool = False, smoke: bool = False):
+    """``smoke``: reduced trace sizes + the essential scenario per class —
+    the CI job that keeps the perf trajectory populated."""
     import jax
 
     from repro.configs import get_reduced_config
@@ -190,6 +250,8 @@ def run(full: bool = False):
         times[m_blocks] = vt / 7  # per forward
         emit(f"perfmodel.blocks{m_blocks}", us,
              f"virtual_per_token={vt/7*1e3:.2f}ms")
+        _record(f"perfmodel.blocks{m_blocks}",
+                virtual_per_token_s=vt / 7)
     # linearity check: time(8 blocks)/time(2 blocks) tracks the block ratio
     # modulo the constant RTT term
     t2, t8 = times[2], times[8]
@@ -199,41 +261,64 @@ def run(full: bool = False):
     emit("perfmodel.linearity", 0.0,
          f"per-block slope (2-block route)={slope2/2*1e3:.2f}ms "
          f"(8-block)={slope8/8*1e3:.2f}ms (model tau={tau*1e3:.1f}ms)")
+    _record("perfmodel.linearity", slope2_s=slope2 / 2, slope8_s=slope8 / 8,
+            model_tau_s=tau)
 
     # §4-style cross-validation under concurrency
-    n_requests = 20 if full else 10
-    for R in (1, 4, 8):
+    n_requests = 8 if smoke else (20 if full else 10)
+    for R in ((4,) if smoke else (1, 4, 8)):
         (eng, simm, err), us = timed(cross_validate, R,
                                      n_requests=n_requests)
-        emit(f"xval.R{R}", us,
-             f"per_token eng={eng['per_token_all']*1e3:.2f}ms "
-             f"sim={simm['per_token_all']*1e3:.2f}ms "
-             f"err={err['per_token_all']:.1%} | "
-             f"first_token eng={eng['first_token']*1e3:.1f}ms "
-             f"sim={simm['first_token']*1e3:.1f}ms "
-             f"err={err['first_token']:.1%} | "
-             f"max_conc={eng['max_concurrency']}")
+        _emit_xval(f"xval.R{R}", eng, simm, err, us)
 
     # bursty arrivals: same-timestamp bursts admit as ONE bucket group —
     # the coalescable-prefill workload for the batched prefill path
-    for R in (4, 8):
+    for R in ((4,) if smoke else (4, 8)):
         (eng, simm, err), us = timed(cross_validate, R,
                                      n_requests=n_requests, trace="bursty")
-        emit(f"xval.bursty.R{R}", us,
-             f"per_token eng={eng['per_token_all']*1e3:.2f}ms "
-             f"sim={simm['per_token_all']*1e3:.2f}ms "
-             f"err={err['per_token_all']:.1%} | "
-             f"first_token err={err['first_token']:.1%} | "
-             f"max_conc={eng['max_concurrency']}")
+        _emit_xval(f"xval.bursty.R{R}", eng, simm, err, us)
+
+    # hybrid topology: zamba2-style stack (mamba + shared-attention blocks)
+    # with per-family block compute weights — the family-polymorphic state
+    # pools against the simulator's weighted eq. (1)
+    for R in ((4,) if smoke else (4, 8)):
+        (eng, simm, err), us = timed(cross_validate, R,
+                                     n_requests=n_requests,
+                                     arch="zamba2_7b")
+        _emit_xval(f"xval.hybrid.R{R}", eng, simm, err, us)
 
     # measured prefill throughput: serial (one session per call) vs the
     # bucket-group batched path, same burst, jit-warm
-    tput, us = timed(prefill_throughput, R=4, burst=8)
+    tput, us = timed(prefill_throughput, R=4, burst=4 if smoke else 8)
     emit("prefill.tput.R4", us,
          f"serial={tput['serial']:.0f} tok/s "
          f"batched={tput['batched']:.0f} tok/s "
          f"speedup={tput['batched'] / tput['serial']:.2f}x")
+    _record("prefill.tput.R4", serial_tok_s=tput["serial"],
+            batched_tok_s=tput["batched"],
+            speedup=tput["batched"] / tput["serial"])
+
+
+def write_json(path: str):
+    """Dump the collected scenario metrics as machine-readable JSON."""
+    payload = {"benchmark": "engine_validation", "scenarios": _RESULTS}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path} ({len(_RESULTS)} scenarios)")
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="longer traces (20 requests per scenario)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scenario set for CI")
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_engine.json"), help="output path for the JSON metrics")
+    args = ap.parse_args()
+    run(full=args.full, smoke=args.smoke)
+    write_json(args.json)

@@ -31,17 +31,48 @@ MB = 1 << 20
 
 @dataclass(frozen=True)
 class LLMSpec:
-    """The served model, reduced to what BPRR needs."""
+    """The served model, reduced to what BPRR needs.
+
+    ``block_tau``: optional per-block relative compute weights (length
+    ``n_blocks``).  The paper's eq. (1)/(4) charge a uniform ``k_j·τ_j`` per
+    hop; heterogeneous stacks (zamba2 hybrids, enc-dec) have per-FAMILY block
+    costs, so a hop's compute term becomes ``τ_j · Σ_{b∈hop} w_b``.  ``None``
+    keeps the paper's uniform weights (``w_b ≡ 1``).
+    """
 
     name: str
     n_blocks: int  # L
     block_bytes: float  # s_m
     cache_bytes_per_token: float  # per block per session per token
     cache_bytes_const: float = 0.0  # O(1)-state archs (SSM): per block/session
+    block_tau: Optional[Tuple[float, ...]] = None  # per-block tau weights
+
+    def __post_init__(self):
+        if self.block_tau is not None:
+            object.__setattr__(self, "block_tau",
+                               tuple(float(w) for w in self.block_tau))
+            if len(self.block_tau) != self.n_blocks:
+                raise ValueError(
+                    f"block_tau has {len(self.block_tau)} weights for "
+                    f"{self.n_blocks} blocks")
 
     def cache_bytes(self, total_tokens: int) -> float:
         """s_c for a session of l_in + l_out = total_tokens."""
         return self.cache_bytes_per_token * total_tokens + self.cache_bytes_const
+
+    def tau_weight(self, lo: int, hi: int) -> float:
+        """Σ_{b∈[lo,hi)} w_b — the weighted block count of one hop."""
+        if self.block_tau is None:
+            return float(hi - lo)
+        return float(sum(self.block_tau[lo:hi]))
+
+    def tau_cumweights(self) -> np.ndarray:
+        """Prefix sums W with W[e] = Σ_{b<e} w_b, so a hop (e_i → e_j) costs
+        ``τ_j · (W[e_j] − W[e_i])`` — the vectorised form the routing DPs
+        use."""
+        if self.block_tau is None:
+            return np.arange(self.n_blocks + 1, dtype=float)
+        return np.concatenate([[0.0], np.cumsum(self.block_tau)])
 
     @staticmethod
     def from_model_config(cfg, dtype_bits: int = 16) -> "LLMSpec":
@@ -212,19 +243,29 @@ class Route:
 
 
 def route_per_token_time(problem: Problem, route: Route, client: int) -> float:
-    """Σ_{j∈p} (t_cj + k_j τ_j)  — eq (4) summed along the path."""
+    """Σ_{j∈p} (t_cj + k_j τ_j)  — eq (4) summed along the path.
+
+    With per-family block weights (``LLMSpec.block_tau``) the compute term
+    is ``τ_j · Σ_{b∈hop} w_b`` instead of ``τ_j · k_j``."""
     t = 0.0
+    e = 0
     for j, k in zip(route.servers, route.blocks):
-        t += problem.rtt_token[client, j] + k * problem.servers[j].tau
+        t += (problem.rtt_token[client, j]
+              + problem.llm.tau_weight(e, e + k) * problem.servers[j].tau)
+        e += k
     return t
 
 
 def route_prefill_time(problem: Problem, route: Route, client: int) -> float:
-    """Σ_{j∈p} (t^I_cj + k_j τ^I_j)  — first-token part of eq (1)."""
+    """Σ_{j∈p} (t^I_cj + k_j τ^I_j)  — first-token part of eq (1), with the
+    same per-family block weighting as :func:`route_per_token_time`."""
     t = 0.0
+    e = 0
     for j, k in zip(route.servers, route.blocks):
         t += (problem.rtt_prefill[client, j]
-              + k * problem.servers[j].tau_prefill(problem.workload.l_in))
+              + problem.llm.tau_weight(e, e + k)
+              * problem.servers[j].tau_prefill(problem.workload.l_in))
+        e += k
     return t
 
 

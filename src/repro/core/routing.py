@@ -35,8 +35,11 @@ def edge_cost_matrix(problem: Problem, placement: Placement,
     lw = problem.workload
     cost = np.full((n + 1, n), np.inf)
     e_from = np.concatenate([e, [0]])  # progress after i (last row = S)
+    cumw = problem.llm.tau_cumweights()  # per-family block weights (W[e])
     for row in range(n + 1):
-        k = e - e_from[row]  # blocks processed at j when reached from row
+        # weighted blocks processed at j when reached from row; equals
+        # e - e_from[row] under the paper's uniform weights
+        k = cumw[e] - cumw[e_from[row]]
         t_tok = problem.rtt_token[client] + tau * k
         if avg_over_tokens:
             t_pre = problem.rtt_prefill[client] + problem.tau_prefill() * k
@@ -198,6 +201,7 @@ def petals_route(problem: Problem, placement: Placement, client: int
     n = problem.n_servers
     e_arr = a + m
     tau = problem.tau()
+    cumw = problem.llm.tau_cumweights()
     L = problem.L
     # Dijkstra over progress states
     best: Dict[int, float] = {0: 0.0}
@@ -219,7 +223,7 @@ def petals_route(problem: Problem, placement: Placement, client: int
             return route_blocks(placement, tuple(chain))
         ok = (m > 0) & (a <= e) & (e <= e_arr - 1)
         for j in np.where(ok)[0]:
-            k = e_arr[j] - e
+            k = cumw[e_arr[j]] - cumw[e]
             nd = d + problem.rtt_token[client, j] + k * tau[j]
             state = (int(e_arr[j]), int(j))
             if state not in seen and nd < best.get(state, np.inf):
@@ -252,8 +256,10 @@ def jax_shortest_paths(problem: Problem, placement: Placement,
     active = m > 0
     adj = (active[None, :] & active[:, None]
            & (a[None, :] <= e[:, None]) & (e[:, None] <= e[None, :] - 1))
-    k_edge = np.maximum(e[None, :] - e[:, None], 0)  # blocks at j from i
-    k_first = e  # from S-client (progress 0)
+    cumw = problem.llm.tau_cumweights()
+    # weighted blocks at j from i (== block count under uniform weights)
+    k_edge = np.maximum(cumw[e][None, :] - cumw[e][:, None], 0)
+    k_first = cumw[e]  # from S-client (progress 0)
     first_ok = active & (a == 0)
     last_ok = active & (e == problem.L)
     tau = problem.tau()

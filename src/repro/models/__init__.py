@@ -1,6 +1,9 @@
+from repro.models.blocks import stack_block_kinds
 from repro.models.layers import NULL_SH, ShardingCtx
 from repro.models.model import (
+    block_param_range,
     decode_step,
+    hybrid_mamba_stack,
     init_decode_caches,
     init_params,
     init_params_shapes,
@@ -13,12 +16,15 @@ from repro.models.model import (
 __all__ = [
     "NULL_SH",
     "ShardingCtx",
+    "block_param_range",
     "decode_step",
+    "hybrid_mamba_stack",
     "init_decode_caches",
     "init_params",
     "init_params_shapes",
     "param_axes",
     "prefill",
+    "stack_block_kinds",
     "stack_plan",
     "train_loss",
 ]

@@ -154,10 +154,14 @@ def attention_core(q, k, v, q_pos, kv_pos, window=None, slopes=None,
 
 
 def decode_attention_xla(q, ck, cv, pos, window=None, slopes=None,
-                         causal=True):
+                         causal=True, kv_len=None):
     """Single-step attention over a cache without KV-head expansion.
 
     q (B,1,H,D); ck (B,T,Kv,D); cv (B,T,Kv,Dv); pos: current position scalar.
+    ``kv_len``: optional (traced) count of valid cache positions — masks
+    ``kv_pos >= kv_len``.  Needed by non-causal (cross) attention when the
+    cache is allocated longer than the valid prefix; causal attention is
+    already masked by ``pos``.
     """
     B, _, H, D = q.shape
     T, Kv = ck.shape[1], ck.shape[2]
@@ -170,6 +174,8 @@ def decode_attention_xla(q, ck, cv, pos, window=None, slopes=None,
     kv_pos = jnp.arange(T)
     diff = pos - kv_pos
     ok = ((diff >= 0) & (diff < window)) if causal else jnp.ones((T,), bool)
+    if kv_len is not None:
+        ok = ok & (kv_pos < kv_len)
     if slopes is not None:
         logits = logits + (slopes.reshape(Kv, G)[None, :, :, None]
                            * (-jnp.abs(diff))[None, None, None, :])
@@ -284,12 +290,15 @@ def apply_gqa_full(params, cfg: ModelConfig, sh: ShardingCtx, x, positions,
 
 
 def apply_gqa_decode(params, cfg: ModelConfig, sh: ShardingCtx, x, cache_k,
-                     cache_v, pos, window=None, cross: bool = False):
+                     cache_v, pos, window=None, cross: bool = False,
+                     kv_len=None):
     """Single-token decode.  x (B,1,d), cache (B,T,Kv,hd).
 
     Self-attention: writes the new token's K/V into the cache at ``pos`` and
     attends over the updated cache.  Returns (y, cache_k, cache_v).
-    Cross-attention: the cache is the (static) encoder KV; returned unchanged.
+    Cross-attention: the cache is the (static) encoder KV; returned
+    unchanged.  ``kv_len`` masks cache positions beyond the valid encoder
+    prefix when the cache is over-allocated (pooled serving).
     """
     q = _q_proj(params, cfg, x)
     if not cross:
@@ -311,7 +320,7 @@ def apply_gqa_decode(params, cfg: ModelConfig, sh: ShardingCtx, x, cache_k,
 
     slopes = alibi_slopes(cfg.n_heads) if cfg.pos_kind == "alibi" else None
     out = decode_attention_xla(q, cache_k, cache_v, pos, window, slopes,
-                               causal=not cross)
+                               causal=not cross, kv_len=kv_len)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return y, cache_k, cache_v
 

@@ -33,6 +33,41 @@ from repro.models.layers import (
 
 _BIG = 1 << 30
 
+# Block kinds a stack can be made of — the granularity the serving layer's
+# per-block StateSpec dispatch (repro.serving.kv_cache) is keyed on.
+BLOCK_KINDS = ("decoder", "rwkv", "mamba", "mamba_shared", "enc", "dec")
+
+
+def stack_block_kinds(cfg: ModelConfig):
+    """Per-block kind tuple (length ``cfg.n_layers``) in BPRR block order.
+
+    * dense / moe / vlm:  ("decoder",) * n_layers
+    * rwkv6:              ("rwkv",) * n_layers
+    * zamba2 hybrid:      "mamba" everywhere, except the last block of each
+      shared-attention group (every ``shared_attn_period``-th) which is
+      "mamba_shared" — a mamba mixer followed by the parameter-shared
+      attention+MLP block (KV cache + SSM state on ONE block).
+    * seamless enc-dec:   ("enc",) * n_enc + ("dec",) * n_dec.
+
+    Raises ``ValueError`` for families outside :data:`BLOCK_KINDS` so the
+    serving layer can surface the supported set.
+    """
+    if cfg.is_enc_dec:
+        return (("enc",) * cfg.n_enc_layers) + (("dec",) * cfg.n_dec_layers)
+    if cfg.family == "hybrid":
+        period = cfg.shared_attn_period
+        n_mega = (cfg.n_layers // period) * period
+        return tuple(
+            "mamba_shared" if (i < n_mega and i % period == period - 1)
+            else "mamba" for i in range(cfg.n_layers))
+    if cfg.family == "ssm":
+        return ("rwkv",) * cfg.n_layers
+    if cfg.family in ("dense", "moe", "vlm"):
+        return ("decoder",) * cfg.n_layers
+    raise ValueError(
+        f"unknown block family {cfg.family!r} for {cfg.name!r}; supported "
+        "stacks are built from block kinds " + ", ".join(BLOCK_KINDS))
+
 
 def window_for_layer(cfg: ModelConfig, layer_idx):
     """Traced per-layer sliding window (gemma3 local:global pattern).
@@ -179,13 +214,26 @@ def init_cross_decoder_block(key, cfg: ModelConfig):
 
 
 def cross_decoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h,
-                             positions, enc_h):
-    """Decoder block with cross-attention.  Returns (h, cache_entry)."""
+                             positions, enc_h, prefix_kv=None, enc_kv=None):
+    """Decoder block with cross-attention.  Returns (h, cache_entry).
+
+    ``prefix_kv``: optional already-cached self-attention (k, v) prefix for
+    chunked prefill — same contract as ``decoder_block_full``: ``positions``
+    must be ``P + arange(S)`` and the returned cache entry covers only the
+    chunk.  ``enc_kv``: optional already-projected encoder cross-(k, v);
+    when given, the ``gqa_encoder_kv`` projection of ``enc_h`` is skipped
+    (it does not depend on the decoder offset, so chunked prefill computes
+    it once at offset 0 and reuses the cached value after).
+    """
     x = apply_norm(params["ln1"], cfg, h)
-    a, kv = attn.apply_gqa_full(params["self_attn"], cfg, sh, x, positions)
+    a, kv = attn.apply_gqa_full(params["self_attn"], cfg, sh, x, positions,
+                                prefix_kv=prefix_kv)
     h = h + a
     x = apply_norm(params["ln_cross"], cfg, h)
-    ck, cv = attn.gqa_encoder_kv(params["cross_attn"], cfg, sh, enc_h)
+    if enc_kv is None:
+        ck, cv = attn.gqa_encoder_kv(params["cross_attn"], cfg, sh, enc_h)
+    else:
+        ck, cv = enc_kv
     a, _ = attn.apply_gqa_full(params["cross_attn"], cfg, sh, x, positions,
                                cross_kv=(ck, cv))
     h = h + a
@@ -197,7 +245,14 @@ def cross_decoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h,
 
 
 def cross_decoder_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h,
-                               cache, pos):
+                               cache, pos, enc_len=None):
+    """Single-token cross-decoder block.
+
+    ``enc_len``: optional (traced) number of VALID encoder positions in the
+    ``ck``/``cv`` caches — required when they are allocated longer than the
+    session's encoder output (the pooled serving path); ``None`` keeps the
+    exact-length monolithic behaviour.
+    """
     x = apply_norm(params["ln1"], cfg, h)
     a, ck, cv = attn.apply_gqa_decode(
         params["self_attn"], cfg, sh, x, cache["k"], cache["v"], pos)
@@ -205,7 +260,7 @@ def cross_decoder_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h,
     x = apply_norm(params["ln_cross"], cfg, h)
     a, _, _ = attn.apply_gqa_decode(
         params["cross_attn"], cfg, sh, x, cache["ck"], cache["cv"], pos,
-        cross=True)
+        cross=True, kv_len=enc_len)
     h = h + a
     x = apply_norm(params["ln2"], cfg, h)
     h = h + apply_mlp(params["ffn"], cfg, sh, x)

@@ -154,6 +154,49 @@ def param_axes(cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# Block-order parameter views (the serving engine's placement granularity)
+# ---------------------------------------------------------------------------
+
+
+def hybrid_mamba_stack(params, cfg: ModelConfig):
+    """All ``n_layers`` mamba mixer params stacked on axis 0 in BPRR block
+    order (hybrid family): the mega segment's ``(n_mega, per, ...)`` leaves
+    flattened, the tail segment concatenated.  The serving layer slices
+    per-server block ranges out of this view; the shared attention params
+    (``params["shared"]``) ride alongside, not inside."""
+    segs = params["segments"]
+    mega = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
+                        segs["mega"]["mamba"])
+    if "tail" in segs:
+        return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                            mega, segs["tail"])
+    return mega
+
+
+def block_param_range(params, cfg: ModelConfig, kind: str, lo: int, hi: int):
+    """Per-layer block params stacked on axis 0 for absolute BPRR blocks
+    ``[lo, hi)`` — all of one ``kind`` (see ``blocks.stack_block_kinds``).
+
+    "mamba_shared" blocks return their mamba mixer params; the shared
+    attention half lives in ``params["shared"]`` (parameter sharing means it
+    is NOT per-block)."""
+    segs = params["segments"]
+    if kind in ("decoder", "rwkv"):
+        return jax.tree.map(lambda x: x[lo:hi], segs["blocks"])
+    if kind in ("mamba", "mamba_shared"):
+        flat = hybrid_mamba_stack(params, cfg)
+        return jax.tree.map(lambda x: x[lo:hi], flat)
+    if kind == "enc":
+        return jax.tree.map(lambda x: x[lo:hi], segs["enc"])
+    if kind == "dec":
+        ne = cfg.n_enc_layers
+        return jax.tree.map(lambda x: x[lo - ne:hi - ne], segs["dec"])
+    raise ValueError(
+        f"unknown block kind {kind!r}; supported: decoder, rwkv, mamba, "
+        "mamba_shared, enc, dec")
+
+
+# ---------------------------------------------------------------------------
 # Segment scan bodies (shared by forward passes AND the dry-run's exact
 # scan-cost correction, which lowers each body separately — DESIGN.md §6)
 # ---------------------------------------------------------------------------

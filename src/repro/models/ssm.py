@@ -8,6 +8,14 @@ O(S·state) memory.
 
 Decode paths are single-step recurrences over carried state, mirroring what
 the Pallas kernels in ``repro.kernels.{ssd,wkv6}`` implement for real TPUs.
+
+State-dict key names are a SERVING CONTRACT: the geo engine's state pools
+(``repro.serving.kv_cache``) dispatch writes by leaf name — ``k``/``v``
+(and MLA ``latent``/``krope``) are length-indexed and written per chunk,
+everything else (``ssm``, ``conv``, ``wkv``, ``shift*``) is recurrent and
+overwritten whole.  Renaming a key here silently changes pool semantics;
+keep names out of the length-indexed set unless the leaf really has a time
+axis.
 """
 from __future__ import annotations
 

@@ -1,19 +1,25 @@
 """The continuous-batching geo serving engine (see docs/serving.md):
-per-server cache pools, pooled decode + bucketed prefill steps, the
+family-polymorphic per-server state pools (StateSpec-dispatched), pooled
+decode + bucketed prefill steps, per-session sampling policies, the
 event-loop scheduler, and the session/request record types."""
 from repro.serving.engine import (BlockServer, EngineSession,
                                   GeoServingSystem, generate)
-from repro.serving.kv_cache import (CachePool, bucket_for,
-                                    default_prefill_buckets,
-                                    make_pool_decode_step,
+from repro.serving.kv_cache import (SUPPORTED_KINDS, CachePool, StateSpec,
+                                    bucket_for, default_prefill_buckets,
+                                    kind_runs, make_pool_decode_step,
                                     make_pool_prefill_step, new_block_cache,
-                                    new_cache_pool_tree, write_prefill_kv)
+                                    new_cache_pool_tree, new_state_pool_tree,
+                                    state_spec_for, state_specs,
+                                    write_prefill_kv)
+from repro.serving.sampling import SamplingSpec, make_sampler
 from repro.serving.scheduler import (AdmissionScheduler,
                                      ContinuousBatchingScheduler,
                                      ServedRequest)
 
 __all__ = ["AdmissionScheduler", "BlockServer", "CachePool",
            "ContinuousBatchingScheduler", "EngineSession", "GeoServingSystem",
-           "ServedRequest", "bucket_for", "default_prefill_buckets",
-           "generate", "make_pool_decode_step", "make_pool_prefill_step",
-           "new_block_cache", "new_cache_pool_tree", "write_prefill_kv"]
+           "SUPPORTED_KINDS", "SamplingSpec", "ServedRequest", "StateSpec",
+           "bucket_for", "default_prefill_buckets", "generate", "kind_runs",
+           "make_pool_decode_step", "make_pool_prefill_step", "make_sampler",
+           "new_block_cache", "new_cache_pool_tree", "new_state_pool_tree",
+           "state_spec_for", "state_specs", "write_prefill_kv"]

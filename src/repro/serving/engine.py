@@ -8,13 +8,17 @@ performance models (eq. (1)): the engine cross-validates the simulator.
 
 Multi-session execution (eq. (5)/(20) semantics):
 
-* every server keeps ONE stacked cache pool (``repro.serving.kv_cache``)
-  whose rows are per-session slots; a single jitted step — vmapped over
-  rows, scanned over the server's layers — decodes every resident session
-  at once.  The pool shape is fixed, so the step traces exactly once per
-  server: admitting/retiring sessions flips mask bits instead of re-tracing,
-  and per-session results are bit-for-bit identical whether a session runs
-  alone or among ``max_sessions`` neighbours.
+* every server keeps ONE family-polymorphic stacked state pool
+  (``repro.serving.kv_cache``) whose rows are per-session slots; a single
+  jitted step — vmapped over rows, scanned over the server's hosted block
+  runs — decodes every resident session at once.  Which state a block row
+  carries (KV tensors, MLA latents, SSM+conv state, wkv/shift state,
+  self-KV + encoder cross-KV) is dispatched per block via its
+  :class:`~repro.serving.kv_cache.StateSpec`; the pool shape is fixed, so
+  the step traces exactly once per server: admitting/retiring sessions
+  flips mask bits instead of re-tracing, and per-session results are
+  bit-for-bit identical whether a session runs alone or among
+  ``max_sessions`` neighbours.
 * cache block-slots follow the paper's memory model: server j has
   ⌊(M_j − s_m·m_j)/s_c⌋ slots; a session routed through k_j of its blocks
   occupies k_j slots from start to retirement (no-overbooking commitment).
@@ -28,9 +32,15 @@ surviving servers and replayed exactly — with any number of co-resident
 sessions.  Elastic join/leave triggers CG-BP re-placement at the slow time
 scale; stragglers feed per-server slowdowns into the routing costs.
 
-Supported block families: "decoder" (dense / MoE / VLM / gemma-pattern) and
-"rwkv" (attention-free).  Hybrid/enc-dec run through the monolithic serve
-steps + simulator (same BPRR decisions).
+Supported block families (``kv_cache.SUPPORTED_KINDS``): "decoder" (dense /
+MoE / VLM / gemma-pattern), "rwkv" (attention-free), "mamba" /
+"mamba_shared" (zamba2 hybrids), and "enc" / "dec" (seamless
+encoder-decoder).  Enc-dec sessions carry encoder ``frames`` alongside the
+decoder prompt; hybrid stacks thread the original embedding (``emb0``) to
+the parameter-shared attention blocks.  Token selection is per-session
+policy (``repro.serving.sampling.SamplingSpec``): seeded greedy /
+temperature / top-k, threaded through the pooled rounds as vmapped row
+inputs.
 """
 from __future__ import annotations
 
@@ -46,31 +56,26 @@ from repro.configs.base import ModelConfig
 from repro.core.perf_model import Placement, Problem, Route
 from repro.core.placement import petals_bp
 from repro.core.routing import petals_route, shortest_path_route
-from repro.models.layers import NULL_SH, embed_tokens, lm_head
-from repro.models.model import stack_plan
+from repro.models.layers import NULL_SH, embed_frames, embed_tokens, lm_head
+from repro.models.model import block_param_range
 from repro.serving.kv_cache import (CachePool, bucket_for,
-                                    default_prefill_buckets,
+                                    default_prefill_buckets, kind_runs,
                                     make_pool_decode_step,
                                     make_pool_prefill_step,
-                                    make_prefill_block)
-
-
-def _block_kind(cfg: ModelConfig) -> str:
-    plan = stack_plan(cfg)
-    kinds = {s.kind for s in plan}
-    if kinds == {"decoder"}:
-        return "decoder"
-    if kinds == {"rwkv"}:
-        return "rwkv"
-    raise NotImplementedError(
-        f"geo engine supports decoder/rwkv stacks; got {kinds}")
+                                    make_prefill_block, state_specs)
+from repro.serving.sampling import SamplingSpec, make_sampler
 
 
 @dataclass
 class EngineSession:
     """Client-side state for one session: its route, token buffer, per-hop
     input history (the failover replay cache), and the virtual-clock
-    accounting (prefill / per-token / end times per eq. (1))."""
+    accounting (prefill / per-token / end times per eq. (1)).
+
+    Enc-dec sessions additionally carry the encoder input ``frames``
+    (S_enc, frame_dim), its length, and — once prefilled — the encoder
+    output ``enc_out`` (a client-side artifact, like the hop histories:
+    failover replay rebuilds cross-KV from it)."""
 
     sid: int
     client: int
@@ -83,45 +88,65 @@ class EngineSession:
     tokens: List[int] = field(default_factory=list)  # prompt + generated
     n_generated: int = 0
     state: str = "admitted"  # admitted | prefilling | active | failed | done
-    # per-hop input history (the PETALS fault-tolerance cache)
-    hop_inputs: List[List[jnp.ndarray]] = field(default_factory=list)
+    # per-hop input history (the PETALS fault-tolerance cache); entry 0 is
+    # the prompt-phase record — a plain array for single-phase stacks, a
+    # {"enc": ..., "dec": ...} dict for enc-dec — followed by one array per
+    # decoded token that flowed through the hop
+    hop_inputs: List[List] = field(default_factory=list)
+    sampling: SamplingSpec = field(default_factory=SamplingSpec)
+    frames: Optional[np.ndarray] = None  # encoder input (enc-dec only)
+    enc_len: int = 0
+    enc_out: Optional[jnp.ndarray] = None  # encoder output (client cache)
     virtual_time: float = 0.0  # accumulated service time (prefill + decode)
     prefill_time: float = 0.0
     per_token_time: float = 0.0
     end: float = float("inf")
     last_logits: Optional[jnp.ndarray] = None  # logits behind tokens[-1]
-    # transient per-round hidden state
+    # transient per-round hidden state / original embedding
     _h: Optional[jnp.ndarray] = None
+    _emb0: Optional[jnp.ndarray] = None
 
 
 class BlockServer:
     """One 'server': params for its block range + a stacked session pool.
 
-    Exposes two pooled compute entry points, both vmapped over the pool's
-    rows and scanned over the hosted block range so they trace once per
-    server: :meth:`decode_rows` (one token for every masked row) and
-    :meth:`prefill_rows` (one padded prompt chunk for every masked row — the
-    bucket-group prefill path).
+    The hosted range may mix block families; ``self.kinds`` is its static
+    per-layer kind tuple and ``self.runs`` the contiguous same-kind runs
+    the pooled steps scan over.  Exposes two pooled compute entry points,
+    both vmapped over the pool's rows so they trace once per server:
+    :meth:`decode_rows` (one token for every masked row) and
+    :meth:`prefill_rows` (one padded prompt chunk for every masked row —
+    the bucket-group prefill path).
     """
 
     def __init__(self, sid: int, cfg: ModelConfig, params, a: int, m: int,
                  *, n_rows: int, max_len: int, cap_slots: int,
-                 slowdown: float = 1.0):
+                 enc_len: int = 0, slowdown: float = 1.0):
         self.sid = sid
         self.cfg = cfg
-        self.kind = _block_kind(cfg)
         self.a, self.m = int(a), int(m)
-        # per-layer params, stacked on axis 0 over THIS server's range
-        self.stacked = jax.tree.map(lambda x: x[self.a: self.a + self.m],
-                                    params["segments"]["blocks"])
+        self.specs = state_specs(cfg)[self.a: self.a + self.m]
+        self.kinds = tuple(s.kind for s in self.specs)
+        self.runs = kind_runs(self.kinds)
+        self.n_enc = cfg.n_enc_layers
+        # per-run stacked block params (axis 0 over the run's layers)
+        self.run_params = tuple(
+            block_param_range(params, cfg, kind, self.a + lo, self.a + hi)
+            for kind, lo, hi in self.runs)
+        self.shared = params.get("shared")  # zamba2 shared attention
         self.layer_ids = jnp.arange(self.a, self.a + self.m, dtype=jnp.int32)
-        self.pool = CachePool(cfg, self.kind, self.m, n_rows, max_len,
-                              cap_slots)
+        self.pool = CachePool(cfg, self.kinds, n_rows, max_len, cap_slots,
+                              enc_len=enc_len)
         self.alive = True
         self.slowdown = slowdown
-        self._step = make_pool_decode_step(cfg, self.kind)
-        self._prefill_block = make_prefill_block(cfg, self.kind)
-        self._prefill_pool = make_pool_prefill_step(cfg, self.kind)
+        self._step = make_pool_decode_step(cfg, self.kinds)
+        self._prefill_pool = make_pool_prefill_step(cfg, self.kinds)
+        self._prefill_blocks = {k: make_prefill_block(cfg, k)
+                                for k in set(self.kinds)}
+        # constant-shape filler for unused emb0/enc_rows step inputs, so the
+        # jit trace key never varies with them
+        self._dummy = jnp.zeros((1, 1, 1), jnp.float32)
+        self._zero_encl = jnp.zeros((n_rows,), jnp.int32)
 
     # -- session admission bookkeeping --------------------------------------
     def fits(self, sid: int, k_blocks: int) -> bool:
@@ -138,61 +163,97 @@ class BlockServer:
 
     # -- compute ------------------------------------------------------------
     def _layer_params(self, l_rel: int):
-        return jax.tree.map(lambda x: x[l_rel], self.stacked)
+        for r, (kind, lo, hi) in enumerate(self.runs):
+            if lo <= l_rel < hi:
+                return jax.tree.map(lambda x: x[l_rel - lo],
+                                    self.run_params[r])
+        raise IndexError(l_rel)
 
-    def prefill_range(self, sid: int, h, lo: int, hi: int, positions):
-        """Prefill blocks [lo, hi) for one session; fills its pool row."""
+    def prefill_range(self, sid: int, h, lo: int, hi: int, positions,
+                      emb0=None, enc_h=None):
+        """Prefill blocks [lo, hi) for one session (serial reference path);
+        fills its pool row.  ``emb0``/``enc_h``: the extra inputs shared-
+        attention / cross-attention blocks need."""
         assert self.alive, f"server {self.sid} is dead"
         row = self.pool.rows[sid]
         S = h.shape[1]
         entries = []
         for l in range(lo, hi):
+            kind = self.kinds[l - self.a]
             p = self._layer_params(l - self.a)
-            if self.kind == "decoder":
-                h, cache, _ = self._prefill_block(
-                    p, h, positions, jnp.int32(l))
-            else:
-                h, cache = self._prefill_block(p, h)
+            fb = self._prefill_blocks[kind]
+            if kind == "decoder":
+                h, cache, _ = fb(p, h, positions, jnp.int32(l))
+            elif kind in ("rwkv", "mamba"):
+                h, cache = fb(p, h)
+            elif kind == "mamba_shared":
+                h, cache = fb(p, self.shared, h, emb0, positions)
+            elif kind == "enc":
+                h = fb(p, h, positions)
+                cache = {}
+            else:  # dec
+                h, cache = fb(p, h, positions, enc_h)
             entries.append(cache)
         self.pool.write_prefill_range(lo - self.a, hi - self.a, row,
                                       entries, S)
         return h
 
-    def prefill_rows(self, h_rows, layer_active, offset: int = 0):
+    def prefill_rows(self, h_rows, layer_active, offset: int = 0,
+                     phase: str = "all", emb0_rows=None, enc_rows=None):
         """THE batched prefill: one jitted call prefills a (padded) prompt
         chunk starting at ``offset`` for every masked row, writing the
-        chunk's K/V (or rwkv state) into the pool."""
+        chunk's state into the pool.  ``phase`` selects encoder vs
+        non-encoder runs for enc-dec stacks (see make_pool_prefill_step)."""
         assert self.alive, f"server {self.sid} is dead"
         h_out, self.pool.tree = self._prefill_pool(
-            self.stacked, self.pool.tree, h_rows, layer_active,
-            self.layer_ids, offset)
+            self.run_params, self.shared, self.pool.tree, h_rows,
+            self._dummy if emb0_rows is None else emb0_rows,
+            self._dummy if enc_rows is None else enc_rows,
+            layer_active, self.layer_ids, offset, phase)
         return h_out
 
-    def decode_rows(self, h_rows, pos_rows, layer_active):
+    def decode_rows(self, h_rows, pos_rows, layer_active, emb0_rows=None,
+                    enc_len_rows=None):
         """THE batched step: one jitted call decodes all masked rows."""
         assert self.alive, f"server {self.sid} is dead"
         h_out, self.pool.tree = self._step(
-            self.stacked, self.pool.tree, h_rows, pos_rows, layer_active,
-            self.layer_ids)
+            self.run_params, self.shared, self.pool.tree, h_rows, pos_rows,
+            self._dummy if emb0_rows is None else emb0_rows,
+            self._zero_encl if enc_len_rows is None else enc_len_rows,
+            layer_active, self.layer_ids)
         return h_out
 
-    def decode_range(self, sid: int, h, lo: int, hi: int, pos: int):
+    def decode_range(self, sid: int, h, lo: int, hi: int, pos: int,
+                     emb0=None, enc_len: int = 0):
         """Single-session decode of blocks [lo, hi) via the pooled step (the
-        same program as the batched path — bit-for-bit identical)."""
+        same program as the batched path — bit-for-bit identical).  Encoder
+        blocks in the range are skipped (no decode-time work)."""
+        lo = max(lo, self.n_enc)
+        if lo >= hi:
+            return h
         row = self.pool.rows[sid]
         N = self.pool.n_rows
         h_rows = jnp.zeros((N,) + h.shape[1:], h.dtype).at[row].set(h[0])
         pos_rows = jnp.zeros((N,), jnp.int32).at[row].set(pos)
+        emb0_rows = None
+        if emb0 is not None:
+            emb0_rows = jnp.zeros((N,) + emb0.shape[1:],
+                                  emb0.dtype).at[row].set(emb0[0])
+        encl_rows = None
+        if enc_len:
+            encl_rows = self._zero_encl.at[row].set(enc_len)
         mask = np.zeros((self.m, N), bool)
         mask[lo - self.a: hi - self.a, row] = True
-        h_out = self.decode_rows(h_rows, pos_rows, jnp.asarray(mask))
+        h_out = self.decode_rows(h_rows, pos_rows, jnp.asarray(mask),
+                                 emb0_rows, encl_rows)
         return h_out[row][None]
 
 
 @dataclass
 class _PrefillGroup:
-    """Co-admitted sessions sharing one route and one prompt-length bucket,
-    prefilled together in chunk rounds through the pooled prefill step.
+    """Co-admitted sessions sharing one route, one prompt-length bucket and
+    (enc-dec) one encoder length, prefilled together in chunk rounds
+    through the pooled prefill step.
 
     ``bucket is None`` marks a chunked group: prompts longer than the
     largest bucket, processed in max-bucket-sized chunks that interleave
@@ -202,10 +263,14 @@ class _PrefillGroup:
     route: Route
     bucket: Optional[int]
     members: List[EngineSession]
+    enc_len: int = 0  # shared encoder length (enc-dec groups)
     offset: int = 0  # tokens prefilled so far (next chunk start)
     # per-sid per-hop activation chunks, stitched into the client-side
     # failover cache (EngineSession.hop_inputs) at completion
     hop_chunks: Dict[int, List[List[jnp.ndarray]]] = field(
+        default_factory=dict)
+    # per-sid per-hop ENC-phase inputs (enc-dec groups; None elsewhere)
+    enc_inputs: Dict[int, List[Optional[jnp.ndarray]]] = field(
         default_factory=dict)
 
 
@@ -222,6 +287,10 @@ class GeoServingSystem:
     the smallest fitting bucket, and prompts longer than the largest bucket
     are prefilled in max-bucket-sized chunks that interleave with decode
     rounds.  Defaults to powers of two up to ``max_seq_len`` (no chunking).
+    Stacks with recurrent state (rwkv, zamba2 hybrids) always prefill at
+    the exact prompt length — grouping batches equal lengths instead.
+    ``max_enc_len``: cross-KV pool capacity for enc-dec stacks (defaults to
+    ``max_seq_len``).
     """
 
     def __init__(self, cfg: ModelConfig, params, problem: Problem,
@@ -229,7 +298,8 @@ class GeoServingSystem:
                  max_new_tokens: int = 64, max_sessions: int = 8,
                  max_seq_len: Optional[int] = None,
                  prefill_mode: str = "batched",
-                 prefill_buckets: Optional[Tuple[int, ...]] = None):
+                 prefill_buckets: Optional[Tuple[int, ...]] = None,
+                 max_enc_len: Optional[int] = None):
         assert problem.L == cfg.n_layers
         assert prefill_mode in ("batched", "serial"), prefill_mode
         self.cfg = cfg
@@ -242,7 +312,13 @@ class GeoServingSystem:
             max_seq_len if max_seq_len is not None
             else problem.workload.l_in + max_new_tokens + 32)
         self.prefill_mode = prefill_mode
-        self._kind = _block_kind(cfg)
+        self.specs = state_specs(cfg)
+        self._recurrent = any(s.recurrent for s in self.specs)
+        self._needs_emb0 = any(s.needs_emb0 for s in self.specs)
+        self._n_enc = int(cfg.n_enc_layers)
+        self._is_enc_dec = cfg.is_enc_dec
+        self.max_enc_len = int(max_enc_len) if max_enc_len is not None \
+            else self.max_seq_len
         if prefill_buckets is None:
             prefill_buckets = default_prefill_buckets(self.max_seq_len)
         self.prefill_buckets = tuple(sorted(
@@ -262,8 +338,11 @@ class GeoServingSystem:
         self._sid = 0
         self._embed = jax.jit(
             lambda emb, tok: embed_tokens(emb, cfg, NULL_SH, tok))
+        self._embed_frames = jax.jit(
+            lambda emb, fr: embed_frames(emb, cfg, NULL_SH, fr))
         self._lm_head = jax.jit(
             lambda emb, h: lm_head(emb, cfg, NULL_SH, h))
+        self._sampler = make_sampler()
 
     # ------------------------------------------------------------------
     def _cap_slots(self, j: int, m: int) -> int:
@@ -285,7 +364,8 @@ class GeoServingSystem:
             n_rows = max(1, min(self.max_sessions, cap))
             self.servers[j] = BlockServer(
                 j, self.cfg, self.params, a, m, n_rows=n_rows,
-                max_len=self.max_seq_len, cap_slots=cap)
+                max_len=self.max_seq_len, cap_slots=cap,
+                enc_len=self.max_enc_len if self._is_enc_dec else 0)
 
     def alive_placement(self) -> Placement:
         a = np.array(self.placement.a)
@@ -301,19 +381,44 @@ class GeoServingSystem:
     # Session lifecycle (continuous batching API)
     # ------------------------------------------------------------------
     def create_session(self, tokens: np.ndarray, client: int, route: Route,
-                       n_new: int, arrival: float = 0.0) -> int:
-        """Register an admitted session (no compute, no slots yet)."""
+                       n_new: int, arrival: float = 0.0,
+                       frames: Optional[np.ndarray] = None,
+                       sampling: Optional[SamplingSpec] = None) -> int:
+        """Register an admitted session (no compute, no slots yet).
+
+        ``frames``: (S_enc, frame_dim) encoder input — required for enc-dec
+        stacks, rejected otherwise.  ``sampling``: per-session token policy
+        (defaults to greedy)."""
         S = len(tokens)
         if S + n_new > self.max_seq_len:
             raise ValueError(
                 f"prompt {S} + n_new {n_new} exceeds max_seq_len "
                 f"{self.max_seq_len}; raise max_seq_len at engine build")
+        enc_len = 0
+        if self._is_enc_dec:
+            if frames is None:
+                raise ValueError(
+                    "enc-dec stacks need encoder `frames` per session")
+            frames = np.asarray(frames)
+            if frames.ndim != 2 or frames.shape[1] != self.cfg.frame_dim:
+                raise ValueError(
+                    f"frames must be (S_enc, {self.cfg.frame_dim}); got "
+                    f"{frames.shape}")
+            enc_len = int(frames.shape[0])
+            if enc_len > self.max_enc_len:
+                raise ValueError(
+                    f"encoder input {enc_len} exceeds max_enc_len "
+                    f"{self.max_enc_len}; raise max_enc_len at engine build")
+        elif frames is not None:
+            raise ValueError("`frames` is only meaningful for enc-dec stacks")
         sid = self._sid
         self._sid += 1
         self.sessions[sid] = EngineSession(
             sid=sid, client=client, route=route, prompt_len=S, n_new=n_new,
             arrival=arrival, tokens=[int(t) for t in np.asarray(tokens)],
-            hop_inputs=[[] for _ in route.servers])
+            hop_inputs=[[] for _ in route.servers],
+            sampling=sampling if sampling is not None else SamplingSpec(),
+            frames=frames, enc_len=enc_len)
         return sid
 
     def fits_session(self, sid: int) -> bool:
@@ -367,22 +472,24 @@ class GeoServingSystem:
                 self._prefill_serial(sess)
                 self._finalize_prefill(sess, sess._h[:, -1:])
             return [s.sid for s in admitted]
-        # batched: group by (route, bucket).  rwkv states are recurrent, so
-        # rwkv groups use the EXACT prompt length (no padding, no chunking);
-        # decoder prompts longer than the largest bucket go to the chunked
-        # group of their route (bucket None).
-        groups: Dict[Tuple[Route, Optional[int]], List[EngineSession]] = {}
+        # batched: group by (route, bucket[, enc_len]).  Stacks with
+        # recurrent state (rwkv, mamba) use the EXACT prompt length as the
+        # bucket (no padding, no chunking — bucket_for's family rule);
+        # attention-family prompts longer than the largest bucket go to the
+        # chunked group of their route (bucket None).
+        groups: Dict[Tuple[Route, Optional[int], int],
+                     List[EngineSession]] = {}
         for sess in admitted:
             sess.state = "prefilling"
-            if self._kind == "rwkv":
-                b: Optional[int] = sess.prompt_len
-            else:
-                b = bucket_for(self.prefill_buckets, sess.prompt_len)
-            groups.setdefault((sess.route, b), []).append(sess)
-        for (route, b), members in groups.items():
+            b = bucket_for(self.prefill_buckets, sess.prompt_len, self.specs)
+            groups.setdefault((sess.route, b, sess.enc_len),
+                              []).append(sess)
+        for (route, b, enc_len), members in groups.items():
             self._prefill_groups.append(_PrefillGroup(
-                route=route, bucket=b, members=members,
+                route=route, bucket=b, members=members, enc_len=enc_len,
                 hop_chunks={s.sid: [[] for _ in route.servers]
+                            for s in members},
+                enc_inputs={s.sid: [None] * len(route.servers)
                             for s in members}))
         return [s.sid for s in admitted]
 
@@ -417,7 +524,7 @@ class GeoServingSystem:
         co-members), so a session runs the exact same pooled programs
         whether admitted alone or inside a bucket group, and failover
         replay can rebuild bit-identical caches from the plan."""
-        if self._kind == "rwkv":  # recurrent state: exact length, one shot
+        if self._recurrent:  # order-sensitive state: exact length, one shot
             return [(0, prompt_len, prompt_len)]
         b = bucket_for(self.prefill_buckets, prompt_len)
         if b is not None:
@@ -430,6 +537,38 @@ class GeoServingSystem:
             plan.append((off, min(prompt_len - off, t_pad), t_pad))
             off += t_pad
         return plan
+
+    def _prefill_enc_phase(self, g: _PrefillGroup,
+                           active: List[EngineSession]):
+        """One exact-length pooled pass over the encoder blocks of a group's
+        route (enc-dec stacks; runs once, before the first decoder chunk).
+        Leaves each member's encoder output on ``sess.enc_out``."""
+        for s in active:
+            s._h = self._embed_frames(
+                self.params["embed"],
+                jnp.asarray(s.frames, jnp.float32)[None])
+        e = 0
+        for hop, (j, k) in enumerate(zip(g.route.servers, g.route.blocks)):
+            if e >= self._n_enc:
+                break
+            srv = self.servers[j]
+            lo, hi = e, min(e + k, self._n_enc)
+            N = srv.pool.n_rows
+            d = active[0]._h.shape[-1]
+            h_buf = np.zeros((N, g.enc_len, d), np.asarray(active[0]._h).dtype)
+            mask = np.zeros((srv.m, N), bool)
+            for s in active:
+                row = srv.pool.rows[s.sid]
+                g.enc_inputs[s.sid][hop] = s._h
+                h_buf[row] = np.asarray(s._h[0])
+                mask[lo - srv.a: hi - srv.a, row] = True
+            h_out = srv.prefill_rows(jnp.asarray(h_buf), jnp.asarray(mask),
+                                     offset=0, phase="enc")
+            for s in active:
+                s._h = h_out[srv.pool.rows[s.sid]][None]
+            e += k
+        for s in active:
+            s.enc_out = s._h
 
     def _prefill_group_round(self, g: _PrefillGroup) -> List[int]:
         """One chunk round for one bucket group: embed the (padded) token
@@ -444,44 +583,77 @@ class GeoServingSystem:
         t_pad = next(tp for off, _, tp in self._prefill_plan(ref_len)
                      if off == g.offset)
         spans = {s.sid: min(s.prompt_len - g.offset, t_pad) for s in active}
+        if self._is_enc_dec and g.offset == 0:
+            self._prefill_enc_phase(g, active)
         for s in active:
             chunk = s.tokens[g.offset: g.offset + spans[s.sid]]
             chunk = chunk + [0] * (t_pad - len(chunk))
             s._h = self._embed(self.params["embed"],
                                jnp.asarray([chunk], jnp.int32))
+            if self._needs_emb0:
+                s._emb0 = s._h
         e = 0
+        phase = "dec" if self._is_enc_dec else "all"
         for hop, (j, k) in enumerate(zip(g.route.servers, g.route.blocks)):
             srv = self.servers[j]
-            N = srv.pool.n_rows
-            d = active[0]._h.shape[-1]
-            h_buf = np.zeros((N, t_pad, d), np.asarray(active[0]._h).dtype)
-            mask = np.zeros((srv.m, N), bool)
-            for s in active:
-                row = srv.pool.rows[s.sid]
-                # client-side failover cache: the UNPADDED chunk entering
-                # this hop (stitched to the full prompt at completion)
-                g.hop_chunks[s.sid][hop].append(s._h[:, : spans[s.sid]])
-                h_buf[row] = np.asarray(s._h[0])
-                mask[e - srv.a: e + k - srv.a, row] = True
-            h_out = srv.prefill_rows(jnp.asarray(h_buf), jnp.asarray(mask),
-                                     g.offset)
-            for s in active:
-                s._h = h_out[srv.pool.rows[s.sid]][None]
+            lo, hi = max(e, self._n_enc), e + k
+            if lo < hi:  # hop hosts decode-phase blocks
+                N = srv.pool.n_rows
+                d = active[0]._h.shape[-1]
+                dt = np.asarray(active[0]._h).dtype
+                h_buf = np.zeros((N, t_pad, d), dt)
+                emb0_buf = (np.zeros((N, t_pad, d), dt)
+                            if self._needs_emb0 else None)
+                enc_buf = None
+                if self._is_enc_dec:
+                    enc_buf = np.zeros(
+                        (N, g.enc_len, d),
+                        np.asarray(active[0].enc_out).dtype)
+                mask = np.zeros((srv.m, N), bool)
+                for s in active:
+                    row = srv.pool.rows[s.sid]
+                    # client-side failover cache: the UNPADDED chunk
+                    # entering this hop (stitched to the full prompt at
+                    # completion)
+                    g.hop_chunks[s.sid][hop].append(s._h[:, : spans[s.sid]])
+                    h_buf[row] = np.asarray(s._h[0])
+                    if emb0_buf is not None:
+                        emb0_buf[row] = np.asarray(s._emb0[0])
+                    if enc_buf is not None:
+                        enc_buf[row] = np.asarray(s.enc_out[0])
+                    mask[lo - srv.a: hi - srv.a, row] = True
+                h_out = srv.prefill_rows(
+                    jnp.asarray(h_buf), jnp.asarray(mask), offset=g.offset,
+                    phase=phase,
+                    emb0_rows=(None if emb0_buf is None
+                               else jnp.asarray(emb0_buf)),
+                    enc_rows=(None if enc_buf is None
+                              else jnp.asarray(enc_buf)))
+                for s in active:
+                    s._h = h_out[srv.pool.rows[s.sid]][None]
             # Virtual clock, consistent with eq. (1): the group's chunk
             # travels the hop as ONE message — its members share a single
-            # RTT — and each session is charged its own k·τ_prefill of
+            # RTT — and each session is charged its own (weighted) k·τ^I of
             # block compute (member rows overlap inside the pooled step).
-            # Per-session latency therefore equals the serial eq. (1) value
-            # for unchunked groups; chunked prompts pay one RTT per chunk
-            # per hop plus τ^I evaluated at the actual chunk length.
-            for s in active:
-                # unchunked groups bill the workload's nominal l_in (like
-                # the simulator); chunked prompts bill the actual span
-                tau = self.problem.servers[j].tau_prefill(
-                    self.problem.workload.l_in if g.bucket is not None
-                    else spans[s.sid])
-                s.prefill_time += (self.problem.rtt_prefill[s.client, j]
-                                   + k * tau * srv.slowdown)
+            # The accounting is family-agnostic like the paper's model:
+            # encoder blocks bill their prefill compute here even though
+            # they do no decode-phase work.  Per-session latency therefore
+            # equals the serial eq. (1) value for unchunked groups; chunked
+            # prompts pay one RTT per chunk per hop plus τ^I evaluated at
+            # the actual chunk length.
+            # unchunked groups bill the workload's nominal l_in (like the
+            # simulator); chunked prompts bill the actual span.  Encoder-
+            # only hops are traversed exactly once (the encoder phase, at
+            # offset 0), so later chunk rounds do not bill them again.
+            if lo < hi or g.offset == 0:
+                for s in active:
+                    tau = self.problem.servers[j].tau_prefill(
+                        self.problem.workload.l_in if g.bucket is not None
+                        else spans[s.sid])
+                    s.prefill_time += (
+                        self.problem.rtt_prefill[s.client, j]
+                        + self.problem.llm.tau_weight(e, e + k)
+                        * tau * srv.slowdown)
             e += k
         g.offset += t_pad
         done: List[int] = []
@@ -489,9 +661,15 @@ class GeoServingSystem:
             if s.prompt_len <= g.offset:
                 for hop in range(len(g.route.servers)):
                     parts = g.hop_chunks[s.sid][hop]
-                    s.hop_inputs[hop].append(
-                        parts[0] if len(parts) == 1
-                        else jnp.concatenate(parts, axis=1))
+                    stitched = (None if not parts
+                                else parts[0] if len(parts) == 1
+                                else jnp.concatenate(parts, axis=1))
+                    if self._is_enc_dec:
+                        s.hop_inputs[hop].append(
+                            {"enc": g.enc_inputs[s.sid][hop],
+                             "dec": stitched})
+                    else:
+                        s.hop_inputs[hop].append(stitched)
                 self._finalize_prefill(s, s._h[:, spans[s.sid] - 1:
                                                spans[s.sid]])
                 done.append(s.sid)
@@ -502,26 +680,53 @@ class GeoServingSystem:
         path for the bucketed one (identical token streams; the bucketed
         path's *structural* bit guarantee is solo-vs-group through the same
         pooled program): per-layer block calls, eq. (1) accounting."""
+        if self._is_enc_dec:
+            eh = self._embed_frames(
+                self.params["embed"],
+                jnp.asarray(sess.frames, jnp.float32)[None])
+            enc_recs: List[Optional[jnp.ndarray]] = \
+                [None] * len(sess.route.servers)
+            e = 0
+            for hop, (j, k) in enumerate(zip(sess.route.servers,
+                                             sess.route.blocks)):
+                if e >= self._n_enc:
+                    break
+                lo, hi = e, min(e + k, self._n_enc)
+                enc_recs[hop] = eh
+                eh = self.servers[j].prefill_range(
+                    sess.sid, eh, lo, hi, jnp.arange(sess.enc_len))
+                e += k
+            sess.enc_out = eh
         prompt = jnp.asarray(sess.tokens[: sess.prompt_len],
                              jnp.int32)[None, :]
         h = self._embed(self.params["embed"], prompt)
+        emb0 = h if self._needs_emb0 else None
         positions = jnp.arange(sess.prompt_len)
         e = 0
         for hop, (j, k) in enumerate(zip(sess.route.servers,
                                          sess.route.blocks)):
             srv = self.servers[j]
-            sess.hop_inputs[hop].append(h)
-            h = srv.prefill_range(sess.sid, h, e, e + k, positions)
+            lo, hi = max(e, self._n_enc), e + k
+            if self._is_enc_dec:
+                sess.hop_inputs[hop].append(
+                    {"enc": enc_recs[hop], "dec": h if lo < hi else None})
+            else:
+                sess.hop_inputs[hop].append(h)
+            if lo < hi:
+                h = srv.prefill_range(sess.sid, h, lo, hi, positions,
+                                      emb0=emb0, enc_h=sess.enc_out)
             sess.prefill_time += (
                 self.problem.rtt_prefill[sess.client, j]
-                + k * self.problem.servers[j].tau_prefill(
+                + self.problem.llm.tau_weight(e, e + k)
+                * self.problem.servers[j].tau_prefill(
                     self.problem.workload.l_in) * srv.slowdown)
             e += k
         sess._h = h
 
     def _finalize_prefill(self, sess: EngineSession, h_last):
         """Prefill done: close the virtual-clock accounting and emit the
-        first generated token from the prompt's last-position logits."""
+        first generated token from the prompt's last-position logits via
+        the session's sampling policy."""
         sess.pos = sess.prompt_len
         sess.virtual_time += sess.prefill_time
         sess.per_token_time = self._route_per_token(sess)
@@ -530,16 +735,36 @@ class GeoServingSystem:
                     + max(sess.n_new - 1, 0) * sess.per_token_time)
         logits = self._lm_head(self.params["embed"], h_last)
         sess.last_logits = logits[0, 0]
-        sess.tokens.append(int(jnp.argmax(logits[0, 0])))
+        sess.tokens.append(self._sample_tokens([sess])[0])
         sess.n_generated = 1
         sess._h = None
+        sess._emb0 = None
+
+    def _sample_tokens(self, sessions: List[EngineSession]) -> List[int]:
+        """One vmapped sampler call for a round's sessions: per-row
+        (temperature, top_k, key) inputs — policies vary per session
+        without retracing.  Session ``s`` draws the key for token index
+        ``s.n_generated`` (deterministic per (seed, index))."""
+        logits = jnp.stack([s.last_logits for s in sessions])
+        temps, topks, keys = [], [], []
+        for s in sessions:
+            t, k = s.sampling.row_params()
+            temps.append(t)
+            topks.append(k)
+            keys.append(s.sampling.key_for(s.n_generated))
+        toks = self._sampler(logits, jnp.asarray(temps, jnp.float32),
+                             jnp.asarray(topks, jnp.int32), jnp.stack(keys))
+        return [int(t) for t in np.asarray(toks)]
 
     def _route_per_token(self, sess: EngineSession) -> float:
         t = 0.0
+        e = 0
         for j, k in zip(sess.route.servers, sess.route.blocks):
             t += (self.problem.rtt_token[sess.client, j]
-                  + k * self.problem.servers[j].tau
+                  + self.problem.llm.tau_weight(e, e + k)
+                  * self.problem.servers[j].tau
                   * self.servers[j].slowdown)
+            e += k
         return t
 
     def decode_round(self, sids: Optional[List[int]] = None) -> Dict[int, int]:
@@ -557,27 +782,46 @@ class GeoServingSystem:
         for sess in group:
             tok = jnp.asarray([[sess.tokens[-1]]], jnp.int32)
             sess._h = self._embed(self.params["embed"], tok)
+            sess._emb0 = sess._h
         self._traverse(group)
-        out = {}
-        for sess in group:
-            if sess.state != "active":  # aborted by unservable failover
-                continue
+        emit = [s for s in group if s.state == "active"]
+        for sess in emit:  # aborted-by-failover sessions are excluded
             sess.pos += 1
             logits = self._lm_head(self.params["embed"], sess._h)
             sess.last_logits = logits[0, 0]
-            nxt = int(jnp.argmax(logits[0, 0]))
-            sess.tokens.append(nxt)
-            sess.n_generated += 1
-            sess.virtual_time += sess.per_token_time
-            sess._h = None
-            out[sess.sid] = nxt
+        out: Dict[int, int] = {}
+        if emit:
+            for sess, nxt in zip(emit, self._sample_tokens(emit)):
+                sess.tokens.append(nxt)
+                sess.n_generated += 1
+                sess.virtual_time += sess.per_token_time
+                sess._h = None
+                sess._emb0 = None
+                out[sess.sid] = nxt
         return out
+
+    def _hop_span(self, sess: EngineSession, hop: int) -> Tuple[int, int]:
+        e_lo = sum(sess.route.blocks[:hop])
+        return e_lo, e_lo + sess.route.blocks[hop]
 
     def _traverse(self, group: List[EngineSession]):
         """Advance every session in ``group`` through its full route (one
-        token's worth of work), batching per (hop, server)."""
+        token's worth of work), batching per (hop, server).  Hops hosting
+        only encoder blocks are skipped — they do no decode-time work (and
+        need no failover: their blocks are stateless)."""
         progress = {s.sid: 0 for s in group}
+
+        def skip_enc_hops(s):
+            while (s.state == "active"
+                   and progress[s.sid] < len(s.route.servers)):
+                e_lo, e_hi = self._hop_span(s, progress[s.sid])
+                if max(e_lo, self._n_enc) < e_hi:
+                    return
+                progress[s.sid] += 1
+
         while True:
+            for s in group:
+                skip_enc_hops(s)
             pending = [s for s in group
                        if s.state == "active"
                        and progress[s.sid] < len(s.route.servers)]
@@ -606,26 +850,36 @@ class GeoServingSystem:
                 srv = self.servers[j]
                 N = srv.pool.n_rows
                 d = members[0]._h.shape[-1]
-                h_buf = np.zeros((N, 1, d), np.asarray(members[0]._h).dtype)
+                dt = np.asarray(members[0]._h).dtype
+                h_buf = np.zeros((N, 1, d), dt)
                 pos_buf = np.zeros((N,), np.int32)
+                emb0_buf = (np.zeros((N, 1, d), dt)
+                            if self._needs_emb0 else None)
+                encl_buf = (np.zeros((N,), np.int32)
+                            if self._is_enc_dec else None)
                 mask = np.zeros((srv.m, N), bool)
-                spans = {}
+                rows = {}
                 for s in members:
                     hop = progress[s.sid]
                     row = srv.pool.rows[s.sid]
-                    e_lo = sum(s.route.blocks[:hop])
-                    k = s.route.blocks[hop]
+                    e_lo, e_hi = self._hop_span(s, hop)
+                    lo = max(e_lo, self._n_enc)
                     s.hop_inputs[hop].append(s._h)
                     h_buf[row] = np.asarray(s._h[0])
                     pos_buf[row] = s.pos
-                    mask[e_lo - srv.a: e_lo + k - srv.a, row] = True
-                    spans[s.sid] = (row, k)
-                h_out = srv.decode_rows(jnp.asarray(h_buf),
-                                        jnp.asarray(pos_buf),
-                                        jnp.asarray(mask))
+                    if emb0_buf is not None:
+                        emb0_buf[row] = np.asarray(s._emb0[0])
+                    if encl_buf is not None:
+                        encl_buf[row] = s.enc_len
+                    mask[lo - srv.a: e_hi - srv.a, row] = True
+                    rows[s.sid] = row
+                h_out = srv.decode_rows(
+                    jnp.asarray(h_buf), jnp.asarray(pos_buf),
+                    jnp.asarray(mask),
+                    None if emb0_buf is None else jnp.asarray(emb0_buf),
+                    None if encl_buf is None else jnp.asarray(encl_buf))
                 for s in members:
-                    row, k = spans[s.sid]
-                    s._h = h_out[row][None]
+                    s._h = h_out[rows[s.sid]][None]
                     progress[s.sid] += 1
 
     def _abort_session(self, sess: EngineSession):
@@ -634,6 +888,7 @@ class GeoServingSystem:
         report as dropped."""
         sess.state = "failed"
         sess._h = None
+        sess._emb0 = None
         for j in set(sess.route.servers):
             if j in self.servers:
                 self.servers[j].evict(sess.sid)
@@ -669,7 +924,9 @@ class GeoServingSystem:
     # ------------------------------------------------------------------
     # Legacy single-session API (implemented on the pooled machinery)
     # ------------------------------------------------------------------
-    def submit(self, tokens: np.ndarray, client: int = 0, now: float = 0.0
+    def submit(self, tokens: np.ndarray, client: int = 0, now: float = 0.0,
+               frames: Optional[np.ndarray] = None,
+               sampling: Optional[SamplingSpec] = None
                ) -> Tuple[int, jnp.ndarray]:
         """Start a session immediately (prefill).  Returns (sid, logits)."""
         alive = self.alive_placement()
@@ -680,7 +937,8 @@ class GeoServingSystem:
         if route is None:
             raise RuntimeError("no feasible route")
         sid = self.create_session(tokens, client, route,
-                                  n_new=self.max_new_tokens, arrival=now)
+                                  n_new=self.max_new_tokens, arrival=now,
+                                  frames=frames, sampling=sampling)
         if not self.try_admit_session(sid, now=now):
             self.sessions.pop(sid)
             raise RuntimeError("no free cache slots for immediate admission")
@@ -688,7 +946,7 @@ class GeoServingSystem:
 
     def decode(self, sid: int, token: int) -> jnp.ndarray:
         """One decode step through the session's chain.  The caller picks
-        the token for the last position — a provisional argmax tail left by
+        the token for the last position — a provisional sampled tail left by
         ``try_admit_session``/``decode_round`` is replaced, not duplicated."""
         sess = self.sessions[sid]
         if len(sess.tokens) == sess.pos + 1:
@@ -698,12 +956,14 @@ class GeoServingSystem:
         sess.n_generated = len(sess.tokens) - sess.prompt_len
         tok = jnp.asarray([[int(token)]], jnp.int32)
         sess._h = self._embed(self.params["embed"], tok)
+        sess._emb0 = sess._h
         self._traverse([sess])
         sess.pos += 1
         sess.virtual_time += self._route_per_token(sess)
         logits = self._lm_head(self.params["embed"], sess._h)
         sess.last_logits = logits[0, 0]
         sess._h = None
+        sess._emb0 = None
         return logits[:, 0]
 
     def finish(self, sid: int):
@@ -749,24 +1009,43 @@ class GeoServingSystem:
         m[alive.m <= 0] = 0
         sub = Placement(a=a - lo, m=m)
         subproblem = dataclasses.replace(self.problem)
-        subproblem.llm = dataclasses.replace(self.problem.llm,
-                                             n_blocks=hi - lo)
+        kw = dict(n_blocks=hi - lo)
+        if self.problem.llm.block_tau is not None:
+            kw["block_tau"] = self.problem.llm.block_tau[lo:hi]
+        subproblem.llm = dataclasses.replace(self.problem.llm, **kw)
         route, _ = shortest_path_route(subproblem, sub, client)
         return route.servers if route is not None else None
 
     def _replay_prefill_range(self, sess: EngineSession, j: int, lo: int,
                               hi: int, h_full):
-        """Failover replay of one hop's prompt prefill.  In batched mode the
-        replay follows the session's deterministic chunk plan through the
-        SAME pooled programs that built the original caches — zero pad
-        columns are bit-equivalent to the originals because padded positions
-        are causally masked out of every valid position's computation — so
-        the rebuilt caches are bit-identical.  Serial mode keeps the legacy
-        exact-length replay."""
+        """Failover replay of one hop's prompt prefill (single-phase
+        stacks).  In batched mode the replay follows the session's
+        deterministic chunk plan through the SAME pooled programs that
+        built the original caches — zero pad columns are bit-equivalent to
+        the originals because padded positions are causally masked out of
+        every valid position's computation — so the rebuilt caches are
+        bit-identical.  Recurrent stacks replay exact-length in one shot
+        (their plan).  Serial mode keeps the legacy exact-length replay."""
         srv = self.servers[j]
+        emb0_full = None
+        if self._needs_emb0:
+            emb0_full = self._embed(
+                self.params["embed"],
+                jnp.asarray([sess.tokens[: sess.prompt_len]], jnp.int32))
         if self.prefill_mode == "serial":
             return srv.prefill_range(sess.sid, h_full, lo, hi,
-                                     jnp.arange(h_full.shape[1]))
+                                     jnp.arange(h_full.shape[1]),
+                                     emb0=emb0_full)
+        return self._replay_chunked(sess, srv, lo, hi, h_full, "all",
+                                    emb0_full=emb0_full)
+
+    def _replay_chunked(self, sess: EngineSession, srv: BlockServer,
+                        lo: int, hi: int, h_full, phase: str,
+                        enc_rows=None, emb0_full=None):
+        """Replay blocks [lo, hi) of one session's prompt through the
+        pooled prefill programs, following its deterministic chunk plan —
+        the ONE chunk-replay loop shared by the single-phase and enc-dec
+        failover paths."""
         N = srv.pool.n_rows
         d = h_full.shape[-1]
         row = srv.pool.rows[sess.sid]
@@ -781,9 +1060,55 @@ class GeoServingSystem:
                     [chunk, jnp.zeros((1, t_pad - span, d), chunk.dtype)], 1)
             h_buf = jnp.zeros((N, t_pad, d), chunk.dtype).at[row].set(
                 chunk[0])
-            h_out = srv.prefill_rows(h_buf, mask, off)
+            emb0_rows = None
+            if emb0_full is not None:  # recurrent plan: one exact chunk
+                emb0_rows = jnp.zeros((N, t_pad, d),
+                                      emb0_full.dtype).at[row].set(
+                    emb0_full[0, off: off + t_pad])
+            h_out = srv.prefill_rows(h_buf, mask, offset=off, phase=phase,
+                                     emb0_rows=emb0_rows, enc_rows=enc_rows)
             outs.append(h_out[row][None, :span])
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+
+    def _replay_prefill_encdec(self, sess: EngineSession, j: int, lo: int,
+                               hi: int, hs_enc, hs_dec):
+        """Failover replay of one replacement hop of an enc-dec route: the
+        encoder sub-range replays the exact-length frame activations (the
+        blocks are stateless — this only threads the activations forward so
+        later hop histories stay exact), the decoder sub-range replays the
+        prompt per its chunk plan, rebuilding self-KV and cross-KV (from
+        the session's cached ``enc_out``)."""
+        srv = self.servers[j]
+        n_enc = self._n_enc
+        if lo < n_enc and hs_enc is not None:
+            elo, ehi = lo, min(hi, n_enc)
+            if self.prefill_mode == "serial":
+                hs_enc = srv.prefill_range(sess.sid, hs_enc, elo, ehi,
+                                           jnp.arange(hs_enc.shape[1]))
+            else:
+                N = srv.pool.n_rows
+                row = srv.pool.rows[sess.sid]
+                mask = np.zeros((srv.m, N), bool)
+                mask[elo - srv.a: ehi - srv.a, row] = True
+                h_buf = jnp.zeros((N,) + hs_enc.shape[1:],
+                                  hs_enc.dtype).at[row].set(hs_enc[0])
+                h_out = srv.prefill_rows(h_buf, jnp.asarray(mask),
+                                         offset=0, phase="enc")
+                hs_enc = h_out[row][None]
+        if hi > n_enc and hs_dec is not None:
+            dlo = max(lo, n_enc)
+            if self.prefill_mode == "serial":
+                hs_dec = srv.prefill_range(
+                    sess.sid, hs_dec, dlo, hi,
+                    jnp.arange(hs_dec.shape[1]), enc_h=sess.enc_out)
+            else:
+                row = srv.pool.rows[sess.sid]
+                enc_rows = jnp.zeros(
+                    (srv.pool.n_rows,) + sess.enc_out.shape[1:],
+                    sess.enc_out.dtype).at[row].set(sess.enc_out[0])
+                hs_dec = self._replay_chunked(sess, srv, dlo, hi, hs_dec,
+                                              "dec", enc_rows=enc_rows)
+        return hs_enc, hs_dec
 
     def _failover(self, sess: EngineSession, hop: int):
         """Replace the dead server at ``hop`` by a chain of alive servers and
@@ -796,8 +1121,7 @@ class GeoServingSystem:
             raise RuntimeError(
                 f"no surviving servers cover blocks [{e_lo},{e_hi})")
         inputs = sess.hop_inputs[hop]
-        prompt_h = inputs[0]
-        S = prompt_h.shape[1]
+        rec = inputs[0]
         new_servers = list(sess.route.servers)
         new_blocks = list(sess.route.blocks)
         repl_routes = []
@@ -816,18 +1140,40 @@ class GeoServingSystem:
             self.servers[j].admit(sess.sid, hi2 - lo)
         # replay, recording each replacement hop's OWN input history so a
         # later failure of any replacement hop replays correct activations
-        new_histories: List[List[jnp.ndarray]] = [[] for _ in repl_routes]
-        hs = prompt_h
-        for i, (j, lo, hi2) in enumerate(repl_routes):
-            new_histories[i].append(hs)
-            hs = self._replay_prefill_range(sess, j, lo, hi2, hs)
-        # replay each decoded token
+        new_histories: List[List] = [[] for _ in repl_routes]
+        if self._is_enc_dec:
+            hs_enc = rec.get("enc") if isinstance(rec, dict) else None
+            hs_dec = rec.get("dec") if isinstance(rec, dict) else rec
+            for i, (j, lo, hi2) in enumerate(repl_routes):
+                new_histories[i].append(
+                    {"enc": hs_enc if lo < self._n_enc else None,
+                     "dec": hs_dec if hi2 > self._n_enc else None})
+                hs_enc, hs_dec = self._replay_prefill_encdec(
+                    sess, j, lo, hi2, hs_enc, hs_dec)
+        else:
+            hs = rec
+            for i, (j, lo, hi2) in enumerate(repl_routes):
+                new_histories[i].append(hs)
+                hs = self._replay_prefill_range(sess, j, lo, hi2, hs)
+        # replay each decoded token (encoder-only replacement hops have no
+        # decode-time work — and, symmetrically, an encoder-only dead hop
+        # recorded no decode inputs)
+        S = sess.prompt_len
         for t_idx, h_tok in enumerate(inputs[1:]):
             pos = S + t_idx
+            emb0 = None
+            if self._needs_emb0:
+                emb0 = self._embed(
+                    self.params["embed"],
+                    jnp.asarray([[sess.tokens[pos]]], jnp.int32))
             hh = h_tok
             for i, (j, lo, hi2) in enumerate(repl_routes):
+                if hi2 <= self._n_enc:
+                    continue
                 new_histories[i].append(hh)
-                hh = self.servers[j].decode_range(sess.sid, hh, lo, hi2, pos)
+                hh = self.servers[j].decode_range(
+                    sess.sid, hh, lo, hi2, pos, emb0=emb0,
+                    enc_len=sess.enc_len)
         # splice the replacement chain into the route
         new_servers[hop: hop + 1] = [j for j, _, _ in repl_routes]
         new_blocks[hop: hop + 1] = [hi2 - lo for _, lo, hi2 in repl_routes]
@@ -857,9 +1203,10 @@ class GeoServingSystem:
 
 
 def generate(system: GeoServingSystem, tokens: np.ndarray, n_new: int,
-             client: int = 0) -> Tuple[np.ndarray, float]:
+             client: int = 0, frames: Optional[np.ndarray] = None
+             ) -> Tuple[np.ndarray, float]:
     """End-to-end greedy generation driver.  Returns (tokens, virtual_time)."""
-    sid, logits = system.submit(tokens, client)
+    sid, logits = system.submit(tokens, client, frames=frames)
     out = list(np.asarray(tokens))
     for _ in range(n_new):
         nxt = int(jnp.argmax(logits[-1] if logits.ndim > 1 else logits))

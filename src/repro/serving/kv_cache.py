@@ -1,27 +1,38 @@
-"""Serving caches for the geo engine.
+"""Family-polymorphic serving state pools for the geo engine.
+
+Every BPRR block carries per-session serving state whose SHAPE depends on the
+block's family: KV tensors (or MLA latents) for attention blocks, SSD+conv
+state for mamba mixers, wkv/shift state for rwkv, self-KV plus encoder
+cross-KV for enc-dec decoder blocks — and zamba2's shared-attention blocks
+carry BOTH mamba state and a KV cache.  :class:`StateSpec` names that
+contract per block kind; ``state_specs(cfg)`` derives the per-block spec
+tuple from ``models.blocks.stack_block_kinds`` — the single dispatch point
+replacing the old one-kind-per-engine restriction.
 
 Two granularities:
 
-* ``new_block_cache`` / ``write_prefill_kv`` — single-session per-(server,
-  session, layer) caches.  Kept for API compatibility and for callers that
-  manage their own cache dicts.
+* ``new_block_cache`` — single-session per-(server, session, layer) caches.
+  Kept for API compatibility and for callers that manage their own cache
+  dicts.
 * ``CachePool`` — the continuous-batching layout: per server, ONE stacked
-  pytree whose leaves carry ``(n_layers, n_rows, ...)`` so a single jitted
-  block call (vmapped over rows, scanned over layers) serves every session
-  resident on that server.  Rows are allocated/freed per session; the pool
-  shape never changes, so the engine's decode step traces exactly once per
-  server regardless of how sessions come and go.
+  state tree per *run* of same-kind hosted blocks, leaves
+  ``(run_layers, n_rows, ...)``, so a single jitted step (vmapped over rows,
+  scanned over each run) serves every session resident on that server.  The
+  pooled step factories take the server's static per-layer kind tuple and
+  dispatch each run to its family's block functions — the program still
+  traces exactly once per server, heterogeneous or not.
 
-Slot accounting follows eq. (5)/(20) of the paper: a server hosting ``m``
-blocks has ``⌊(M_j − s_m·m_j)/s_c⌋`` cache *block-slots*; a session routed
-through ``k`` of the server's blocks occupies ``k`` block-slots from start
-to retirement.  ``CachePool`` enforces both the row budget (physical arrays)
-and the block-slot budget (the paper's memory model) — the no-overbooking
-commitment.
+Slot accounting follows eq. (5)/(20) of the paper unchanged (the memory
+model is family-agnostic): a server hosting ``m`` blocks has
+``⌊(M_j − s_m·m_j)/s_c⌋`` cache *block-slots*; a session routed through
+``k`` of the server's blocks occupies ``k`` block-slots from start to
+retirement.  ``CachePool`` enforces both the row budget (physical arrays)
+and the block-slot budget — the no-overbooking commitment.
 """
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -29,16 +40,92 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 
+# ---------------------------------------------------------------------------
+# StateSpec: the per-block serving-state contract
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StateSpec:
+    """What one BPRR block needs from the serving layer.
+
+    * ``kind``          — block kind (``models.blocks.stack_block_kinds``).
+    * ``recurrent``     — carries order-sensitive recurrent state: prefill
+      must run at the EXACT prompt length in one shot (no padding, no
+      chunked resume) — rwkv and mamba mixers.
+    * ``needs_emb0``    — consumes the stack's original embedding alongside
+      the hidden state (zamba2's shared attention on concat(h, emb0)).
+    * ``cross``         — holds encoder cross-KV (enc-dec decoder blocks);
+      prefill needs the encoder output, decode needs the session's encoder
+      length to mask the over-allocated cross cache.
+    * ``decode_active`` — does per-token decode work at all (encoder blocks
+      do not: their contribution is frozen into the cross-KV at prefill).
+    """
+
+    kind: str
+    recurrent: bool = False
+    needs_emb0: bool = False
+    cross: bool = False
+    decode_active: bool = True
+
+
+_STATE_SPECS: Dict[str, StateSpec] = {
+    "decoder": StateSpec("decoder"),
+    "rwkv": StateSpec("rwkv", recurrent=True),
+    "mamba": StateSpec("mamba", recurrent=True),
+    "mamba_shared": StateSpec("mamba_shared", recurrent=True,
+                              needs_emb0=True),
+    "enc": StateSpec("enc", decode_active=False),
+    "dec": StateSpec("dec", cross=True),
+}
+
+SUPPORTED_KINDS: Tuple[str, ...] = tuple(sorted(_STATE_SPECS))
+
+
+def state_spec_for(kind: str) -> StateSpec:
+    """The :class:`StateSpec` of one block kind; ``ValueError`` (naming the
+    supported set) for anything else — no dead-end ``NotImplementedError``."""
+    try:
+        return _STATE_SPECS[kind]
+    except KeyError:
+        raise ValueError(
+            f"no serving StateSpec for block kind {kind!r}; supported kinds: "
+            + ", ".join(SUPPORTED_KINDS)) from None
+
+
+def state_specs(cfg: ModelConfig) -> Tuple[StateSpec, ...]:
+    """Per-block StateSpec tuple (length ``cfg.n_layers``) for a config."""
+    from repro.models.blocks import stack_block_kinds
+
+    return tuple(state_spec_for(k) for k in stack_block_kinds(cfg))
+
+
+def kind_runs(kinds: Sequence[str]) -> Tuple[Tuple[str, int, int], ...]:
+    """Maximal contiguous same-kind runs: ((kind, lo, hi), ...) covering
+    ``range(len(kinds))``.  The pooled steps scan per run; a server's run
+    structure is static, so its program still traces exactly once."""
+    runs: List[Tuple[str, int, int]] = []
+    for i, k in enumerate(kinds):
+        if runs and runs[-1][0] == k:
+            runs[-1] = (k, runs[-1][1], i + 1)
+        else:
+            runs.append((k, i, i + 1))
+    return tuple(runs)
+
 
 # ---------------------------------------------------------------------------
 # Single-session caches (legacy granularity, used by failover replay helpers)
 # ---------------------------------------------------------------------------
 
 
-def new_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
-    """Allocate one per-(server, session, layer) cache: KV tensors for
-    ``decoder`` blocks (MLA latent/krope when ``cfg.attn_kind == 'mla'``) or
-    recurrent state for ``rwkv`` blocks."""
+def new_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                    enc_len: int = 0):
+    """Allocate one per-(server, session, layer) cache for any supported
+    block kind: KV tensors for ``decoder`` (MLA latent/krope when
+    ``cfg.attn_kind == 'mla'``), recurrent state for ``rwkv``/``mamba``,
+    state + shared-attention KV for ``mamba_shared``, self-KV + encoder
+    cross-KV for ``dec`` (``enc_len`` positions), and ``{}`` for the
+    stateless ``enc`` blocks."""
     cdt = jnp.dtype(cfg.param_dtype)
     if kind == "decoder":
         if cfg.attn_kind == "mla":
@@ -55,9 +142,29 @@ def new_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
             "shift_tm": jnp.zeros((batch, cfg.d_model), jnp.float32),
             "shift_cm": jnp.zeros((batch, cfg.d_model), jnp.float32),
         }
-    raise NotImplementedError(
-        f"engine cache for block kind {kind!r}; BPRR semantics for the "
-        "remaining families run through the simulator and monolithic steps")
+    if kind in ("mamba", "mamba_shared"):
+        h, p, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        out = {
+            "ssm": jnp.zeros((batch, h, p, ns), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim),
+                              jnp.float32),
+        }
+        if kind == "mamba_shared":
+            kv = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            out["k"] = jnp.zeros(kv, cdt)
+            out["v"] = jnp.zeros(kv, cdt)
+        return out
+    if kind == "enc":
+        return {}  # bidirectional encoder blocks hold no serving state
+    if kind == "dec":
+        kv = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        ckv = (batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(kv, cdt), "v": jnp.zeros(kv, cdt),
+                "ck": jnp.zeros(ckv, cdt), "cv": jnp.zeros(ckv, cdt)}
+    raise ValueError(
+        f"no engine cache for block kind {kind!r}; supported kinds: "
+        + ", ".join(SUPPORTED_KINDS))
 
 
 def write_prefill_kv(cache: Dict, kv, length: int) -> Dict:
@@ -80,10 +187,16 @@ def write_prefill_kv(cache: Dict, kv, length: int) -> Dict:
 # Batched slot pools (continuous batching)
 # ---------------------------------------------------------------------------
 
+# leaf names that index TIME along axis 2 of a pooled (layers, rows, T, ...)
+# leaf — written per chunk at [offset, offset+T)
+_SELF_KV_KEYS = frozenset({"k", "v", "latent", "krope"})
+# encoder cross-KV leaves — written once, at [0, enc_len)
+_CROSS_KV_KEYS = frozenset({"ck", "cv"})
 
-def new_cache_pool_tree(cfg: ModelConfig, kind: str, n_layers: int,
-                        n_rows: int, max_len: int):
-    """Stacked caches: leaves (n_layers, n_rows, ...)."""
+
+def new_state_pool_tree(cfg: ModelConfig, kind: str, n_layers: int,
+                        n_rows: int, max_len: int, enc_len: int = 0):
+    """Stacked per-kind serving state: leaves (n_layers, n_rows, ...)."""
     cdt = jnp.dtype(cfg.param_dtype)
     L, N, T = n_layers, n_rows, max_len
     if kind == "decoder":
@@ -101,29 +214,63 @@ def new_cache_pool_tree(cfg: ModelConfig, kind: str, n_layers: int,
             "shift_tm": jnp.zeros((L, N, cfg.d_model), jnp.float32),
             "shift_cm": jnp.zeros((L, N, cfg.d_model), jnp.float32),
         }
-    raise NotImplementedError(
-        f"cache pool for block kind {kind!r}; remaining families run "
-        "through the simulator and monolithic serve steps")
+    if kind in ("mamba", "mamba_shared"):
+        h, p, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        tree = {
+            "ssm": jnp.zeros((L, N, h, p, ns), jnp.float32),
+            "conv": jnp.zeros((L, N, cfg.conv_width - 1, conv_dim),
+                              jnp.float32),
+        }
+        if kind == "mamba_shared":
+            kv = (L, N, T, cfg.n_kv_heads, cfg.head_dim)
+            tree["k"] = jnp.zeros(kv, cdt)
+            tree["v"] = jnp.zeros(kv, cdt)
+        return tree
+    if kind == "enc":
+        return {}
+    if kind == "dec":
+        kv = (L, N, T, cfg.n_kv_heads, cfg.head_dim)
+        ckv = (L, N, enc_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(kv, cdt), "v": jnp.zeros(kv, cdt),
+                "ck": jnp.zeros(ckv, cdt), "cv": jnp.zeros(ckv, cdt)}
+    raise ValueError(
+        f"no state pool for block kind {kind!r}; supported kinds: "
+        + ", ".join(SUPPORTED_KINDS))
+
+
+def new_cache_pool_tree(cfg: ModelConfig, kind: str, n_layers: int,
+                        n_rows: int, max_len: int):
+    """Homogeneous-stack compatibility alias of ``new_state_pool_tree``."""
+    return new_state_pool_tree(cfg, kind, n_layers, n_rows, max_len)
 
 
 class CachePool:
-    """Row + block-slot bookkeeping around the stacked cache pytree of ONE
+    """Row + block-slot bookkeeping around the stacked state trees of ONE
     server.
 
+    * the hosted block range is described by its per-layer ``kinds``; the
+      state lives in one stacked subtree per same-kind run
+      (``self.tree[r]`` for ``self.runs[r]``),
     * ``n_rows`` physical rows (the vmapped batch extent of the jitted step),
     * ``cap_slots`` block-slots per eq. (5): ⌊(M_j − s_m·m_j)/s_c⌋ — a
       session holding ``k`` of this server's blocks consumes ``k`` slots.
     """
 
-    def __init__(self, cfg: ModelConfig, kind: str, n_layers: int,
-                 n_rows: int, max_len: int, cap_slots: int):
+    def __init__(self, cfg: ModelConfig, kinds: Sequence[str], n_rows: int,
+                 max_len: int, cap_slots: int, enc_len: int = 0):
         self.cfg = cfg
-        self.kind = kind
-        self.n_layers = n_layers
+        self.kinds = tuple(kinds)
+        self.runs = kind_runs(self.kinds)
+        self.n_layers = len(self.kinds)
         self.n_rows = n_rows
         self.max_len = max_len
+        self.enc_len = int(enc_len)
         self.cap_slots = int(cap_slots)
-        self.tree = new_cache_pool_tree(cfg, kind, n_layers, n_rows, max_len)
+        self.tree: Tuple[Dict, ...] = tuple(
+            new_state_pool_tree(cfg, kind, hi - lo, n_rows, max_len,
+                                self.enc_len)
+            for kind, lo, hi in self.runs)
         self._free: List[int] = list(range(n_rows))
         self.rows: Dict[int, int] = {}  # sid -> row
         self.blocks: Dict[int, int] = {}  # sid -> k block-slots held
@@ -164,9 +311,10 @@ class CachePool:
         self.slots_used -= self.blocks.pop(sid, 0)
         self._free.append(row)
         # stale row contents are never observable: a new occupant's prefill
-        # overwrites [:prompt_len] (rwkv states entirely), and decode
-        # attention masks kv_pos <= pos — so no zeroing (a full pool copy
-        # per retirement) is needed.
+        # overwrites [:prompt_len] (recurrent states entirely), decode
+        # attention masks kv_pos <= pos, and cross-attention masks
+        # kv_pos < enc_len — so no zeroing (a full pool copy per retirement)
+        # is needed.
 
     def n_sessions(self) -> int:
         return len(self.rows)
@@ -176,23 +324,32 @@ class CachePool:
                             entries: List[Dict], length: int):
         """Insert single-session per-layer cache entries (batch dim 1, one
         per layer in [lo_rel, hi_rel)) into the pool row.  Staged as ONE
-        ranged update per leaf — a per-layer loop would copy the whole pool
-        O(layers) times.  KV-type leaves write [:length]; state leaves
-        (rwkv) overwrite whole."""
+        ranged update per leaf per run — a per-layer loop would copy the
+        whole pool O(layers) times.  Self-KV leaves write [:length];
+        cross-KV leaves write their own (encoder) length; recurrent state
+        leaves overwrite whole."""
         assert len(entries) == hi_rel - lo_rel
-        t = dict(self.tree)
-        if self.kind == "decoder":
-            keys = ("latent", "krope") if "latent" in t else ("k", "v")
-        else:
-            keys = ("wkv", "shift_tm", "shift_cm")
-        for key in keys:
-            stacked = jnp.stack([e[key][0] for e in entries]).astype(
-                t[key].dtype)
-            if self.kind == "decoder":
-                t[key] = t[key].at[lo_rel:hi_rel, row, :length].set(stacked)
-            else:
-                t[key] = t[key].at[lo_rel:hi_rel, row].set(stacked)
-        self.tree = t
+        new_tree = list(self.tree)
+        for r, (kind, rlo, rhi) in enumerate(self.runs):
+            lo, hi = max(lo_rel, rlo), min(hi_rel, rhi)
+            if lo >= hi:
+                continue
+            sub = entries[lo - lo_rel: hi - lo_rel]
+            t = dict(new_tree[r])
+            for key in t:
+                stacked = jnp.stack([e[key][0] for e in sub]).astype(
+                    t[key].dtype)
+                if key in _SELF_KV_KEYS:
+                    t[key] = t[key].at[lo - rlo:hi - rlo, row,
+                                       :length].set(stacked[:, :length])
+                elif key in _CROSS_KV_KEYS:
+                    el = stacked.shape[1]
+                    t[key] = t[key].at[lo - rlo:hi - rlo, row,
+                                       :el].set(stacked)
+                else:  # recurrent state: whole overwrite
+                    t[key] = t[key].at[lo - rlo:hi - rlo, row].set(stacked)
+            new_tree[r] = t
+        self.tree = tuple(new_tree)
 
 
 # ---------------------------------------------------------------------------
@@ -220,168 +377,353 @@ def default_prefill_buckets(max_prompt_len: int, base: int = 8
     return tuple(out)
 
 
-def bucket_for(buckets: Sequence[int], length: int) -> Optional[int]:
+def bucket_for(buckets: Sequence[int], length: int,
+               specs: Optional[Sequence[StateSpec]] = None) -> Optional[int]:
     """Smallest bucket >= ``length``; None when the prompt overflows every
-    bucket (the engine then chunks it into max-bucket-sized pieces)."""
+    bucket (the engine then chunks it into max-bucket-sized pieces).
+
+    Family-aware rule: when ``specs`` contains any layer with RECURRENT
+    state (rwkv, mamba — order-sensitive; trailing pad tokens would corrupt
+    it), the bucket is the exact prompt length: grouping still batches
+    equal lengths, but padding and chunking are attention-only."""
+    if specs is not None and any(s.recurrent for s in specs):
+        return int(length)
     for b in sorted(buckets):  # callers need not pre-sort
         if b >= length:
             return int(b)
     return None
 
 
+# ---------------------------------------------------------------------------
+# Kind-dispatched pooled steps (ONE jitted program per server)
+# ---------------------------------------------------------------------------
+
+
+def _mask_tree(new, old, active):
+    """Keep ``old`` on inactive rows; leaves are (n_rows, ...)."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            active.reshape((-1,) + (1,) * (n.ndim - 1)),
+            n.astype(o.dtype), o),
+        new, old)
+
+
+def _masked_ranged_write(cache, chunk, active, keys, lo, span):
+    """Ranged [lo, lo+span) masked write of chunk leaves named ``keys``."""
+    out = dict(cache)
+    for key in keys:
+        old = cache[key][:, lo:lo + span]
+        msk = active.reshape((-1,) + (1,) * (chunk[key].ndim - 1))
+        out[key] = cache[key].at[:, lo:lo + span].set(
+            jnp.where(msk, chunk[key].astype(old.dtype), old))
+    return out
+
+
 @functools.lru_cache(maxsize=None)
-def make_pool_prefill_step(cfg: ModelConfig, kind: str):
-    """Build THE jitted multi-session prefill step, shared per (cfg, kind).
+def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
+    """Build THE jitted multi-session prefill step for a hosted block range,
+    shared per (cfg, per-layer kind tuple).
 
-    pstep(stacked_params, pool_tree, h, layer_active, layer_ids, offset=0)
-      -> (h, pool_tree)
+    pstep(run_params, shared_params, pool_trees, h, emb0, enc_rows,
+          layer_active, layer_ids, offset, phase) -> (h, pool_trees)
 
-    * ``h``: (n_rows, T_chunk, d_model) right-padded hidden rows — one row
-      per co-admitted session of a bucket group (same row indices as the
-      decode step),
-    * ``offset``: STATIC chunk start position (0 for unchunked prompts);
-      decoder rows attend over their pool cache [0, offset) (the previously
-      prefilled chunks) plus the chunk itself, and the chunk's K/V is written
-      at [offset, offset+T_chunk),
-    * ``layer_active``: (n_layers, n_rows) bool — row r runs layer l iff set;
-      inactive rows keep their hidden state and cache untouched,
-    * ``layer_ids``: (n_layers,) int32 absolute layer indices.
+    * ``run_params``: tuple of per-run stacked block params (axis 0 = the
+      run's layers); ``shared_params``: zamba2's parameter-shared attention
+      block (None otherwise),
+    * ``pool_trees``: tuple of per-run state subtrees (see ``CachePool``),
+    * ``h``: (n_rows, T_chunk, d) right-padded hidden rows — one row per
+      co-admitted session of a bucket group (same row indices as decode),
+    * ``emb0``: (n_rows, T_chunk, d) original embeddings for shared-attn
+      blocks (a dummy leaf when no block needs it),
+    * ``enc_rows``: (n_rows, T_enc, d) encoder outputs for cross-attention
+      blocks (dummy otherwise),
+    * ``offset``: STATIC chunk start (0 for unchunked prompts); attention
+      rows attend over their pool cache [0, offset) plus the chunk and the
+      chunk's K/V is written at [offset, offset+T_chunk),
+    * ``phase``: STATIC — "all" (single-phase stacks), "enc" (run only
+      encoder blocks; ``h`` carries frame embeddings) or "dec" (run only
+      non-encoder blocks; ``h`` carries token embeddings),
+    * ``layer_active``: (n_layers, n_rows) bool — row r runs layer l iff
+      set; inactive rows keep their hidden state and state untouched.
 
     Like the decode step, the program depends only on shapes — never on
     which rows carry sessions — so per-session results are bit-for-bit
-    identical between a group of one and a full bucket group.  The program
-    retraces per (n_layers, n_rows, T_chunk, offset); buckets and chunk
-    offsets keep that set small and bounded.
-
-    RWKV pools must be called with ``offset == 0`` and ``T_chunk`` equal to
-    the TRUE prompt length (no padding, no chunking): the state is recurrent,
-    so trailing pad tokens would corrupt it.  The engine therefore groups
-    rwkv sessions by exact prompt length.
+    identical between a group of one and a full bucket group.  Recurrent
+    kinds (rwkv, mamba, mamba_shared) require ``offset == 0`` and
+    ``T_chunk`` equal to the TRUE prompt length: their state is
+    order-sensitive, so trailing pad tokens would corrupt it.  The engine
+    therefore groups recurrent-stack sessions by exact prompt length.
     """
     from repro.models import blocks as B
     from repro.models.layers import NULL_SH
 
-    def step(stacked_params, pool_tree, h, layer_active, layer_ids, offset):
+    runs = kind_runs(kinds)
+    mla = cfg.attn_kind == "mla"
+
+    def step(run_params, shared_params, pool_trees, h, emb0, enc_rows,
+             layer_active, layer_ids, offset, phase):
         T = h.shape[1]
         positions = offset + jnp.arange(T)
-
-        def body(hc, xs):
-            p, cache, active, lid = xs
+        new_trees = list(pool_trees)
+        for r, (kind, lo, hi) in enumerate(runs):
+            if phase == "enc" and kind != "enc":
+                continue
+            if phase == "dec" and kind == "enc":
+                continue
+            if kind in ("rwkv", "mamba", "mamba_shared") and offset != 0:
+                raise ValueError(
+                    f"recurrent-state kind {kind!r} cannot resume prefill "
+                    "at a nonzero chunk offset")
+            p_stack, tree = run_params[r], pool_trees[r]
+            act, lids = layer_active[lo:hi], layer_ids[lo:hi]
 
             if kind == "decoder":
-                mla = "latent" in cache
+                def body(hc, xs):
+                    p, cache, active, lid = xs
 
-                def one(hr, cr):
-                    if mla:
-                        prefix = (cr["latent"][None, :offset],
-                                  cr["krope"][None, :offset])
-                    else:
+                    def one(hr, cr):
+                        if mla:
+                            prefix = (cr["latent"][None, :offset],
+                                      cr["krope"][None, :offset])
+                        else:
+                            prefix = (cr["k"][None, :offset],
+                                      cr["v"][None, :offset])
+                        hh, cc, _ = B.decoder_block_full(
+                            p, cfg, NULL_SH, hr[None], positions, lid,
+                            prefix_kv=prefix)
+                        return hh[0], jax.tree.map(lambda x: x[0], cc)
+
+                    h2, chunk = jax.vmap(one)(hc, cache)
+                    c2 = _masked_ranged_write(cache, chunk, active,
+                                              tuple(chunk), offset, T)
+                    h2 = jnp.where(active[:, None, None], h2, hc)
+                    return h2, c2
+            elif kind in ("rwkv", "mamba"):
+                blk = (B.rwkv_block_full if kind == "rwkv"
+                       else B.mamba_block_full)
+
+                def body(hc, xs, blk=blk):
+                    p, cache, active, lid = xs
+
+                    def one(hr):
+                        hh, st = blk(p, cfg, NULL_SH, hr[None])
+                        return hh[0], jax.tree.map(lambda x: x[0], st)
+
+                    h2, st = jax.vmap(one)(hc)
+                    c2 = _mask_tree(st, cache, active)
+                    h2 = jnp.where(active[:, None, None], h2, hc)
+                    return h2, c2
+            elif kind == "mamba_shared":
+                def body(hc, xs):
+                    p, cache, active, lid = xs
+
+                    def one(hr, er):
+                        hh, st = B.mamba_block_full(p, cfg, NULL_SH, hr[None])
+                        hh, kv = B.zamba_shared_full(
+                            shared_params, cfg, NULL_SH, hh, er[None],
+                            positions)
+                        return hh[0], {
+                            "ssm": st["ssm"][0], "conv": st["conv"][0],
+                            "k": kv["k"][0], "v": kv["v"][0]}
+
+                    h2, st = jax.vmap(one)(hc, emb0)
+                    c2 = dict(cache, **_mask_tree(
+                        {"ssm": st["ssm"], "conv": st["conv"]},
+                        {"ssm": cache["ssm"], "conv": cache["conv"]},
+                        active))
+                    c2 = _masked_ranged_write(c2, st, active, ("k", "v"),
+                                              0, T)
+                    h2 = jnp.where(active[:, None, None], h2, hc)
+                    return h2, c2
+            elif kind == "enc":
+                def body(hc, xs):
+                    p, cache, active, lid = xs
+
+                    def one(hr):
+                        return B.encoder_block_full(
+                            p, cfg, NULL_SH, hr[None], positions)[0]
+
+                    h2 = jax.vmap(one)(hc)
+                    h2 = jnp.where(active[:, None, None], h2, hc)
+                    return h2, cache
+            elif kind == "dec":
+                def body(hc, xs):
+                    p, cache, active, lid = xs
+
+                    def one(hr, er, cr):
                         prefix = (cr["k"][None, :offset],
                                   cr["v"][None, :offset])
-                    hh, cc, _ = B.decoder_block_full(
-                        p, cfg, NULL_SH, hr[None], positions, lid,
-                        prefix_kv=prefix)
-                    return hh[0], jax.tree.map(lambda x: x[0], cc)
+                        # cross-KV is offset-independent: computed on the
+                        # first chunk, read back from the pool after
+                        enc_kv = None if offset == 0 else (
+                            cr["ck"][None, :er.shape[0]],
+                            cr["cv"][None, :er.shape[0]])
+                        hh, cc = B.cross_decoder_block_full(
+                            p, cfg, NULL_SH, hr[None], positions, er[None],
+                            prefix_kv=prefix, enc_kv=enc_kv)
+                        return hh[0], jax.tree.map(lambda x: x[0], cc)
 
-                h2, chunk = jax.vmap(one)(hc, cache)
-                # masked ranged write of the chunk's entries at
-                # [offset, offset+T) — inactive rows keep their old cache
-                c2 = dict(cache)
-                for key, val in chunk.items():
-                    old = cache[key][:, offset:offset + T]
-                    msk = active.reshape((-1,) + (1,) * (val.ndim - 1))
-                    c2[key] = cache[key].at[:, offset:offset + T].set(
-                        jnp.where(msk, val.astype(old.dtype), old))
-            else:  # rwkv: full-sequence, exact length, whole-state write
-                def one(hr):
-                    hh, st = B.rwkv_block_full(p, cfg, NULL_SH, hr[None])
-                    return hh[0], jax.tree.map(lambda x: x[0], st)
+                    h2, chunk = jax.vmap(one)(hc, enc_rows, cache)
+                    c2 = _masked_ranged_write(cache, chunk, active,
+                                              ("k", "v"), offset, T)
+                    if offset == 0:  # cross-KV is chunk-independent
+                        c2 = _masked_ranged_write(
+                            c2, chunk, active, ("ck", "cv"), 0,
+                            chunk["ck"].shape[1])
+                    h2 = jnp.where(active[:, None, None], h2, hc)
+                    return h2, c2
+            else:
+                raise ValueError(kind)
 
-                h2, st = jax.vmap(one)(hc)
-                c2 = jax.tree.map(
-                    lambda new, old: jnp.where(
-                        active.reshape((-1,) + (1,) * (new.ndim - 1)),
-                        new.astype(old.dtype), old),
-                    st, cache)
-            h2 = jnp.where(active[:, None, None], h2, hc)
-            return h2, c2
+            h, new_tree = jax.lax.scan(body, h, (p_stack, tree, act, lids))
+            new_trees[r] = new_tree
+        return h, tuple(new_trees)
 
-        h, new_pool = jax.lax.scan(
-            body, h, (stacked_params, pool_tree, layer_active, layer_ids))
-        return h, new_pool
-
-    return jax.jit(step, static_argnums=(5,))
+    return jax.jit(step, static_argnums=(8, 9))
 
 
 @functools.lru_cache(maxsize=None)
 def make_prefill_block(cfg: ModelConfig, kind: str):
-    """Jitted single-session per-layer prefill, shared across every server
-    of the same (cfg, kind) — jax's jit cache then reuses compiled programs
-    for servers with identical shapes."""
+    """Jitted single-session per-layer prefill (the serial reference path),
+    shared across every server of the same (cfg, kind) — jax's jit cache
+    then reuses compiled programs for servers with identical shapes."""
     from repro.models import blocks as B
     from repro.models.layers import NULL_SH
 
     if kind == "decoder":
         return jax.jit(lambda p, h, positions, lid: B.decoder_block_full(
             p, cfg, NULL_SH, h, positions, lid))
-    return jax.jit(lambda p, h: B.rwkv_block_full(p, cfg, NULL_SH, h))
+    if kind == "rwkv":
+        return jax.jit(lambda p, h: B.rwkv_block_full(p, cfg, NULL_SH, h))
+    if kind == "mamba":
+        return jax.jit(lambda p, h: B.mamba_block_full(p, cfg, NULL_SH, h))
+    if kind == "mamba_shared":
+        def f(p, shared, h, emb0, positions):
+            h, st = B.mamba_block_full(p, cfg, NULL_SH, h)
+            h, kv = B.zamba_shared_full(shared, cfg, NULL_SH, h, emb0,
+                                        positions)
+            return h, {"ssm": st["ssm"], "conv": st["conv"],
+                       "k": kv["k"], "v": kv["v"]}
+        return jax.jit(f)
+    if kind == "enc":
+        return jax.jit(lambda p, h, positions: B.encoder_block_full(
+            p, cfg, NULL_SH, h, positions))
+    if kind == "dec":
+        return jax.jit(lambda p, h, positions, enc_h:
+                       B.cross_decoder_block_full(p, cfg, NULL_SH, h,
+                                                  positions, enc_h))
+    raise ValueError(
+        f"no prefill block for kind {kind!r}; supported kinds: "
+        + ", ".join(SUPPORTED_KINDS))
 
 
 @functools.lru_cache(maxsize=None)
-def make_pool_decode_step(cfg: ModelConfig, kind: str):
-    """Build THE jitted multi-session decode step, shared per (cfg, kind) —
-    each server calls it with its own (layers, rows) shapes.
+def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
+    """Build THE jitted multi-session decode step for a hosted block range,
+    shared per (cfg, per-layer kind tuple) — each server calls it with its
+    own (layers, rows) shapes.
 
-    step(stacked_params, pool_tree, h, pos, layer_active, layer_ids)
-      -> (h, pool_tree)
+    step(run_params, shared_params, pool_trees, h, pos, emb0, enc_len,
+         layer_active, layer_ids) -> (h, pool_trees)
 
-    * ``stacked_params``: per-layer block params stacked on axis 0 (n_layers),
-    * ``pool_tree``: leaves (n_layers, n_rows, ...),
+    * ``run_params`` / ``shared_params`` / ``pool_trees``: as in
+      :func:`make_pool_prefill_step`,
     * ``h``: (n_rows, 1, d_model) hidden rows,
     * ``pos``: (n_rows,) int32 cache write/attend position per row,
+    * ``emb0``: (n_rows, 1, d_model) current-token embeddings for
+      shared-attention blocks (dummy otherwise),
+    * ``enc_len``: (n_rows,) int32 valid encoder length per row — masks the
+      over-allocated cross-KV of enc-dec decoder blocks,
     * ``layer_active``: (n_layers, n_rows) bool — row r runs layer l iff set
       (a session's hop covers a contiguous sub-range of the server's blocks),
     * ``layer_ids``: (n_layers,) int32 absolute layer indices (for per-layer
       sliding-window patterns).
 
-    The computation always spans ALL rows with fixed shapes: adding or
-    removing sessions changes only the mask, never the traced program, so
-    per-session results are bit-for-bit identical between a crowded pool and
-    a pool with a single resident session.
+    Encoder runs are statically skipped (their StateSpec is not
+    decode-active).  The computation always spans ALL rows with fixed
+    shapes: adding or removing sessions changes only the mask, never the
+    traced program, so per-session results are bit-for-bit identical
+    between a crowded pool and a pool with a single resident session.
     """
     from repro.models import blocks as B
     from repro.models.layers import NULL_SH
 
-    def step(stacked_params, pool_tree, h, pos, layer_active, layer_ids):
-        def body(hc, xs):
-            p, cache, active, lid = xs
+    runs = kind_runs(kinds)
+
+    def step(run_params, shared_params, pool_trees, h, pos, emb0, enc_len,
+             layer_active, layer_ids):
+        new_trees = list(pool_trees)
+        for r, (kind, lo, hi) in enumerate(runs):
+            if kind == "enc":  # stateless: no decode-time work
+                continue
+            p_stack, tree = run_params[r], pool_trees[r]
+            act, lids = layer_active[lo:hi], layer_ids[lo:hi]
 
             if kind == "decoder":
-                def one(hr, cr, pr):
-                    hh, cc = B.decoder_block_decode(
-                        p, cfg, NULL_SH, hr[None],
-                        jax.tree.map(lambda x: x[None], cr), pr, lid)
-                    return hh[0], jax.tree.map(lambda x: x[0], cc)
+                def body(hc, xs):
+                    p, cache, active, lid = xs
 
-                h2, c2 = jax.vmap(one)(hc, cache, pos)
-            else:  # rwkv
-                def one(hr, cr):
-                    hh, cc = B.rwkv_block_decode(
-                        p, cfg, NULL_SH, hr[None],
-                        jax.tree.map(lambda x: x[None], cr))
-                    return hh[0], jax.tree.map(lambda x: x[0], cc)
+                    def one(hr, cr, pr):
+                        hh, cc = B.decoder_block_decode(
+                            p, cfg, NULL_SH, hr[None],
+                            jax.tree.map(lambda x: x[None], cr), pr, lid)
+                        return hh[0], jax.tree.map(lambda x: x[0], cc)
 
-                h2, c2 = jax.vmap(one)(hc, cache)
-            # inactive rows keep their hidden state and caches untouched
-            h2 = jnp.where(active[:, None, None], h2, hc)
-            c2 = jax.tree.map(
-                lambda new, old: jnp.where(
-                    active.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
-                c2, cache)
-            return h2, c2
+                    h2, c2 = jax.vmap(one)(hc, cache, pos)
+                    return (jnp.where(active[:, None, None], h2, hc),
+                            _mask_tree(c2, cache, active))
+            elif kind in ("rwkv", "mamba"):
+                blk = (B.rwkv_block_decode if kind == "rwkv"
+                       else B.mamba_block_decode)
 
-        h, new_pool = jax.lax.scan(
-            body, h, (stacked_params, pool_tree, layer_active, layer_ids))
-        return h, new_pool
+                def body(hc, xs, blk=blk):
+                    p, cache, active, lid = xs
+
+                    def one(hr, cr):
+                        hh, cc = blk(p, cfg, NULL_SH, hr[None],
+                                     jax.tree.map(lambda x: x[None], cr))
+                        return hh[0], jax.tree.map(lambda x: x[0], cc)
+
+                    h2, c2 = jax.vmap(one)(hc, cache)
+                    return (jnp.where(active[:, None, None], h2, hc),
+                            _mask_tree(c2, cache, active))
+            elif kind == "mamba_shared":
+                def body(hc, xs):
+                    p, cache, active, lid = xs
+
+                    def one(hr, er, cr, pr):
+                        hh, st = B.mamba_block_decode(
+                            p, cfg, NULL_SH, hr[None],
+                            {"ssm": cr["ssm"][None], "conv": cr["conv"][None]})
+                        hh, kv = B.zamba_shared_decode(
+                            shared_params, cfg, NULL_SH, hh, er[None],
+                            {"k": cr["k"][None], "v": cr["v"][None]}, pr)
+                        return hh[0], {
+                            "ssm": st["ssm"][0], "conv": st["conv"][0],
+                            "k": kv["k"][0], "v": kv["v"][0]}
+
+                    h2, c2 = jax.vmap(one)(hc, emb0, cache, pos)
+                    return (jnp.where(active[:, None, None], h2, hc),
+                            _mask_tree(c2, cache, active))
+            elif kind == "dec":
+                def body(hc, xs):
+                    p, cache, active, lid = xs
+
+                    def one(hr, cr, pr, el):
+                        hh, cc = B.cross_decoder_block_decode(
+                            p, cfg, NULL_SH, hr[None],
+                            jax.tree.map(lambda x: x[None], cr), pr,
+                            enc_len=el)
+                        return hh[0], jax.tree.map(lambda x: x[0], cc)
+
+                    h2, c2 = jax.vmap(one)(hc, cache, pos, enc_len)
+                    return (jnp.where(active[:, None, None], h2, hc),
+                            _mask_tree(c2, cache, active))
+            else:
+                raise ValueError(kind)
+
+            h, new_tree = jax.lax.scan(body, h, (p_stack, tree, act, lids))
+            new_trees[r] = new_tree
+        return h, tuple(new_trees)
 
     return jax.jit(step)

@@ -1,0 +1,96 @@
+"""Token-level sampling policies for the serving engine.
+
+A session declares its policy at admission via :class:`SamplingSpec`; the
+engine threads the resolved per-row parameters (temperature, top-k, PRNG
+key) through ONE jitted, vmapped sampler call per decode round — sampling
+params are row INPUTS, not trace constants, so changing a session's
+temperature/seed never retraces, and co-resident sessions with different
+policies share the same pooled round.
+
+Determinism contract: the key for a session's ``i``-th generated token is
+``fold_in(PRNGKey(seed), i)`` — a pure function of (seed, token index).  A
+session therefore samples the identical stream whether it decodes alone or
+among neighbours, before or after a failover replay (replay does not
+re-sample; tokens are part of the client-side history).
+
+``greedy`` is encoded as temperature 0 and reduces to ``argmax(logits)``
+bit-for-bit (the same op the engine's legacy greedy path used).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+SAMPLING_KINDS = ("greedy", "temperature", "top_k")
+
+
+@dataclass(frozen=True)
+class SamplingSpec:
+    """Per-session token sampling policy.
+
+    * ``greedy``       — argmax (the default; temperature/top_k ignored).
+    * ``temperature``  — softmax sampling at ``temperature``.
+    * ``top_k``        — restrict to the ``top_k`` highest logits, then
+      sample at ``temperature``.
+
+    ``seed`` makes the stream reproducible (see module docstring).
+    """
+
+    kind: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in SAMPLING_KINDS:
+            raise ValueError(
+                f"unknown sampling kind {self.kind!r}; supported: "
+                + ", ".join(SAMPLING_KINDS))
+        if self.kind != "greedy" and self.temperature <= 0.0:
+            raise ValueError("temperature must be > 0 for stochastic kinds")
+        if self.kind == "top_k" and self.top_k <= 0:
+            raise ValueError("top_k must be >= 1 for kind='top_k'")
+
+    def row_params(self):
+        """(temperature, top_k) as the vmapped row inputs: greedy is
+        temperature 0; top_k 0 means 'full vocabulary'."""
+        if self.kind == "greedy":
+            return 0.0, 0
+        if self.kind == "temperature":
+            return float(self.temperature), 0
+        return float(self.temperature), int(self.top_k)
+
+    def key_for(self, token_index: int):
+        """PRNG key of this session's ``token_index``-th generated token."""
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                  token_index)
+
+
+def _sample_one(logits, temperature, top_k, key):
+    """One row: logits (V,) f32, traced temperature/top_k/key.
+
+    Branchless so one trace serves every policy: the Gumbel-max draw and the
+    argmax are both computed and selected by ``temperature > 0``; ``top_k``
+    masks logits below the k-th largest (k traced via a sorted gather, so
+    distinct k values share the program).
+    """
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[0]
+    greedy = jnp.argmax(logits)
+    sorted_desc = -jnp.sort(-logits)
+    kth = sorted_desc[jnp.clip(top_k - 1, 0, v - 1)]
+    masked = jnp.where((top_k > 0) & (logits < kth), -jnp.inf, logits)
+    gumbel = jax.random.gumbel(key, (v,), jnp.float32)
+    drawn = jnp.argmax(masked / jnp.maximum(temperature, 1e-6) + gumbel)
+    return jnp.where(temperature > 0.0, drawn, greedy)
+
+
+@functools.lru_cache(maxsize=None)
+def make_sampler():
+    """THE jitted row sampler: (logits (N,V), temperature (N,), top_k (N,),
+    keys (N,2)) -> (N,) int32 tokens.  vmapped over rows — the engine stacks
+    one row per session of a decode round."""
+    return jax.jit(jax.vmap(_sample_one))

@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core.online import OnlineBPRR
 from repro.serving.engine import GeoServingSystem
+from repro.serving.sampling import SamplingSpec
 
 
 @dataclass
@@ -64,6 +65,8 @@ class _Pending:
     arrival: float
     n_new: int
     client: int
+    frames: Optional[np.ndarray] = None  # encoder input (enc-dec stacks)
+    sampling: Optional[SamplingSpec] = None  # None = greedy
     sid: int = -1
     sid_ctl: int = -1
     deferrals: int = 0
@@ -95,12 +98,16 @@ class ContinuousBatchingScheduler:
 
     # ------------------------------------------------------------------
     def submit(self, rid: int, tokens: np.ndarray, arrival: float,
-               n_new: int, client: int = 0):
-        """Enqueue one request (no compute until ``run``)."""
+               n_new: int, client: int = 0, frames=None, sampling=None):
+        """Enqueue one request (no compute until ``run``).
+
+        ``frames``: encoder input for enc-dec stacks; ``sampling``: the
+        session's ``SamplingSpec`` (None = greedy)."""
         idx = len(self._requests)
         self._requests.append(_Pending(rid, np.asarray(tokens),
                                        float(arrival), int(n_new),
-                                       int(client)))
+                                       int(client), frames=frames,
+                                       sampling=sampling))
         heapq.heappush(self._events,
                        (float(arrival), self._ARRIVAL, next(self._seq), idx))
 
@@ -153,7 +160,9 @@ class ContinuousBatchingScheduler:
         self._last_start[req.client] = start
         req.sid_ctl = sid_ctl
         req.sid = self.system.create_session(req.tokens, req.client, route,
-                                             req.n_new, arrival=req.arrival)
+                                             req.n_new, arrival=req.arrival,
+                                             frames=req.frames,
+                                             sampling=req.sampling)
         heapq.heappush(self._events,
                        (float(start), self._START, next(self._seq), idx))
 

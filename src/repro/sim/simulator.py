@@ -14,6 +14,13 @@ two-time-scale BPRR under the validated performance models:
 Metrics follow §4.1: average per-token time over ALL tokens
 (= total completion / l_out, waiting included), first-token time, and
 per-remaining-token time.
+
+Heterogeneous stacks: session durations come from
+``route_prefill_time``/``route_per_token_time``, which apply the optional
+per-family block weights ``LLMSpec.block_tau`` (zamba2 hybrids, enc-dec) —
+the same weighted eq. (1) the engine's virtual clock uses, so
+engine-vs-simulator cross-validation holds on hybrid topologies
+(``benchmarks/engine_validation.py`` ``xval.hybrid.R{4,8}``).
 """
 from __future__ import annotations
 
