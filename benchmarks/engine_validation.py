@@ -298,6 +298,21 @@ def run(full: bool = False, smoke: bool = False):
             batched_tok_s=tput["batched"],
             speedup=tput["batched"] / tput["serial"])
 
+    # kernel-backend throughput: pallas-vs-xla ratio per serving hot path
+    # (decode attention / flash prefill).  On this CPU container the pallas
+    # side runs in interpret mode, so the ratio is a placeholder (<~1x);
+    # the recorded field is the hook real-TPU runs fill with the true
+    # kernel speedup.
+    from benchmarks.kernel_bench import throughput_scenarios
+
+    kt, us = timed(throughput_scenarios, full=full)
+    for name, row in kt.items():
+        emit(name, us / len(kt),
+             f"pallas={row['pallas_tok_s']:.0f} tok/s "
+             f"xla={row['xla_tok_s']:.0f} tok/s "
+             f"ratio={row['pallas_over_xla']:.2f}x")
+        _record(name, **row)
+
 
 def write_json(path: str):
     """Dump the collected scenario metrics as machine-readable JSON."""

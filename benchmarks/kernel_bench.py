@@ -3,12 +3,83 @@
 Interpret-mode wall times on CPU are meaningless for TPU perf, so this
 suite reports correctness (max err vs oracle) + arithmetic intensity
 (FLOPs/byte) per kernel shape — the quantity that situates each kernel on
-the TPU roofline (197 TFLOP/s / 819 GB/s ⇒ ridge at ~240 FLOPs/byte)."""
+the TPU roofline (197 TFLOP/s / 819 GB/s ⇒ ridge at ~240 FLOPs/byte).
+
+``throughput_scenarios`` additionally measures the pallas-vs-xla wall-time
+ratio per serving hot path (decode attention, flash prefill) — the hook
+``benchmarks/engine_validation.py --smoke`` records into
+``BENCH_engine.json``: ~1x-and-meaningless in interpret mode on CPU, the
+real signal on TPU runs where the kernels compile through Mosaic."""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from benchmarks.common import emit, timed
+
+
+def _best_of(fn, n: int = 3) -> float:
+    """Min wall-seconds of ``n`` calls (call once first to warm the jit)."""
+    fn()
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def throughput_scenarios(full: bool = False):
+    """{scenario: metrics} for the pallas-vs-xla serving hot paths.
+
+    ``kernels.decode.tput`` — pooled decode attention (rows of one cache
+    pool, per-row positions); ``kernels.flash.tput`` — bucketed prefill
+    attention.  Each row records tokens/s per backend plus their ratio.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import decode_attention, flash_attention
+    from repro.models.attention import attention_core, decode_attention_xla
+
+    decode_xla = jax.jit(decode_attention_xla)
+    core_xla = jax.jit(attention_core)
+    rng = np.random.RandomState(0)
+    out = {}
+
+    # decode: B pooled rows at mixed positions over a long cache
+    B, H, Kv, D = 8, 8, 2, 64
+    T = 2048 if full else 512
+    q = jnp.asarray(rng.randn(B, 1, H, D), jnp.float32) * 0.3
+    ck = jnp.asarray(rng.randn(B, T, Kv, D), jnp.float32) * 0.3
+    cv = jnp.asarray(rng.randn(B, T, Kv, D), jnp.float32) * 0.3
+    pos = jnp.asarray(rng.randint(T // 2, T, size=B), jnp.int32)
+    t_pl = _best_of(lambda: decode_attention(q, ck, cv, pos).
+                    block_until_ready())
+    # the XLA oracle takes a scalar pos; give it the max (same work shape)
+    t_xla = _best_of(lambda: decode_xla(q, ck, cv, T - 1).
+                     block_until_ready())
+    out["kernels.decode.tput"] = {
+        "pallas_tok_s": B / t_pl, "xla_tok_s": B / t_xla,
+        "pallas_over_xla": t_xla / t_pl}
+
+    # flash prefill: one bucket group's worth of rows
+    B, S = 4, (1024 if full else 256)
+    q = jnp.asarray(rng.randn(B, S, H, D), jnp.float32) * 0.3
+    k = jnp.asarray(rng.randn(B, S, Kv, D), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(B, S, Kv, D), jnp.float32) * 0.3
+    t_pl = _best_of(lambda: flash_attention(q, k, v, causal=True).
+                    block_until_ready())
+    G = H // Kv
+    kx, vx = jnp.repeat(k, G, axis=2), jnp.repeat(v, G, axis=2)
+    positions = jnp.arange(S)
+    t_xla = _best_of(lambda: core_xla(q, kx, vx, positions, positions).
+                     block_until_ready())
+    out["kernels.flash.tput"] = {
+        "pallas_tok_s": B * S / t_pl, "xla_tok_s": B * S / t_xla,
+        "pallas_over_xla": t_xla / t_pl}
+    return out
 
 
 def run(full: bool = False):

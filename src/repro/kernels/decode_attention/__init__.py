@@ -1,4 +1,6 @@
-from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                decode_attention_unsupported)
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
-__all__ = ["decode_attention", "decode_attention_ref"]
+__all__ = ["decode_attention", "decode_attention_ref",
+           "decode_attention_unsupported"]

@@ -1,7 +1,16 @@
 """Jit'd wrapper: model-layout decode attention via the Pallas kernel.
 
 Covers GQA ((B,1,H,D) queries over (B,T,Kv,D) caches) and MLA absorbed
-decode (Kv=1, Dk = kv_lora+rope, Dv = kv_lora).
+decode (Kv=1, Dk = kv_lora+rope, Dv = kv_lora), with the full masking
+surface of the XLA oracle (``models.attention.decode_attention_xla``):
+per-row ``pos``, sliding ``window``, ALiBi ``slopes``, cross-attention
+``kv_len``, and a caller-supplied faithful ``scale`` for MLA.
+
+``decode_attention_unsupported`` is the dispatch predicate of the serving
+backend layer: it names the feature (if any) this kernel cannot yet serve
+for a given call, in which case the backend layer falls back to the XLA
+oracle and a direct kernel call raises ``ValueError`` instead of
+returning wrong numbers.
 """
 from __future__ import annotations
 
@@ -13,17 +22,45 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention.decode_attention import (
     decode_attention_bkv)
+from repro.kernels.runtime import default_interpret
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def decode_attention_unsupported(*, causal: bool = True, window=None,
+                                 slopes=None, kv_len=None,
+                                 scale=None) -> Optional[str]:
+    """Reason this kernel cannot serve a decode-attention call, else None.
+
+    Per-row ``pos``, ``window``, ``slopes``, ``kv_len`` and ``scale`` are
+    all supported natively; the residual gap is the combination the XLA
+    oracle defines but no call site produces:
+    """
+    if window is not None and not causal:
+        return ("sliding-window masking on non-causal (cross) decode "
+                "attention")
+    return None
 
 
-@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
-def decode_attention(q, ck, cv, pos, *, block_kv: int = 256,
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_kv",
+                                             "interpret"))
+def decode_attention(q, ck, cv, pos, *, window=None, slopes=None,
+                     kv_len=None, causal: bool = True,
+                     scale: Optional[float] = None, block_kv: int = 256,
                      interpret: Optional[bool] = None):
-    """q (B,1,H,Dk); ck (B,T,Kv,Dk); cv (B,T,Kv,Dv) -> (B,1,H,Dv)."""
-    interpret = _default_interpret() if interpret is None else interpret
+    """q (B,1,H,Dk); ck (B,T,Kv,Dk); cv (B,T,Kv,Dv) -> (B,1,H,Dv).
+
+    ``pos``: scalar or (B,) int32 per-row position.  ``window``: optional
+    sliding window (scalar, may be traced).  ``slopes``: optional (H,) f32
+    ALiBi slopes.  ``kv_len``: optional scalar or (B,) valid cache length
+    (cross attention over an over-allocated cache).  ``scale``: optional
+    softmax scale override (MLA faithful scale).
+    """
+    reason = decode_attention_unsupported(causal=causal, window=window,
+                                          slopes=slopes, kv_len=kv_len,
+                                          scale=scale)
+    if reason is not None:
+        raise ValueError(f"decode_attention (pallas) does not support "
+                         f"{reason}")
+    interpret = default_interpret() if interpret is None else interpret
     B, _, H, Dk = q.shape
     T, Kv = ck.shape[1], ck.shape[2]
     Dv = cv.shape[-1]
@@ -31,6 +68,20 @@ def decode_attention(q, ck, cv, pos, *, block_kv: int = 256,
     qf = q.reshape(B, Kv, G, Dk).reshape(B * Kv, G, Dk)
     kf = ck.transpose(0, 2, 1, 3).reshape(B * Kv, T, Dk)
     vf = cv.transpose(0, 2, 1, 3).reshape(B * Kv, T, Dv)
-    out = decode_attention_bkv(qf, kf, vf, pos, block_kv=block_kv,
-                               interpret=interpret)
+
+    def per_row(x):  # (,) or (B,) -> (B*Kv,)
+        if x is None:
+            return None
+        x = jnp.broadcast_to(jnp.asarray(x, jnp.int32).reshape(-1), (B,))
+        return jnp.repeat(x, Kv)
+
+    slopes_bkv = None
+    if slopes is not None:  # (H,) -> (B*Kv, G), matching the (Kv, G) split
+        slopes_bkv = jnp.broadcast_to(
+            jnp.asarray(slopes, jnp.float32).reshape(Kv, G)[None],
+            (B, Kv, G)).reshape(B * Kv, G)
+    out = decode_attention_bkv(qf, kf, vf, per_row(pos),
+                               kv_len=per_row(kv_len), window=window,
+                               slopes=slopes_bkv, causal=causal, scale=scale,
+                               block_kv=block_kv, interpret=interpret)
     return out.reshape(B, 1, H, Dv)

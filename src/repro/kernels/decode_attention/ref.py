@@ -1,18 +1,40 @@
 """Pure-jnp oracle for decode attention (mirrors models.attention
-decode_attention_xla semantics for a (BKv, G) query layout)."""
+decode_attention_xla semantics for a (BKv, G) query layout), over the full
+masking surface: per-row pos, sliding window, ALiBi slopes, kv_len."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
 
-def decode_attention_ref(q, k, v, pos):
-    """q (BKv, G, Dk); k (BKv, T, Dk); v (BKv, T, Dv)."""
+def decode_attention_ref(q, k, v, pos, *, kv_len=None, window=None,
+                         slopes=None, causal=True, scale=None):
+    """q (BKv, G, Dk); k (BKv, T, Dk); v (BKv, T, Dv).
+
+    ``pos``/``kv_len``: scalar or (BKv,); ``window``: optional scalar;
+    ``slopes``: optional (BKv, G); ``scale``: optional softmax scale.
+    """
     Dk = q.shape[-1]
+    T = k.shape[1]
+    scale = (1.0 / np.sqrt(Dk)) if scale is None else scale
     logits = jnp.einsum("bgd,btd->bgt", q.astype(jnp.float32),
-                        k.astype(jnp.float32)) / np.sqrt(Dk)
-    kv_pos = jnp.arange(k.shape[1])
-    logits = jnp.where(kv_pos[None, None, :] <= pos, logits, -1e30)
+                        k.astype(jnp.float32)) * scale
+    kv_pos = jnp.arange(T)
+    pos = jnp.broadcast_to(jnp.asarray(pos), (q.shape[0],))
+    diff = pos[:, None] - kv_pos[None, :]  # (BKv, T)
+    if slopes is not None:
+        logits = logits + (jnp.asarray(slopes, jnp.float32)[:, :, None]
+                           * (-jnp.abs(diff))[:, None, :])
+    if causal:
+        ok = diff >= 0
+        if window is not None:
+            ok &= diff < window
+    else:
+        ok = jnp.ones_like(diff, bool)
+    if kv_len is not None:
+        kvl = jnp.broadcast_to(jnp.asarray(kv_len), (q.shape[0],))
+        ok &= kv_pos[None, :] < kvl[:, None]
+    logits = jnp.where(ok[:, None, :], logits, -1e30)
     m = jnp.max(logits, axis=-1, keepdims=True)
     e = jnp.exp(logits - m)
     p = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)

@@ -6,7 +6,24 @@ accumulators in VMEM scratch, grid = (batch*q_heads, q_blocks, kv_blocks)
 with the kv axis innermost so the scratch carries across kv steps.  Causal
 blocks above the diagonal are skipped with ``pl.when``.  GQA is handled by
 index-mapping the kv block to ``head // group`` — no KV head expansion copy.
-Supports sliding-window masking (static window).
+
+Masking matches ``models.attention.attention_core`` (the XLA oracle the
+pooled serving steps dispatch against):
+
+* ``q_start`` (static) offsets the queries — chunked prefill runs a suffix
+  of ``Sq`` queries over ``Skv = q_start + Sq`` keys, so query ``i`` sits
+  at absolute position ``q_start + i`` for the causal/window/ALiBi masks.
+* sliding ``window`` is a DYNAMIC scalar (gemma3's local:global pattern
+  makes it a traced per-layer value inside the scanned pooled steps);
+  causal diagonal block-skipping stays static (a window only masks more).
+* ALiBi ``slopes`` (one per flattened batch*head row) add
+  ``slope * -|q_pos - kv_pos|`` before masking (bloom).
+* non-causal mode (encoder self-attention, cross-attention) masks only
+  ``kv_pos < seq_kv`` and supports ``Sq != Skv`` and ``Dv != Dk``.
+
+All-masked KV blocks contribute exact zeros (masked probabilities are
+zeroed explicitly; ``NEG_INF`` is finite, so ``exp(s - m)`` of a fully
+window-masked block would otherwise be 1 and corrupt the denominator).
 """
 from __future__ import annotations
 
@@ -19,11 +36,18 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import NO_WINDOW
+
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_scr, l_scr, *, block_q,
-            block_kv, seq_q, seq_kv, causal, window, scale):
+def _kernel(win_ref, *rest, block_q, block_kv, seq_q, seq_kv, causal,
+            has_slopes, q_start, scale):
+    if has_slopes:
+        slopes_ref, q_ref, k_ref, v_ref, o_ref, acc, m_scr, l_scr = rest
+    else:
+        q_ref, k_ref, v_ref, o_ref, acc, m_scr, l_scr = rest
+    bh = pl.program_id(0)
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     n_kv = pl.num_programs(2)
@@ -34,10 +58,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_scr, l_scr, *, block_q,
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
 
-    q_start = qi * block_q
+    q_blk = qi * block_q
     kv_start = ki * block_kv
-    if causal:  # skip blocks strictly above the causal diagonal
-        run = kv_start <= q_start + block_q - 1
+    if causal:  # skip blocks strictly above the causal diagonal (static)
+        run = kv_start <= q_start + q_blk + block_q - 1
     else:
         run = jnp.bool_(True)
 
@@ -45,25 +69,27 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_scr, l_scr, *, block_q,
     def _compute():
         q = q_ref[0].astype(jnp.float32)  # (block_q, d)
         k = k_ref[0].astype(jnp.float32)  # (block_kv, d)
-        v = v_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)  # (block_kv, d_v)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale  # (bq, bkv)
-        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
-                                                   (block_q, block_kv), 0)
-        kv_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32,
-                                                     (block_q, block_kv), 1)
+        q_pos = q_start + q_blk + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        kv_pos = kv_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        diff = q_pos - kv_pos
+        if has_slopes:
+            s = s + slopes_ref[bh] * (-jnp.abs(diff).astype(jnp.float32))
         ok = kv_pos < seq_kv
         if causal:
-            diff = q_pos - kv_pos
-            ok &= diff >= 0
-            if window is not None:
-                ok &= diff < window
+            ok &= (diff >= 0) & (diff < win_ref[0])
         s = jnp.where(ok, s, NEG_INF)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         corr = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new[:, None])
+        # NEG_INF is finite: zero masked probabilities explicitly so an
+        # all-masked block (small dynamic window) adds nothing
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
         l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
         acc[...] = acc[...] * corr[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
@@ -77,12 +103,16 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_scr, l_scr, *, block_q,
 
 
 def flash_attention_bhsd(q, k, v, *, causal=True,
-                         window: Optional[int] = None,
+                         window=None, slopes=None, q_start: int = 0,
                          block_q: int = 128, block_kv: int = 128,
                          interpret: bool = False):
-    """q: (BH, Sq, D); k/v: (BKv, Skv, D) with BH = BKv * group."""
-    BH, Sq, D = q.shape
+    """q: (BH, Sq, Dk); k: (BKv, Skv, Dk); v: (BKv, Skv, Dv) with
+    BH = BKv * group.  ``q_start``: static absolute position of query 0
+    (chunked prefill).  ``window``: dynamic scalar sliding window.
+    ``slopes``: optional (BH,) f32 ALiBi slopes."""
+    BH, Sq, Dk = q.shape
     BKv, Skv, _ = k.shape
+    Dv = v.shape[-1]
     group = BH // BKv
     block_q = min(block_q, Sq)
     block_kv = min(block_kv, Skv)
@@ -96,25 +126,33 @@ def flash_attention_bhsd(q, k, v, *, causal=True,
     grid = (BH, n_q, n_kv)
     kern = functools.partial(
         _kernel, block_q=block_q, block_kv=block_kv, seq_q=Sq, seq_kv=Skv,
-        causal=causal, window=window, scale=1.0 / np.sqrt(D))
+        causal=causal, has_slopes=slopes is not None, q_start=int(q_start),
+        scale=1.0 / np.sqrt(Dk))
+    win_arr = jnp.asarray(NO_WINDOW if window is None else window,
+                          jnp.int32).reshape(1)
+    inputs = [win_arr]
+    extra_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)]
+    if slopes is not None:
+        inputs.append(jnp.asarray(slopes, jnp.float32))
+        extra_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
     out = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, block_kv, D),
+        in_specs=extra_specs + [
+            pl.BlockSpec((1, block_q, Dk), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, Dk),
                          lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
-            pl.BlockSpec((1, block_kv, D),
+            pl.BlockSpec((1, block_kv, Dv),
                          lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, D),
+        out_specs=pl.BlockSpec((1, block_q, Dv),
                                lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        out_shape=jax.ShapeDtypeStruct((BH, qp.shape[1], Dv), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, Dv), jnp.float32),
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q,), jnp.float32),
         ],
         interpret=interpret,
-    )(qp, kp, vp)
+    )(*inputs, qp, kp, vp)
     return out[:, :Sq]

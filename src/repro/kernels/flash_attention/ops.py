@@ -2,7 +2,15 @@
 
 On CPU (this container) the kernel body executes in interpret mode; on TPU
 it compiles through Mosaic.  ``flash_attention`` takes model-layout tensors
-(B, S, H, D) + unexpanded KV (B, S, Kv, D).
+(B, Sq, H, Dk) + unexpanded KV (B, Skv, Kv, Dk/Dv) and the full masking
+surface of the XLA oracle's prefill path (``models.attention
+.attention_core``): causal/non-causal, dynamic sliding ``window``, ALiBi
+``slopes``, and the static chunked-prefill ``q_start`` offset.
+
+``flash_attention_unsupported`` is the dispatch predicate of the serving
+backend layer: it names the feature (if any) this kernel cannot yet serve,
+in which case the backend layer falls back to the XLA oracle and a direct
+kernel call raises ``ValueError`` instead of returning wrong numbers.
 """
 from __future__ import annotations
 
@@ -13,25 +21,62 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.kernels.runtime import default_interpret
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def flash_attention_unsupported(*, causal: bool = True, window=None,
+                                slopes=None, q_start: int = 0
+                                ) -> Optional[str]:
+    """Reason this kernel cannot serve a prefill-attention call, else None.
+
+    The kernel assumes aligned-arange positions (queries at
+    ``q_start + arange(Sq)``, keys at ``arange(Skv)``) — the same contract
+    as the oracle's flash path.  Residual gaps:
+    """
+    if not causal:
+        if window is not None:
+            return "sliding-window masking on non-causal attention"
+        if q_start:
+            return "chunked-prefill q_start offsets on non-causal attention"
+        if slopes is not None:
+            # the ALiBi bias needs the caller's TRUE query positions; the
+            # non-causal (cross) call sites pass q_start=0 with offset
+            # positions, so the kernel would bias from arange(Sq) while
+            # the oracle uses the real offsets — reject rather than
+            # silently diverge across backends
+            return "ALiBi slopes on non-causal attention"
+    return None
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+@functools.partial(jax.jit, static_argnames=("causal", "q_start", "block_q",
                                              "block_kv", "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True,
-                    window: Optional[int] = None, block_q: int = 128,
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    slopes=None, q_start: int = 0, block_q: int = 128,
                     block_kv: int = 128, interpret: Optional[bool] = None):
-    """q (B,S,H,D); k/v (B,S,Kv,D) -> (B,S,H,D)."""
-    interpret = _default_interpret() if interpret is None else interpret
-    B, S, H, D = q.shape
-    Kv = k.shape[2]
-    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
-    kf = k.transpose(0, 2, 1, 3).reshape(B * Kv, S, D)
-    vf = v.transpose(0, 2, 1, 3).reshape(B * Kv, S, D)
+    """q (B,Sq,H,Dk); k (B,Skv,Kv,Dk); v (B,Skv,Kv,Dv) -> (B,Sq,H,Dv).
+
+    ``window``: optional sliding window (scalar, may be traced).
+    ``slopes``: optional (H,) f32 ALiBi slopes.  ``q_start``: static
+    absolute position of the first query (chunked prefill: queries
+    [q_start, q_start+Sq) over keys [0, Skv))."""
+    reason = flash_attention_unsupported(causal=causal, window=window,
+                                         slopes=slopes, q_start=q_start)
+    if reason is not None:
+        raise ValueError(f"flash_attention (pallas) does not support "
+                         f"{reason}")
+    interpret = default_interpret() if interpret is None else interpret
+    B, Sq, H, Dk = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dk)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Kv, Skv, Dk)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Kv, Skv, Dv)
+    slopes_bh = None
+    if slopes is not None:  # (H,) -> (B*H,)
+        slopes_bh = jnp.broadcast_to(
+            jnp.asarray(slopes, jnp.float32)[None], (B, H)).reshape(B * H)
     out = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                               slopes=slopes_bh, q_start=q_start,
                                block_q=block_q, block_kv=block_kv,
                                interpret=interpret)
-    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    return out.reshape(B, H, Sq, Dv).transpose(0, 2, 1, 3)

@@ -1,5 +1,6 @@
 """Pure-jnp oracle for the flash-attention kernel (shares the model's
-attention_core math exactly)."""
+attention_core math exactly), over the full masking surface: causal /
+sliding window / ALiBi slopes / chunked-prefill q_start."""
 from __future__ import annotations
 
 from typing import Optional
@@ -8,21 +9,28 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def attention_ref(q, k, v, *, causal=True, window: Optional[int] = None):
-    """q (BH, Sq, D), k/v (BKv, Skv, D); GQA via head-group repetition."""
-    BH, Sq, D = q.shape
+def attention_ref(q, k, v, *, causal=True, window: Optional[int] = None,
+                  slopes=None, q_start: int = 0):
+    """q (BH, Sq, Dk), k/v (BKv, Skv, Dk/Dv); GQA via head-group repetition.
+
+    ``slopes``: optional (BH,) ALiBi slopes; ``q_start``: absolute position
+    of query 0 (queries [q_start, q_start+Sq) over keys [0, Skv))."""
+    BH, Sq, Dk = q.shape
     BKv = k.shape[0]
     group = BH // BKv
     if group > 1:
         k = jnp.repeat(k, group, axis=0)
         v = jnp.repeat(v, group, axis=0)
     logits = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
-                        k.astype(jnp.float32)) / np.sqrt(D)
-    q_pos = jnp.arange(Sq)[:, None]
+                        k.astype(jnp.float32)) / np.sqrt(Dk)
+    q_pos = q_start + jnp.arange(Sq)[:, None]
     kv_pos = jnp.arange(k.shape[1])[None, :]
+    diff = q_pos - kv_pos
+    if slopes is not None:
+        logits = logits + (jnp.asarray(slopes, jnp.float32)[:, None, None]
+                           * (-jnp.abs(diff))[None].astype(jnp.float32))
     ok = jnp.ones((Sq, k.shape[1]), bool)
     if causal:
-        diff = q_pos - kv_pos
         ok = diff >= 0
         if window is not None:
             ok &= diff < window

@@ -1,0 +1,60 @@
+"""Shared runtime knobs for the Pallas serving kernels.
+
+One module owns the two decisions every kernel wrapper used to make for
+itself (four copy-pasted ``_default_interpret`` helpers before this file
+existed — a backend change could silently drift per kernel):
+
+* ``default_interpret()`` — whether ``pallas_call`` should run in interpret
+  mode.  Off-TPU backends (the CPU CI/container) must interpret; real TPUs
+  compile through Mosaic.  The ``REPRO_PALLAS_INTERPRET`` environment
+  variable overrides the platform probe (``1``/``true`` forces interpret,
+  ``0``/``false`` forces compiled) so CI jobs pin a deterministic mode
+  regardless of the host.
+* ``resolve_backend()`` — validation for the engine-facing compute-backend
+  switch (``backend="xla" | "pallas"``) threaded from
+  ``serving.GeoServingSystem`` through the pooled step factories down to
+  the per-kind block functions.  ``"xla"`` is the oracle path (pure jnp,
+  runs everywhere); ``"pallas"`` routes supported block computations
+  through ``repro.kernels`` and falls back to the oracle per call site via
+  the kernels' own ``*_unsupported`` dispatch predicates.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+# The engine-facing compute backends.  "xla" is the default/oracle path;
+# "pallas" dispatches supported calls to the kernels in this package.
+BACKENDS = ("xla", "pallas")
+
+# "no sliding window" sentinel shared by every masking path (both Pallas
+# kernels and the XLA oracle in models/attention.py): int32-safe and larger
+# than any position, so `diff < NO_WINDOW` never masks.  One definition —
+# per-kernel copies could drift and silently change window semantics.
+NO_WINDOW = 1 << 30
+
+_INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+
+def resolve_backend(backend: str) -> str:
+    """Validate a compute-backend name; ``ValueError`` names the options."""
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown compute backend {backend!r}; supported backends: "
+            + ", ".join(BACKENDS))
+    return backend
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default for ``pallas_call``.
+
+    ``REPRO_PALLAS_INTERPRET`` (when set and non-empty) wins: ``0``/
+    ``false`` force compiled execution, anything else forces interpret —
+    the CI determinism hook.  Otherwise interpret iff the default jax
+    backend is not a TPU (Pallas TPU kernels cannot lower elsewhere).
+    """
+    env = os.environ.get(_INTERPRET_ENV)
+    if env is not None and env != "":
+        return env.lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"

@@ -1,4 +1,4 @@
-from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ops import ssd, ssd_unsupported
 from repro.kernels.ssd.ref import ssd_ref
 
-__all__ = ["ssd", "ssd_ref"]
+__all__ = ["ssd", "ssd_ref", "ssd_unsupported"]

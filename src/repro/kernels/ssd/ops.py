@@ -1,4 +1,9 @@
-"""Jit'd wrapper for the SSD Pallas kernel (model layout)."""
+"""Jit'd wrapper for the SSD Pallas kernel (model layout).
+
+Carries recurrent state in/out so the kernel can serve the pooled
+recurrent serving state (per-session SSD carries), not just full
+sequences from a zero state.  ``ssd_unsupported`` is the backend layer's
+dispatch predicate (currently no residual gaps — it validates only)."""
 from __future__ import annotations
 
 import functools
@@ -7,22 +12,32 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.runtime import default_interpret
 from repro.kernels.ssd.ssd import ssd_bh
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def ssd_unsupported(*, state=None) -> Optional[str]:
+    """Reason this kernel cannot serve an SSD call, else None (carried
+    state in/out is supported natively)."""
+    return None
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd(x, Bm, Cm, dt, A, D, *, chunk: int = 64,
+def ssd(x, Bm, Cm, dt, A, D, state=None, *, chunk: int = 64,
         interpret: Optional[bool] = None):
-    """x (B,S,H,p); Bm/Cm (B,S,n); dt (B,S,H); A/D (H,) -> (B,S,H,p)."""
-    interpret = _default_interpret() if interpret is None else interpret
+    """x (B,S,H,p); Bm/Cm (B,S,n); dt (B,S,H); A/D (H,); state optional
+    (B,H,p,n) f32 carry -> (out (B,S,H,p), state_out (B,H,p,n) f32)."""
+    reason = ssd_unsupported(state=state)
+    if reason is not None:
+        raise ValueError(f"ssd (pallas) does not support {reason}")
+    interpret = default_interpret() if interpret is None else interpret
     B, S, H, p = x.shape
     xf = x.transpose(0, 2, 1, 3).reshape(B * H, S, p)
     dtf = dt.transpose(0, 2, 1).reshape(B * H, S)
     Af = jnp.broadcast_to(A[None], (B, H)).reshape(B * H)
     Df = jnp.broadcast_to(D[None], (B, H)).reshape(B * H)
-    out = ssd_bh(xf, Bm, Cm, dtf, Af, Df, chunk=chunk, interpret=interpret)
-    return out.reshape(B, H, S, p).transpose(0, 2, 1, 3)
+    sf = None if state is None else state.reshape(B * H, p, state.shape[-1])
+    out, state_out = ssd_bh(xf, Bm, Cm, dtf, Af, Df, sf, chunk=chunk,
+                            interpret=interpret)
+    return (out.reshape(B, H, S, p).transpose(0, 2, 1, 3),
+            state_out.reshape(B, H, p, state_out.shape[-1]))

@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def ssd_ref(x, Bm, Cm, dt, A, D):
-    """x (BH,S,p); Bm/Cm (B,S,n); dt (BH,S); A/D (BH,).  Literal scan."""
+def ssd_ref(x, Bm, Cm, dt, A, D, state=None):
+    """x (BH,S,p); Bm/Cm (B,S,n); dt (BH,S); A/D (BH,); state optional
+    (BH,p,n) carry.  Literal scan; returns (out, final state)."""
     BH, S, p = x.shape
     B, _, n = Bm.shape
     H = BH // B
@@ -17,7 +18,8 @@ def ssd_ref(x, Bm, Cm, dt, A, D):
     A = np.asarray(A, np.float64)
     D = np.asarray(D, np.float64)
     out = np.zeros_like(x)
-    state = np.zeros((BH, p, n))
+    state = (np.zeros((BH, p, n)) if state is None
+             else np.asarray(state, np.float64).copy())
     for t in range(S):
         a = np.exp(dt[:, t] * A)  # (BH,)
         bvec = Bm[:, t]  # (B, n)
@@ -28,4 +30,4 @@ def ssd_ref(x, Bm, Cm, dt, A, D):
                  + dt[:, t, None, None] * x[:, t, :, None] * bfull[:, None, :])
         out[:, t] = np.einsum("bn,bpn->bp", cfull, state) \
             + x[:, t] * D[:, None]
-    return jnp.asarray(out, jnp.float32)
+    return jnp.asarray(out, jnp.float32), jnp.asarray(state, jnp.float32)

@@ -9,6 +9,12 @@ chunks (grid = (B*H, n_chunks), chunk axis innermost):
 Intra-chunk uses the dense (Q, Q) decay matrix (MXU-friendly) exactly as the
 jnp path in repro.models.ssm.apply_mamba_full.  B/C are head-shared
 (ngroups=1) and index-mapped without replication.
+
+State is carried IN and OUT: the scratch initialises from ``state_in``
+(zeros for a fresh sequence) and the final carry is written to a second
+output — what the recurrent serving pools store per session row, so the
+kernel can serve pooled prefill (and chunked resume), not just full
+sequences from scratch.
 """
 from __future__ import annotations
 
@@ -20,13 +26,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, d_ref, o_ref, state, *,
-            chunk, p, n):
+def _kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, d_ref, s0_ref, o_ref,
+            sout_ref, state, *, chunk, p, n):
     ci = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
 
     @pl.when(ci == 0)
     def _init():
-        state[...] = jnp.zeros_like(state)
+        state[...] = s0_ref[0].astype(jnp.float32)
 
     x = x_ref[0].astype(jnp.float32)  # (Q, p)
     Bm = b_ref[0].astype(jnp.float32)  # (Q, n)
@@ -61,12 +68,20 @@ def _kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, d_ref, o_ref, state, *,
         preferred_element_type=jnp.float32)  # (p, n)
     state[...] = jnp.exp(seg[-1]) * state[...] + contrib
 
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        sout_ref[0] = state[...]
 
-def ssd_bh(x, Bm, Cm, dt, A, D, *, chunk: int = 64,
+
+def ssd_bh(x, Bm, Cm, dt, A, D, state_in=None, *, chunk: int = 64,
            interpret: bool = False):
-    """x (BH, S, p); Bm/Cm (B, S, n) head-shared; dt (BH, S); A/D (BH,).
+    """x (BH, S, p); Bm/Cm (B, S, n) head-shared; dt (BH, S); A/D (BH,);
+    state_in optional (BH, p, n) f32 carry.
 
-    BH = B * H with head-major flattening (bh // H = batch).
+    BH = B * H with head-major flattening (bh // H = batch).  Returns
+    (out (BH, S, p), state_out (BH, p, n) f32).  Trailing pad positions
+    (dt=0 ⇒ decay exp(0)=1, contribution 0) leave the state invariant, so
+    ``state_out`` is the state after exactly the S real steps.
     """
     BH, S, p = x.shape
     B, _, n = Bm.shape
@@ -78,9 +93,11 @@ def ssd_bh(x, Bm, Cm, dt, A, D, *, chunk: int = 64,
         Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
         Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
         dt = jnp.pad(dt, ((0, 0), (0, pad)))
+    if state_in is None:
+        state_in = jnp.zeros((BH, p, n), jnp.float32)
     n_chunks = x.shape[1] // chunk
     kern = functools.partial(_kernel, chunk=chunk, p=p, n=n)
-    out = pl.pallas_call(
+    out, state_out = pl.pallas_call(
         kern,
         grid=(BH, n_chunks),
         in_specs=[
@@ -90,10 +107,17 @@ def ssd_bh(x, Bm, Cm, dt, A, D, *, chunk: int = 64,
             pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
             pl.BlockSpec((1,), lambda bh, ci: (bh,)),
             pl.BlockSpec((1,), lambda bh, ci: (bh,)),
+            pl.BlockSpec((1, p, n), lambda bh, ci: (bh, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
-        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, p, n), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((BH, p, n), jnp.float32),
+        ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
         interpret=interpret,
-    )(x, Bm, Cm, dt, A, D)
-    return out[:, :S]
+    )(x, Bm, Cm, dt, A, D, state_in.astype(jnp.float32))
+    return out[:, :S], state_out

@@ -1,4 +1,4 @@
-from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ops import wkv6, wkv6_unsupported
 from repro.kernels.wkv6.ref import wkv6_ref
 
-__all__ = ["wkv6", "wkv6_ref"]
+__all__ = ["wkv6", "wkv6_ref", "wkv6_unsupported"]

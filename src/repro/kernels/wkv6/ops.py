@@ -1,4 +1,9 @@
-"""Jit'd wrapper for the WKV6 Pallas kernel (model layout (B,S,H,hd))."""
+"""Jit'd wrapper for the WKV6 Pallas kernel (model layout (B,S,H,hd)).
+
+Carries recurrent state in/out so the kernel can serve the pooled
+recurrent serving state (per-session wkv carries), not just full
+sequences from a zero state.  ``wkv6_unsupported`` is the backend layer's
+dispatch predicate (currently no residual gaps — it validates only)."""
 from __future__ import annotations
 
 import functools
@@ -7,21 +12,30 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.runtime import default_interpret
 from repro.kernels.wkv6.wkv6 import wkv6_bh
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def wkv6_unsupported(*, state=None) -> Optional[str]:
+    """Reason this kernel cannot serve a WKV6 call, else None (carried
+    state in/out is supported natively)."""
+    return None
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def wkv6(r, k, v, lw, u, *, chunk: int = 16,
+def wkv6(r, k, v, lw, u, state=None, *, chunk: int = 16,
          interpret: Optional[bool] = None):
-    """r/k/v/lw (B,S,H,hd); u (H,hd) -> out (B,S,H,hd)."""
-    interpret = _default_interpret() if interpret is None else interpret
+    """r/k/v/lw (B,S,H,hd); u (H,hd); state optional (B,H,hd,hd) f32 carry
+    -> (out (B,S,H,hd), state_out (B,H,hd,hd) f32)."""
+    reason = wkv6_unsupported(state=state)
+    if reason is not None:
+        raise ValueError(f"wkv6 (pallas) does not support {reason}")
+    interpret = default_interpret() if interpret is None else interpret
     B, S, H, hd = r.shape
     to = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
     uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
-    out = wkv6_bh(to(r), to(k), to(v), to(lw), uf, chunk=chunk,
-                  interpret=interpret)
-    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    sf = None if state is None else state.reshape(B * H, hd, hd)
+    out, state_out = wkv6_bh(to(r), to(k), to(v), to(lw), uf, sf,
+                             chunk=chunk, interpret=interpret)
+    return (out.reshape(B, H, S, hd).transpose(0, 2, 1, 3),
+            state_out.reshape(B, H, hd, hd))

@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def wkv6_ref(r, k, v, lw, u):
-    """r/k/v/lw (BH, S, hd) f32; u (BH, hd).  Literal step-by-step scan."""
+def wkv6_ref(r, k, v, lw, u, state=None):
+    """r/k/v/lw (BH, S, hd) f32; u (BH, hd); state optional (BH, hd, hd)
+    carry.  Literal step-by-step scan; returns (out, final state)."""
     BH, S, hd = r.shape
     r = np.asarray(r, np.float64)
     k = np.asarray(k, np.float64)
@@ -14,10 +15,11 @@ def wkv6_ref(r, k, v, lw, u):
     w = np.exp(np.asarray(lw, np.float64))
     u = np.asarray(u, np.float64)
     out = np.zeros_like(r)
-    state = np.zeros((BH, hd, hd))
+    state = (np.zeros((BH, hd, hd)) if state is None
+             else np.asarray(state, np.float64).copy())
     for t in range(S):
         kv = k[:, t, :, None] * v[:, t, None, :]  # (BH, hd, hd)
         att = state + u[:, :, None] * kv
         out[:, t] = np.einsum("bd,bde->be", r[:, t], att)
         state = w[:, t, :, None] * state + kv
-    return jnp.asarray(out, jnp.float32)
+    return jnp.asarray(out, jnp.float32), jnp.asarray(state, jnp.float32)

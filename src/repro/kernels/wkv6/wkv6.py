@@ -7,6 +7,12 @@ lives in VMEM scratch and carries across chunk steps (sequential TPU grid
 execution).  Intra-chunk terms use the explicit masked decay tensor — the
 numerically-safe formulation shared with the jnp path
 (repro.models.ssm._wkv6_chunked, incl. the RWKV_MIN_LOG_W clamp).
+
+State is carried IN and OUT: the scratch initialises from ``state_in``
+(zeros for a fresh sequence) and the final carry is written to a second
+output — what the recurrent serving pools store per session row, so the
+kernel can serve pooled prefill (and chunked resume), not just full
+sequences from scratch.
 """
 from __future__ import annotations
 
@@ -18,12 +24,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state, *, chunk, hd):
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, o_ref, sout_ref,
+            state, *, chunk, hd):
     ci = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
 
     @pl.when(ci == 0)
     def _init():
-        state[...] = jnp.zeros_like(state)
+        state[...] = s0_ref[0].astype(jnp.float32)
 
     r = r_ref[0].astype(jnp.float32)  # (Q, hd)
     k = k_ref[0].astype(jnp.float32)
@@ -54,9 +62,20 @@ def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state, *, chunk, hd):
                       (k * decay_to_end), v, (((0,), (0,)), ((), ())),
                       preferred_element_type=jnp.float32))
 
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        sout_ref[0] = state[...]
 
-def wkv6_bh(r, k, v, lw, u, *, chunk: int = 16, interpret: bool = False):
-    """r/k/v/lw: (BH, S, hd); u: (BH, hd).  Returns out (BH, S, hd)."""
+
+def wkv6_bh(r, k, v, lw, u, state_in=None, *, chunk: int = 16,
+            interpret: bool = False):
+    """r/k/v/lw: (BH, S, hd); u: (BH, hd); state_in: optional (BH, hd, hd)
+    f32 carry.  Returns (out (BH, S, hd), state_out (BH, hd, hd) f32).
+
+    NOTE: trailing pad positions (S not a multiple of ``chunk``) are padded
+    with zeros, which leave the state invariant (k=0 contributes nothing
+    and lw=0 means decay exp(0)=1), so ``state_out`` is the state after
+    exactly the S real steps."""
     BH, S, hd = r.shape
     chunk = min(chunk, S)
     pad = (-S) % chunk
@@ -66,9 +85,11 @@ def wkv6_bh(r, k, v, lw, u, *, chunk: int = 16, interpret: bool = False):
         k = jnp.pad(k, padw)
         v = jnp.pad(v, padw)
         lw = jnp.pad(lw, padw)
+    if state_in is None:
+        state_in = jnp.zeros((BH, hd, hd), jnp.float32)
     n_chunks = r.shape[1] // chunk
     kern = functools.partial(_kernel, chunk=chunk, hd=hd)
-    out = pl.pallas_call(
+    out, state_out = pl.pallas_call(
         kern,
         grid=(BH, n_chunks),
         in_specs=[
@@ -77,10 +98,17 @@ def wkv6_bh(r, k, v, lw, u, *, chunk: int = 16, interpret: bool = False):
             pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
             pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
             pl.BlockSpec((1, hd), lambda b, ci: (b, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, ci: (b, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
-        out_shape=jax.ShapeDtypeStruct(r.shape, r.dtype),
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, hd, hd), lambda b, ci: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(r.shape, r.dtype),
+            jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32),
+        ],
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
         interpret=interpret,
-    )(r, k, v, lw, u)
-    return out[:, :S]
+    )(r, k, v, lw, u, state_in.astype(jnp.float32))
+    return out[:, :S], state_out

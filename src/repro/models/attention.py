@@ -11,9 +11,15 @@ Three compute paths, chosen statically from sequence length:
 * ``decode``  — single-query attention over a KV cache (grouped einsum, no KV
                 head expansion).
 
-On real TPUs the Pallas kernels in ``repro.kernels`` replace these paths; the
-XLA paths are the oracle + dry-run lowering path (Pallas kernels cannot lower
-to the CPU backend used by the 512-device dry-run).
+The serving engine selects between two COMPUTE BACKENDS per attention call
+(threaded from ``serving.GeoServingSystem(backend=...)`` down through the
+block functions): ``backend="xla"`` runs the paths above (the oracle — and
+the dry-run lowering path: Pallas kernels cannot lower to the CPU backend
+used by the 512-device dry-run), ``backend="pallas"`` dispatches to the
+kernels in ``repro.kernels`` (interpret mode off-TPU, Mosaic on real TPUs)
+whenever the kernels' ``*_unsupported`` predicates accept the call's
+feature set, and falls back to the XLA path otherwise — a kernel gap can
+cost performance, never correctness.
 """
 from __future__ import annotations
 
@@ -24,6 +30,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import (
+    decode_attention,
+    decode_attention_unsupported,
+    flash_attention,
+    flash_attention_unsupported,
+)
+from repro.kernels.runtime import NO_WINDOW
 from repro.models.layers import (
     ParamBuilder,
     ShardingCtx,
@@ -34,7 +47,7 @@ from repro.models.layers import (
 )
 
 _NEG_INF = -1e30
-_BIG_WINDOW = 1 << 30  # "no window"
+_BIG_WINDOW = NO_WINDOW  # "no window" — shared sentinel, kernels/runtime.py
 Q_CHUNK = 2048
 KV_CHUNK = 1024
 DENSE_MAX_T = 2048  # use the dense path when kv length <= this
@@ -153,6 +166,28 @@ def attention_core(q, k, v, q_pos, kv_pos, window=None, slopes=None,
                        q_start)
 
 
+def _use_pallas_flash(backend: str, *, causal=True, window=None, slopes=None,
+                      q_start: int = 0) -> bool:
+    """Dispatch predicate for full-sequence attention: the Pallas flash
+    kernel serves the call iff the backend asks for it AND the kernel's own
+    guard accepts the feature set (otherwise the XLA path is the
+    fallback — same numbers, no silent mishandling)."""
+    return (backend == "pallas"
+            and flash_attention_unsupported(
+                causal=causal, window=window, slopes=slopes,
+                q_start=q_start) is None)
+
+
+def _use_pallas_decode(backend: str, *, causal=True, window=None,
+                       slopes=None, kv_len=None, scale=None) -> bool:
+    """Dispatch predicate for single-token decode attention (see
+    :func:`_use_pallas_flash`)."""
+    return (backend == "pallas"
+            and decode_attention_unsupported(
+                causal=causal, window=window, slopes=slopes, kv_len=kv_len,
+                scale=scale) is None)
+
+
 def decode_attention_xla(q, ck, cv, pos, window=None, slopes=None,
                          causal=True, kv_len=None):
     """Single-step attention over a cache without KV-head expansion.
@@ -233,7 +268,8 @@ def gqa_encoder_kv(params, cfg: ModelConfig, sh: ShardingCtx, enc_h):
 
 
 def apply_gqa_full(params, cfg: ModelConfig, sh: ShardingCtx, x, positions,
-                   window=None, cross_kv=None, prefix_kv=None):
+                   window=None, cross_kv=None, prefix_kv=None,
+                   backend: str = "xla"):
     """Full-sequence attention (train / prefill).
 
     Returns (out, (k, v)) — k/v in un-expanded (B,S,Kv,hd) layout for caching
@@ -243,7 +279,8 @@ def apply_gqa_full(params, cfg: ModelConfig, sh: ShardingCtx, x, positions,
     prefill).  The chunk's queries attend over prefix + chunk keys; the
     returned cache entry holds only the CHUNK's k/v (the prefix is already
     cached).  ``positions`` must then be ``P + arange(S_chunk)`` where P is
-    the prefix length.
+    the prefix length.  ``backend``: "xla" (oracle) or "pallas" (flash
+    kernel when the feature set is supported, XLA fallback otherwise).
     """
     causal = cross_kv is None
     q_start = 0
@@ -278,12 +315,21 @@ def apply_gqa_full(params, cfg: ModelConfig, sh: ShardingCtx, x, positions,
     # compute/memory drops by the axis size at the cost of replicated-KV
     # reads.  "attn_seq_q" maps to None for head-shardable archs.
     q = sh.act(q, "batch", "attn_seq_q", "heads_act", None)
-    G = cfg.n_heads // cfg.n_kv_heads
-    k_exp = jnp.repeat(k, G, axis=2) if G > 1 else k
-    v_exp = jnp.repeat(v, G, axis=2) if G > 1 else v
     slopes = alibi_slopes(cfg.n_heads) if cfg.pos_kind == "alibi" else None
-    out = attention_core(q, k_exp, v_exp, positions, kv_pos, window, slopes,
-                         causal=causal, q_start=q_start)
+    win = window if causal else None  # non-causal ignores the window
+    if _use_pallas_flash(backend, causal=causal, window=win, slopes=slopes,
+                         q_start=q_start):
+        # kernel contract: q_pos = q_start + arange(S), kv_pos = arange(T)
+        # — exactly what the (chunked-)prefill call sites pass; GQA groups
+        # are index-mapped inside the kernel (no KV head expansion copy)
+        out = flash_attention(q, k, v, causal=causal, window=win,
+                              slopes=slopes, q_start=q_start)
+    else:
+        G = cfg.n_heads // cfg.n_kv_heads
+        k_exp = jnp.repeat(k, G, axis=2) if G > 1 else k
+        v_exp = jnp.repeat(v, G, axis=2) if G > 1 else v
+        out = attention_core(q, k_exp, v_exp, positions, kv_pos, window,
+                             slopes, causal=causal, q_start=q_start)
     out = sh.act(out, "batch", "attn_seq_q", "heads_act", None)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return y, kv_out
@@ -291,14 +337,16 @@ def apply_gqa_full(params, cfg: ModelConfig, sh: ShardingCtx, x, positions,
 
 def apply_gqa_decode(params, cfg: ModelConfig, sh: ShardingCtx, x, cache_k,
                      cache_v, pos, window=None, cross: bool = False,
-                     kv_len=None):
+                     kv_len=None, backend: str = "xla"):
     """Single-token decode.  x (B,1,d), cache (B,T,Kv,hd).
 
     Self-attention: writes the new token's K/V into the cache at ``pos`` and
     attends over the updated cache.  Returns (y, cache_k, cache_v).
     Cross-attention: the cache is the (static) encoder KV; returned
     unchanged.  ``kv_len`` masks cache positions beyond the valid encoder
-    prefix when the cache is over-allocated (pooled serving).
+    prefix when the cache is over-allocated (pooled serving).  ``backend``:
+    "xla" (oracle) or "pallas" (decode kernel when the feature set is
+    supported, XLA fallback otherwise).
     """
     q = _q_proj(params, cfg, x)
     if not cross:
@@ -319,8 +367,15 @@ def apply_gqa_decode(params, cfg: ModelConfig, sh: ShardingCtx, x, cache_k,
         q = rms_norm_simple(q, params["q_norm"], cfg.norm_eps)
 
     slopes = alibi_slopes(cfg.n_heads) if cfg.pos_kind == "alibi" else None
-    out = decode_attention_xla(q, cache_k, cache_v, pos, window, slopes,
-                               causal=not cross, kv_len=kv_len)
+    win = None if cross else window  # non-causal ignores the window
+    if _use_pallas_decode(backend, causal=not cross, window=win,
+                          slopes=slopes, kv_len=kv_len):
+        out = decode_attention(q, cache_k, cache_v, pos, window=win,
+                               slopes=slopes, causal=not cross,
+                               kv_len=kv_len)
+    else:
+        out = decode_attention_xla(q, cache_k, cache_v, pos, window, slopes,
+                                   causal=not cross, kv_len=kv_len)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     return y, cache_k, cache_v
 
@@ -370,14 +425,15 @@ def mla_latent(params, cfg: ModelConfig, x, positions):
 
 
 def apply_mla_full(params, cfg: ModelConfig, sh: ShardingCtx, x, positions,
-                   prefix_kv=None):
+                   prefix_kv=None, backend: str = "xla"):
     """Full-sequence MLA (unabsorbed — faithful for train/prefill).
 
     Returns (out, (latent, k_rope)) for caching.  ``prefix_kv``: optional
     (latent, k_rope) of an already-prefilled prefix (chunked prefill); the
     prefix latents are up-projected alongside the chunk's and the chunk's
     queries attend over both.  The returned cache entry holds only the
-    CHUNK's latent/k_rope.
+    CHUNK's latent/k_rope.  ``backend``: "xla" or "pallas" (the flash
+    kernel runs the up-projected per-head attention, Kv = H).
     """
     q_nope, q_rope = _mla_q(params, cfg, x, positions)
     latent, k_rope = mla_latent(params, cfg, x, positions)
@@ -401,7 +457,12 @@ def apply_mla_full(params, cfg: ModelConfig, sh: ShardingCtx, x, positions,
     q = sh.act(q, "batch", "seq", "heads_act", None)
     k = sh.act(k, "batch", "seq", "heads_act", None)
     v = sh.act(v, "batch", "seq", "heads_act", None)
-    out = attention_core(q, k, v, positions, kv_pos, q_start=q_start)
+    if _use_pallas_flash(backend, q_start=q_start):
+        # per-head K/V (the MLA up-projection), so Kv = H; the faithful
+        # 1/sqrt(nope+rope) scale is 1/sqrt(Dk) here — the kernel default
+        out = flash_attention(q, k, v, causal=True, q_start=q_start)
+    else:
+        out = attention_core(q, k, v, positions, kv_pos, q_start=q_start)
     out = sh.act(out, "batch", "seq", "heads_act", None)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
     # steer XLA to reduce-scatter (not all-reduce + slice) into the
@@ -411,12 +472,14 @@ def apply_mla_full(params, cfg: ModelConfig, sh: ShardingCtx, x, positions,
 
 
 def apply_mla_decode(params, cfg: ModelConfig, sh: ShardingCtx, x,
-                     cache_latent, cache_krope, pos):
+                     cache_latent, cache_krope, pos, backend: str = "xla"):
     """Absorbed-form MLA decode: attend in latent space (MQA with kv_head=1).
 
     cache_latent (B,T,lora), cache_krope (B,T,rope).  Writes the new token's
     latent/k_rope at ``pos`` and attends.  Returns (y, cache_latent,
-    cache_krope).
+    cache_krope).  ``backend``: "xla" (the oracle pre-scales q to undo the
+    helper's 1/sqrt(lora+rope)) or "pallas" (the kernel takes the faithful
+    1/sqrt(nope+rope) scale directly).
     """
     nope, rope = cfg.head_dim, cfg.rope_head_dim
     posv = jnp.asarray(pos)[None]
@@ -430,11 +493,18 @@ def apply_mla_decode(params, cfg: ModelConfig, sh: ShardingCtx, x,
     q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, params["wuk"].astype(x.dtype))
     q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)  # (B,1,H,lora+rope)
     keys = jnp.concatenate([cache_latent, cache_krope], axis=-1)[:, :, None, :]
-    # decode_attention_xla scales by 1/sqrt(lora+rope); the faithful scale is
-    # 1/sqrt(nope+rope) — pre-scale q to compensate.
-    scale_fix = np.sqrt(q_eff.shape[-1]) / np.sqrt(nope + rope)
-    ctx = decode_attention_xla(q_eff * scale_fix, keys,
-                               cache_latent[:, :, None, :], pos)
+    # the faithful softmax scale is 1/sqrt(nope+rope), not the
+    # 1/sqrt(lora+rope) either helper would derive from q_eff's width
+    faithful = 1.0 / np.sqrt(nope + rope)
+    if _use_pallas_decode(backend, scale=faithful):
+        ctx = decode_attention(q_eff, keys, cache_latent[:, :, None, :],
+                               pos, scale=faithful)
+    else:
+        # decode_attention_xla has no scale override — pre-scale q so its
+        # 1/sqrt(lora+rope) lands on the faithful value
+        scale_fix = np.sqrt(q_eff.shape[-1]) * faithful
+        ctx = decode_attention_xla(q_eff * scale_fix, keys,
+                                   cache_latent[:, :, None, :], pos)
     # ctx (B,1,H,lora): apply W_uv per head then the output projection.
     v_heads = jnp.einsum("bshl,lhk->bshk", ctx, params["wuv"].astype(x.dtype))
     y = jnp.einsum("bshk,hkd->bsd", v_heads, params["wo"].astype(x.dtype))

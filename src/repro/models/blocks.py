@@ -107,23 +107,24 @@ def init_decoder_block(key, cfg: ModelConfig):
 
 
 def decoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h, positions,
-                       layer_idx=0, prefix_kv=None):
+                       layer_idx=0, prefix_kv=None, backend: str = "xla"):
     """Full-sequence decoder block.  Returns (h, cache_entry, aux).
 
     ``prefix_kv``: optional already-cached prefix for chunked prefill — a
     (k, v) pair for GQA or (latent, krope) for MLA covering positions
     [0, P).  ``positions`` must then be ``P + arange(S)``.  The returned
     ``cache_entry`` always covers only the positions in ``h``.
+    ``backend``: compute backend for the attention core ("xla" | "pallas").
     """
     win = window_for_layer(cfg, layer_idx)
     x = apply_norm(params["ln1"], cfg, h)
     if cfg.attn_kind == "mla":
         a, kv = attn.apply_mla_full(params["attn"], cfg, sh, x, positions,
-                                    prefix_kv=prefix_kv)
+                                    prefix_kv=prefix_kv, backend=backend)
         cache = {"latent": kv[0], "krope": kv[1]}
     else:
         a, kv = attn.apply_gqa_full(params["attn"], cfg, sh, x, positions, win,
-                                    prefix_kv=prefix_kv)
+                                    prefix_kv=prefix_kv, backend=backend)
         cache = {"k": kv[0], "v": kv[1]}
     if cfg.sandwich_norm:
         a = apply_norm(params["post_ln1"], cfg, a)
@@ -141,17 +142,19 @@ def decoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h, positions,
 
 
 def decoder_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, cache,
-                         pos, layer_idx=0):
+                         pos, layer_idx=0, backend: str = "xla"):
     """Single-token decoder block.  h (B,1,d).  Returns (h, cache)."""
     win = window_for_layer(cfg, layer_idx)
     x = apply_norm(params["ln1"], cfg, h)
     if cfg.attn_kind == "mla":
         a, lat, kr = attn.apply_mla_decode(
-            params["attn"], cfg, sh, x, cache["latent"], cache["krope"], pos)
+            params["attn"], cfg, sh, x, cache["latent"], cache["krope"], pos,
+            backend=backend)
         cache = {"latent": lat, "krope": kr}
     else:
         a, ck, cv = attn.apply_gqa_decode(
-            params["attn"], cfg, sh, x, cache["k"], cache["v"], pos, win)
+            params["attn"], cfg, sh, x, cache["k"], cache["v"], pos, win,
+            backend=backend)
         cache = {"k": ck, "v": cv}
     if cfg.sandwich_norm:
         a = apply_norm(params["post_ln1"], cfg, a)
@@ -180,7 +183,8 @@ def init_encoder_block(key, cfg: ModelConfig):
     return pb.build()
 
 
-def encoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h, positions):
+def encoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h, positions,
+                       backend: str = "xla"):
     """Bidirectional self-attention encoder block."""
     x = apply_norm(params["ln1"], cfg, h)
     q = attn._q_proj(params["attn"], cfg, x)
@@ -189,11 +193,14 @@ def encoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h, positions):
         cos, sin = attn.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
         q = attn.apply_rope(q, cos, sin)
         k = attn.apply_rope(k, cos, sin)
-    G = cfg.n_heads // cfg.n_kv_heads
-    k_exp = jnp.repeat(k, G, axis=2) if G > 1 else k
-    v_exp = jnp.repeat(v, G, axis=2) if G > 1 else v
-    out = attn.attention_core(q, k_exp, v_exp, positions, positions,
-                              causal=False)
+    if attn._use_pallas_flash(backend, causal=False):
+        out = attn.flash_attention(q, k, v, causal=False)
+    else:
+        G = cfg.n_heads // cfg.n_kv_heads
+        k_exp = jnp.repeat(k, G, axis=2) if G > 1 else k
+        v_exp = jnp.repeat(v, G, axis=2) if G > 1 else v
+        out = attn.attention_core(q, k_exp, v_exp, positions, positions,
+                                  causal=False)
     a = jnp.einsum("bshk,hkd->bsd", out,
                    params["attn"]["wo"].astype(x.dtype))
     h = h + a
@@ -214,7 +221,8 @@ def init_cross_decoder_block(key, cfg: ModelConfig):
 
 
 def cross_decoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h,
-                             positions, enc_h, prefix_kv=None, enc_kv=None):
+                             positions, enc_h, prefix_kv=None, enc_kv=None,
+                             backend: str = "xla"):
     """Decoder block with cross-attention.  Returns (h, cache_entry).
 
     ``prefix_kv``: optional already-cached self-attention (k, v) prefix for
@@ -227,7 +235,7 @@ def cross_decoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h,
     """
     x = apply_norm(params["ln1"], cfg, h)
     a, kv = attn.apply_gqa_full(params["self_attn"], cfg, sh, x, positions,
-                                prefix_kv=prefix_kv)
+                                prefix_kv=prefix_kv, backend=backend)
     h = h + a
     x = apply_norm(params["ln_cross"], cfg, h)
     if enc_kv is None:
@@ -235,7 +243,7 @@ def cross_decoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h,
     else:
         ck, cv = enc_kv
     a, _ = attn.apply_gqa_full(params["cross_attn"], cfg, sh, x, positions,
-                               cross_kv=(ck, cv))
+                               cross_kv=(ck, cv), backend=backend)
     h = h + a
     x = apply_norm(params["ln2"], cfg, h)
     h = h + apply_mlp(params["ffn"], cfg, sh, x)
@@ -245,7 +253,8 @@ def cross_decoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h,
 
 
 def cross_decoder_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h,
-                               cache, pos, enc_len=None):
+                               cache, pos, enc_len=None,
+                               backend: str = "xla"):
     """Single-token cross-decoder block.
 
     ``enc_len``: optional (traced) number of VALID encoder positions in the
@@ -255,12 +264,13 @@ def cross_decoder_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h,
     """
     x = apply_norm(params["ln1"], cfg, h)
     a, ck, cv = attn.apply_gqa_decode(
-        params["self_attn"], cfg, sh, x, cache["k"], cache["v"], pos)
+        params["self_attn"], cfg, sh, x, cache["k"], cache["v"], pos,
+        backend=backend)
     h = h + a
     x = apply_norm(params["ln_cross"], cfg, h)
     a, _, _ = attn.apply_gqa_decode(
         params["cross_attn"], cfg, sh, x, cache["ck"], cache["cv"], pos,
-        cross=True, kv_len=enc_len)
+        cross=True, kv_len=enc_len, backend=backend)
     h = h + a
     x = apply_norm(params["ln2"], cfg, h)
     h = h + apply_mlp(params["ffn"], cfg, sh, x)
@@ -279,13 +289,18 @@ def init_mamba_block(key, cfg: ModelConfig):
     return pb.build()
 
 
-def mamba_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h):
+def mamba_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h,
+                     backend: str = "xla"):
     x = apply_norm(params["ln"], cfg, h)
-    y, state = ssm_mod.apply_mamba_full(params["mixer"], cfg, sh, x)
+    y, state = ssm_mod.apply_mamba_full(params["mixer"], cfg, sh, x,
+                                        backend=backend)
     return sh.act(h + y, "batch", "seq_act", None), state
 
 
-def mamba_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, state):
+def mamba_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, state,
+                       backend: str = "xla"):
+    # single-step recurrence is elementwise — no kernel; ``backend`` is
+    # accepted for call-site uniformity and ignored
     x = apply_norm(params["ln"], cfg, h)
     y, state = ssm_mod.apply_mamba_decode(params["mixer"], cfg, sh, x, state)
     return h + y, state
@@ -308,11 +323,12 @@ def init_zamba_shared(key, cfg: ModelConfig):
 
 
 def zamba_shared_full(params, cfg: ModelConfig, sh: ShardingCtx, h, emb0,
-                      positions):
+                      positions, backend: str = "xla"):
     """Returns (h, cache_entry) — KV cache per invocation."""
     xc = jnp.concatenate([h, emb0], axis=-1)
     x = apply_norm(params["ln1"], cfg, xc)
-    a, kv = attn.apply_gqa_full(params["attn"], cfg, sh, x, positions)
+    a, kv = attn.apply_gqa_full(params["attn"], cfg, sh, x, positions,
+                                backend=backend)
     h = h + a
     xc = jnp.concatenate([h, emb0], axis=-1)
     x = apply_norm(params["ln2"], cfg, xc)
@@ -321,11 +337,12 @@ def zamba_shared_full(params, cfg: ModelConfig, sh: ShardingCtx, h, emb0,
 
 
 def zamba_shared_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, emb0,
-                        cache, pos):
+                        cache, pos, backend: str = "xla"):
     xc = jnp.concatenate([h, emb0], axis=-1)
     x = apply_norm(params["ln1"], cfg, xc)
     a, ck, cv = attn.apply_gqa_decode(
-        params["attn"], cfg, sh, x, cache["k"], cache["v"], pos)
+        params["attn"], cfg, sh, x, cache["k"], cache["v"], pos,
+        backend=backend)
     h = h + a
     xc = jnp.concatenate([h, emb0], axis=-1)
     x = apply_norm(params["ln2"], cfg, xc)
@@ -347,9 +364,11 @@ def init_rwkv_block(key, cfg: ModelConfig):
     return pb.build()
 
 
-def rwkv_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h):
+def rwkv_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h,
+                    backend: str = "xla"):
     x = apply_norm(params["ln1"], cfg, h)
-    y, tm_state = ssm_mod.apply_rwkv_tm_full(params["tm"], cfg, sh, x)
+    y, tm_state = ssm_mod.apply_rwkv_tm_full(params["tm"], cfg, sh, x,
+                                             backend=backend)
     h = h + y
     x = apply_norm(params["ln2"], cfg, h)
     y, cm_shift = ssm_mod.apply_rwkv_cm(params["cm"], cfg, sh, x)
@@ -359,7 +378,10 @@ def rwkv_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h):
     return h, state
 
 
-def rwkv_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, state):
+def rwkv_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, state,
+                      backend: str = "xla"):
+    # single-step recurrence is elementwise — no kernel; ``backend`` is
+    # accepted for call-site uniformity and ignored
     x = apply_norm(params["ln1"], cfg, h)
     y, tm_state = ssm_mod.apply_rwkv_tm_decode(
         params["tm"], cfg, sh, x,

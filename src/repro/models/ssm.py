@@ -26,6 +26,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.ssd import ssd as _ssd_kernel
+from repro.kernels.ssd import ssd_unsupported
+from repro.kernels.wkv6 import wkv6 as _wkv6_kernel
+from repro.kernels.wkv6 import wkv6_unsupported
 from repro.models.layers import ParamBuilder, ShardingCtx, rms_norm_simple
 
 MAMBA_CHUNK = 256
@@ -106,10 +110,14 @@ def _mamba_post(params, cfg: ModelConfig, y, z):
     return g @ params["out_proj"].astype(g.dtype)
 
 
-def apply_mamba_full(params, cfg: ModelConfig, sh: ShardingCtx, x):
+def apply_mamba_full(params, cfg: ModelConfig, sh: ShardingCtx, x,
+                     backend: str = "xla"):
     """Full-sequence Mamba2.  x (B,S,d) -> (y (B,S,d), state dict).
 
     state = {"ssm": (B,h,p,n) f32, "conv": (B, w-1, d_inner+2n)}.
+    ``backend``: "xla" runs the chunked jnp scan below; "pallas" runs the
+    ``repro.kernels.ssd`` kernel (carried state out) for the scan itself —
+    projections/conv/gating stay jnp either way.
     """
     B, S, _ = x.shape
     di, n, h, w = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.conv_width
@@ -134,6 +142,12 @@ def apply_mamba_full(params, cfg: ModelConfig, sh: ShardingCtx, x):
     A = -jnp.exp(params["A_log"])  # (h,) negative
 
     xh = xc.reshape(B, S, h, p).astype(jnp.float32)
+    if backend == "pallas" and ssd_unsupported() is None:
+        y, ssm_state = _ssd_kernel(xh, Bm, Cm, dtv, A, params["D"])
+        y = y.reshape(B, S, di).astype(x.dtype)
+        y = sh.act(y, "batch", "seq", "inner_act")
+        out = _mamba_post(params, cfg, y, z)
+        return out, {"ssm": ssm_state, "conv": conv_tail.astype(jnp.float32)}
     # ---- chunked SSD ----
     Q = min(MAMBA_CHUNK, max(16, S))
     xh, S0 = _pad_to(xh, Q, 1)
@@ -270,10 +284,14 @@ def _rwkv_decay(params, xw):
     return jnp.clip(-jnp.exp(omega), RWKV_MIN_LOG_W, -1e-4)
 
 
-def apply_rwkv_tm_full(params, cfg: ModelConfig, sh: ShardingCtx, x):
+def apply_rwkv_tm_full(params, cfg: ModelConfig, sh: ShardingCtx, x,
+                       backend: str = "xla"):
     """Full-sequence RWKV6 time-mix.  x (B,S,d) -> (y, state dict).
 
     state = {"wkv": (B,h,hd,hd) f32, "shift": (B,d)} — last-token carry.
+    ``backend``: "xla" runs ``_wkv6_chunked`` below; "pallas" runs the
+    ``repro.kernels.wkv6`` kernel (carried state out) for the recurrence —
+    mixing/decay/gating stay jnp either way.
     """
     B, S, d = x.shape
     h, hd = cfg.ssm_heads, cfg.ssm_head_dim
@@ -285,9 +303,14 @@ def apply_rwkv_tm_full(params, cfg: ModelConfig, sh: ShardingCtx, x):
     g = jax.nn.silu((xg @ params["wg"].astype(x.dtype)).astype(jnp.float32))
     lw = _rwkv_decay(params, xw).reshape(B, S, h, hd)  # log decay per channel
 
-    y, wkv_state = _wkv6_chunked(
-        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
-        lw, params["u"])
+    if backend == "pallas" and wkv6_unsupported() is None:
+        y, wkv_state = _wkv6_kernel(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), lw, params["u"])
+    else:
+        y, wkv_state = _wkv6_chunked(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), lw, params["u"])
     # per-head group-norm then gate
     y = y.reshape(B, S, d)
     y = rms_norm_simple(

@@ -1,7 +1,10 @@
 """The continuous-batching geo serving engine (see docs/serving.md):
 family-polymorphic per-server state pools (StateSpec-dispatched), pooled
-decode + bucketed prefill steps, per-session sampling policies, the
-event-loop scheduler, and the session/request record types."""
+decode + bucketed prefill steps with a pluggable compute backend
+(``GeoServingSystem(backend="xla" | "pallas")`` — oracle jnp paths vs the
+``repro.kernels`` Pallas kernels with per-call XLA fallback), per-session
+sampling policies, the event-loop scheduler, and the session/request
+record types."""
 from repro.serving.engine import (BlockServer, EngineSession,
                                   GeoServingSystem, generate)
 from repro.serving.kv_cache import (SUPPORTED_KINDS, CachePool, StateSpec,

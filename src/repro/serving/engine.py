@@ -121,8 +121,10 @@ class BlockServer:
 
     def __init__(self, sid: int, cfg: ModelConfig, params, a: int, m: int,
                  *, n_rows: int, max_len: int, cap_slots: int,
-                 enc_len: int = 0, slowdown: float = 1.0):
+                 enc_len: int = 0, slowdown: float = 1.0,
+                 backend: str = "xla"):
         self.sid = sid
+        self.backend = backend
         self.cfg = cfg
         self.a, self.m = int(a), int(m)
         self.specs = state_specs(cfg)[self.a: self.a + self.m]
@@ -139,9 +141,9 @@ class BlockServer:
                               enc_len=enc_len)
         self.alive = True
         self.slowdown = slowdown
-        self._step = make_pool_decode_step(cfg, self.kinds)
-        self._prefill_pool = make_pool_prefill_step(cfg, self.kinds)
-        self._prefill_blocks = {k: make_prefill_block(cfg, k)
+        self._step = make_pool_decode_step(cfg, self.kinds, backend)
+        self._prefill_pool = make_pool_prefill_step(cfg, self.kinds, backend)
+        self._prefill_blocks = {k: make_prefill_block(cfg, k, backend)
                                 for k in set(self.kinds)}
         # constant-shape filler for unused emb0/enc_rows step inputs, so the
         # jit trace key never varies with them
@@ -291,6 +293,14 @@ class GeoServingSystem:
     the exact prompt length — grouping batches equal lengths instead.
     ``max_enc_len``: cross-KV pool capacity for enc-dec stacks (defaults to
     ``max_seq_len``).
+    ``backend``: compute backend for every pooled step — ``"xla"`` (default;
+    the oracle paths, runs everywhere) or ``"pallas"`` (the
+    ``repro.kernels`` TPU kernels; interpret mode off-TPU).  Dispatch is
+    per block call: a kernel whose ``*_unsupported`` predicate rejects the
+    call's feature set falls back to the XLA path, so backend choice can
+    never change which features work — and round RESULTS (token streams,
+    admission, virtual clock) are backend-independent (logits agree to
+    float-eps; see docs/serving.md).
     """
 
     def __init__(self, cfg: ModelConfig, params, problem: Problem,
@@ -299,9 +309,13 @@ class GeoServingSystem:
                  max_seq_len: Optional[int] = None,
                  prefill_mode: str = "batched",
                  prefill_buckets: Optional[Tuple[int, ...]] = None,
-                 max_enc_len: Optional[int] = None):
+                 max_enc_len: Optional[int] = None,
+                 backend: str = "xla"):
+        from repro.kernels.runtime import resolve_backend
+
         assert problem.L == cfg.n_layers
         assert prefill_mode in ("batched", "serial"), prefill_mode
+        self.backend = resolve_backend(backend)
         self.cfg = cfg
         self.params = params
         self.problem = problem
@@ -365,7 +379,8 @@ class GeoServingSystem:
             self.servers[j] = BlockServer(
                 j, self.cfg, self.params, a, m, n_rows=n_rows,
                 max_len=self.max_seq_len, cap_slots=cap,
-                enc_len=self.max_enc_len if self._is_enc_dec else 0)
+                enc_len=self.max_enc_len if self._is_enc_dec else 0,
+                backend=self.backend)
 
     def alive_placement(self) -> Placement:
         a = np.array(self.placement.a)

@@ -20,7 +20,11 @@ Two granularities:
   scanned over each run) serves every session resident on that server.  The
   pooled step factories take the server's static per-layer kind tuple and
   dispatch each run to its family's block functions — the program still
-  traces exactly once per server, heterogeneous or not.
+  traces exactly once per server, heterogeneous or not.  They also take the
+  engine's compute ``backend`` ("xla" oracle | "pallas" kernels with
+  per-call XLA fallback, see ``repro.kernels.runtime``) and thread it into
+  every block call; backend choice never changes round results
+  (docs/serving.md).
 
 Slot accounting follows eq. (5)/(20) of the paper unchanged (the memory
 model is family-agnostic): a server hosting ``m`` blocks has
@@ -420,9 +424,10 @@ def _masked_ranged_write(cache, chunk, active, keys, lo, span):
 
 
 @functools.lru_cache(maxsize=None)
-def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
+def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...],
+                           backend: str = "xla"):
     """Build THE jitted multi-session prefill step for a hosted block range,
-    shared per (cfg, per-layer kind tuple).
+    shared per (cfg, per-layer kind tuple, compute backend).
 
     pstep(run_params, shared_params, pool_trees, h, emb0, enc_rows,
           layer_active, layer_ids, offset, phase) -> (h, pool_trees)
@@ -454,9 +459,11 @@ def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
     order-sensitive, so trailing pad tokens would corrupt it.  The engine
     therefore groups recurrent-stack sessions by exact prompt length.
     """
+    from repro.kernels.runtime import resolve_backend
     from repro.models import blocks as B
     from repro.models.layers import NULL_SH
 
+    resolve_backend(backend)
     runs = kind_runs(kinds)
     mla = cfg.attn_kind == "mla"
 
@@ -490,7 +497,7 @@ def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
                                       cr["v"][None, :offset])
                         hh, cc, _ = B.decoder_block_full(
                             p, cfg, NULL_SH, hr[None], positions, lid,
-                            prefix_kv=prefix)
+                            prefix_kv=prefix, backend=backend)
                         return hh[0], jax.tree.map(lambda x: x[0], cc)
 
                     h2, chunk = jax.vmap(one)(hc, cache)
@@ -506,7 +513,8 @@ def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
                     p, cache, active, lid = xs
 
                     def one(hr):
-                        hh, st = blk(p, cfg, NULL_SH, hr[None])
+                        hh, st = blk(p, cfg, NULL_SH, hr[None],
+                                     backend=backend)
                         return hh[0], jax.tree.map(lambda x: x[0], st)
 
                     h2, st = jax.vmap(one)(hc)
@@ -518,10 +526,11 @@ def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
                     p, cache, active, lid = xs
 
                     def one(hr, er):
-                        hh, st = B.mamba_block_full(p, cfg, NULL_SH, hr[None])
+                        hh, st = B.mamba_block_full(p, cfg, NULL_SH, hr[None],
+                                                    backend=backend)
                         hh, kv = B.zamba_shared_full(
                             shared_params, cfg, NULL_SH, hh, er[None],
-                            positions)
+                            positions, backend=backend)
                         return hh[0], {
                             "ssm": st["ssm"][0], "conv": st["conv"][0],
                             "k": kv["k"][0], "v": kv["v"][0]}
@@ -541,7 +550,8 @@ def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
 
                     def one(hr):
                         return B.encoder_block_full(
-                            p, cfg, NULL_SH, hr[None], positions)[0]
+                            p, cfg, NULL_SH, hr[None], positions,
+                            backend=backend)[0]
 
                     h2 = jax.vmap(one)(hc)
                     h2 = jnp.where(active[:, None, None], h2, hc)
@@ -560,7 +570,8 @@ def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
                             cr["cv"][None, :er.shape[0]])
                         hh, cc = B.cross_decoder_block_full(
                             p, cfg, NULL_SH, hr[None], positions, er[None],
-                            prefix_kv=prefix, enc_kv=enc_kv)
+                            prefix_kv=prefix, enc_kv=enc_kv,
+                            backend=backend)
                         return hh[0], jax.tree.map(lambda x: x[0], cc)
 
                     h2, chunk = jax.vmap(one)(hc, enc_rows, cache)
@@ -583,45 +594,51 @@ def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
 
 
 @functools.lru_cache(maxsize=None)
-def make_prefill_block(cfg: ModelConfig, kind: str):
+def make_prefill_block(cfg: ModelConfig, kind: str, backend: str = "xla"):
     """Jitted single-session per-layer prefill (the serial reference path),
-    shared across every server of the same (cfg, kind) — jax's jit cache
-    then reuses compiled programs for servers with identical shapes."""
+    shared across every server of the same (cfg, kind, backend) — jax's jit
+    cache then reuses compiled programs for servers with identical shapes."""
+    from repro.kernels.runtime import resolve_backend
     from repro.models import blocks as B
     from repro.models.layers import NULL_SH
 
+    resolve_backend(backend)
     if kind == "decoder":
         return jax.jit(lambda p, h, positions, lid: B.decoder_block_full(
-            p, cfg, NULL_SH, h, positions, lid))
+            p, cfg, NULL_SH, h, positions, lid, backend=backend))
     if kind == "rwkv":
-        return jax.jit(lambda p, h: B.rwkv_block_full(p, cfg, NULL_SH, h))
+        return jax.jit(lambda p, h: B.rwkv_block_full(p, cfg, NULL_SH, h,
+                                                      backend=backend))
     if kind == "mamba":
-        return jax.jit(lambda p, h: B.mamba_block_full(p, cfg, NULL_SH, h))
+        return jax.jit(lambda p, h: B.mamba_block_full(p, cfg, NULL_SH, h,
+                                                       backend=backend))
     if kind == "mamba_shared":
         def f(p, shared, h, emb0, positions):
-            h, st = B.mamba_block_full(p, cfg, NULL_SH, h)
+            h, st = B.mamba_block_full(p, cfg, NULL_SH, h, backend=backend)
             h, kv = B.zamba_shared_full(shared, cfg, NULL_SH, h, emb0,
-                                        positions)
+                                        positions, backend=backend)
             return h, {"ssm": st["ssm"], "conv": st["conv"],
                        "k": kv["k"], "v": kv["v"]}
         return jax.jit(f)
     if kind == "enc":
         return jax.jit(lambda p, h, positions: B.encoder_block_full(
-            p, cfg, NULL_SH, h, positions))
+            p, cfg, NULL_SH, h, positions, backend=backend))
     if kind == "dec":
         return jax.jit(lambda p, h, positions, enc_h:
                        B.cross_decoder_block_full(p, cfg, NULL_SH, h,
-                                                  positions, enc_h))
+                                                  positions, enc_h,
+                                                  backend=backend))
     raise ValueError(
         f"no prefill block for kind {kind!r}; supported kinds: "
         + ", ".join(SUPPORTED_KINDS))
 
 
 @functools.lru_cache(maxsize=None)
-def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
+def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...],
+                          backend: str = "xla"):
     """Build THE jitted multi-session decode step for a hosted block range,
-    shared per (cfg, per-layer kind tuple) — each server calls it with its
-    own (layers, rows) shapes.
+    shared per (cfg, per-layer kind tuple, compute backend) — each server
+    calls it with its own (layers, rows) shapes.
 
     step(run_params, shared_params, pool_trees, h, pos, emb0, enc_len,
          layer_active, layer_ids) -> (h, pool_trees)
@@ -645,9 +662,11 @@ def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
     traced program, so per-session results are bit-for-bit identical
     between a crowded pool and a pool with a single resident session.
     """
+    from repro.kernels.runtime import resolve_backend
     from repro.models import blocks as B
     from repro.models.layers import NULL_SH
 
+    resolve_backend(backend)
     runs = kind_runs(kinds)
 
     def step(run_params, shared_params, pool_trees, h, pos, emb0, enc_len,
@@ -666,7 +685,8 @@ def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
                     def one(hr, cr, pr):
                         hh, cc = B.decoder_block_decode(
                             p, cfg, NULL_SH, hr[None],
-                            jax.tree.map(lambda x: x[None], cr), pr, lid)
+                            jax.tree.map(lambda x: x[None], cr), pr, lid,
+                            backend=backend)
                         return hh[0], jax.tree.map(lambda x: x[0], cc)
 
                     h2, c2 = jax.vmap(one)(hc, cache, pos)
@@ -681,7 +701,8 @@ def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
 
                     def one(hr, cr):
                         hh, cc = blk(p, cfg, NULL_SH, hr[None],
-                                     jax.tree.map(lambda x: x[None], cr))
+                                     jax.tree.map(lambda x: x[None], cr),
+                                     backend=backend)
                         return hh[0], jax.tree.map(lambda x: x[0], cc)
 
                     h2, c2 = jax.vmap(one)(hc, cache)
@@ -694,10 +715,12 @@ def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
                     def one(hr, er, cr, pr):
                         hh, st = B.mamba_block_decode(
                             p, cfg, NULL_SH, hr[None],
-                            {"ssm": cr["ssm"][None], "conv": cr["conv"][None]})
+                            {"ssm": cr["ssm"][None], "conv": cr["conv"][None]},
+                            backend=backend)
                         hh, kv = B.zamba_shared_decode(
                             shared_params, cfg, NULL_SH, hh, er[None],
-                            {"k": cr["k"][None], "v": cr["v"][None]}, pr)
+                            {"k": cr["k"][None], "v": cr["v"][None]}, pr,
+                            backend=backend)
                         return hh[0], {
                             "ssm": st["ssm"][0], "conv": st["conv"][0],
                             "k": kv["k"][0], "v": kv["v"][0]}
@@ -713,7 +736,7 @@ def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...]):
                         hh, cc = B.cross_decoder_block_decode(
                             p, cfg, NULL_SH, hr[None],
                             jax.tree.map(lambda x: x[None], cr), pr,
-                            enc_len=el)
+                            enc_len=el, backend=backend)
                         return hh[0], jax.tree.map(lambda x: x[0], cc)
 
                     h2, c2 = jax.vmap(one)(hc, cache, pos, enc_len)
