@@ -200,6 +200,116 @@ def prefill_throughput(R: int = 4, burst: int = 8, n_new: int = 4,
     return out
 
 
+def decode_throughput(n_servers: int = 2, n_sessions: int = 8,
+                      n_rounds: int = 4, warm: int = 2, seed: int = 0):
+    """Wall-clock decode throughput of one resident cohort: the
+    device-resident fused rounds (``decode_mode="fused"``) against the
+    per-session serial reference (``decode_mode="serial"``, one session per
+    round — the ``prefill_mode="serial"``-style baseline).
+
+    Benchmark hygiene: both paths run ``warm`` rounds first (trace +
+    compile excluded) and each fused round ends on its token readback
+    (the round's one host sync), so the timed window measures steady
+    state.  Topology: ``n_servers`` servers hosting one equal share of the
+    blocks each, sized so the WHOLE cohort is resident (every session
+    routes through every server).  Returns tokens/s per mode + speedup +
+    fused dispatches/round."""
+    import time
+
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.core import (LLMSpec, Problem, ServerSpec, Workload,
+                            shortest_path_route)
+    from repro.models import init_params
+    from repro.serving import GeoServingSystem
+
+    L = max(8, n_servers)
+    bps = L // n_servers  # blocks per server
+    lw = Workload(4, warm + n_rounds + 2)
+    llm = LLMSpec("dtput", L, block_bytes=500.0, cache_bytes_per_token=0.5)
+    # memory: exactly `bps` blocks fit (one more would not), plus cache
+    # slots for the whole cohort — forces an n_servers-hop route
+    s_c = 0.5 * (lw.l_in + lw.l_out)
+    mem = 500.0 * bps + s_c * (n_sessions * bps + 1)
+    assert mem < 500.0 * (bps + 1), "cohort slots must fit under one block"
+    servers = [ServerSpec(j, mem, 0.004, tau_prefill_base=0.002,
+                          tau_prefill_per_token=0.0005)
+               for j in range(n_servers)]
+    rtt = np.full((1, n_servers), 0.01)
+    problem = Problem(llm, servers, 1, rtt, 3 * rtt, workload=lw)
+    cfg = get_reduced_config("llama3_2_1b").replace(n_layers=L)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(2, cfg.vocab_size, size=lw.l_in)
+               for _ in range(n_sessions)]
+
+    out = {}
+    toks = {}
+    for mode in ("serial", "fused"):
+        system = GeoServingSystem(cfg, params, problem,
+                                  algorithm="proposed", R=n_sessions,
+                                  max_new_tokens=lw.l_out,
+                                  max_sessions=n_sessions, decode_mode=mode)
+        sids = []
+        for p in prompts:
+            route, _ = shortest_path_route(problem,
+                                           system.alive_placement(), 0)
+            sids.append(system.create_session(p, 0, route, lw.l_out))
+        admitted = system.try_admit_sessions(sids)
+        assert len(admitted) == n_sessions, "cohort must be fully resident"
+        system.drain_prefill()
+        hops = len(system.sessions[sids[0]].route.servers)
+        assert hops == n_servers, f"expected {n_servers}-hop route: {hops}"
+
+        def sweep():
+            if mode == "fused":
+                system.decode_round(sids)
+            else:  # per-session reference: one session per round
+                for sid in sids:
+                    system.decode_round([sid])
+
+        for _ in range(warm):
+            sweep()
+        t0 = time.perf_counter()
+        for _ in range(n_rounds):
+            sweep()
+        dt = time.perf_counter() - t0
+        out[mode] = n_sessions * n_rounds / dt
+        toks[mode] = [list(system.sessions[s].tokens) for s in sids]
+        if mode == "fused":
+            st = system.round_stats
+            out["fused_dispatches_per_round"] = (
+                (st["embed_dispatches"] + st["tail_dispatches"]
+                 + st["hop_dispatches"]) / max(1, st["rounds"]))
+    assert toks["fused"] == toks["serial"], \
+        "fused and serial reference must emit identical token streams"
+    return {"serial_tok_s": out["serial"], "fused_tok_s": out["fused"],
+            "speedup": out["fused"] / out["serial"],
+            "fused_dispatches_per_round": out["fused_dispatches_per_round"],
+            "n_servers": n_servers, "n_sessions": n_sessions}
+
+
+def sim_throughput(n_requests: int = 2000, rate: float = 5.0, seed: int = 0):
+    """Requests/s of the CPU-only discrete-event simulator on one long
+    Poisson trace — the scale claim behind the vectorized
+    ``_Timeline.usage_max`` (thousands of committed sessions per probe)."""
+    import time
+
+    from repro.sim import SimConfig, simulate
+    from repro.sim.workload import poisson_requests
+
+    problem = _concurrency_problem()
+    requests = poisson_requests(n_requests, rate, seed=seed)
+    t0 = time.perf_counter()
+    res = simulate(problem, SimConfig("proposed", n_requests=n_requests,
+                                      rate=rate, seed=seed, R=8),
+                   requests=requests)
+    dt = time.perf_counter() - t0
+    return {"requests_per_s": n_requests / dt, "n_requests": n_requests,
+            "wall_s": dt, "drop_rate": res.drop_rate}
+
+
 def _emit_xval(name: str, eng, simm, err, us):
     emit(name, us,
          f"per_token eng={eng['per_token_all']*1e3:.2f}ms "
@@ -297,6 +407,28 @@ def run(full: bool = False, smoke: bool = False):
     _record("prefill.tput.R4", serial_tok_s=tput["serial"],
             batched_tok_s=tput["batched"],
             speedup=tput["batched"] / tput["serial"])
+
+    # measured DECODE throughput — the headline the ROADMAP north-star
+    # cares about: device-resident fused rounds vs the per-session serial
+    # reference, warm, compile excluded.  R32 is the deliberately larger
+    # scenario (8 servers, 32 co-resident sessions, 8-hop routes).
+    for name, ns, nsess in (("decode.tput.R8", 2, 8),
+                            ("decode.tput.R32", 8, 32)):
+        row, us = timed(decode_throughput, n_servers=ns, n_sessions=nsess,
+                        n_rounds=2 if smoke else 4)
+        emit(name, us,
+             f"serial={row['serial_tok_s']:.0f} tok/s "
+             f"fused={row['fused_tok_s']:.0f} tok/s "
+             f"speedup={row['speedup']:.2f}x "
+             f"dispatches/round={row['fused_dispatches_per_round']:.0f}")
+        _record(name, **row)
+
+    # simulator throughput on a long trace (vectorized timeline)
+    st, us = timed(sim_throughput, n_requests=600 if smoke else 2000)
+    emit("sim.tput", us,
+         f"{st['requests_per_s']:.0f} req/s over {st['n_requests']} "
+         f"requests (drop_rate={st['drop_rate']:.2f})")
+    _record("sim.tput", **st)
 
     # kernel-backend throughput: pallas-vs-xla ratio per serving hot path
     # (decode attention / flash prefill).  On this CPU container the pallas

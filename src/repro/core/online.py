@@ -22,7 +22,8 @@ from repro.core.perf_model import (Placement, Problem, Route,
                                    route_per_token_time, route_prefill_time,
                                    route_total_time)
 from repro.core.placement import auto_R, cg_bp, max_feasible_R
-from repro.core.routing import ServerState, edge_waiting_times, ws_rr
+from repro.core.routing import (RouteCostCache, ServerState,
+                                edge_waiting_times, ws_rr)
 
 
 @dataclass
@@ -54,6 +55,10 @@ class OnlineBPRR:
         self.placement, self.info = cg_bp(problem, self.R)
         self.sessions: Dict[int, Session] = {}
         self._next_sid = itertools.count()
+        # placement-derived routing inputs (graph, edge costs, slot caps)
+        # are arrival-invariant: memoize them across admits and invalidate
+        # only when the placement / server set changes (replace_servers)
+        self._route_cache = RouteCostCache(self.problem, self.placement)
 
     # ------------------------------------------------------------------
     def server_states(self, now: float) -> Dict[int, ServerState]:
@@ -74,7 +79,7 @@ class OnlineBPRR:
         """Route a new request.  Returns (route, start_time, end_time, sid)."""
         states = self.server_states(now)
         route, cost, wait = ws_rr(self.problem, self.placement, client,
-                                  states)
+                                  states, cache=self._route_cache)
         if route is None:
             return None, np.inf, np.inf, -1
         start = now + wait
@@ -104,6 +109,8 @@ class OnlineBPRR:
         if R is not None:
             self.R = int(R)
         self.placement, self.info = cg_bp(self.problem, self.R)
+        # capacities / RTTs / placement changed: drop every memoized input
+        self._route_cache = RouteCostCache(self.problem, self.placement)
 
     def guarantee(self) -> float:
         """Completion-time guarantee (22) while concurrency <= R."""

@@ -50,6 +50,39 @@ def edge_cost_matrix(problem: Problem, placement: Placement,
     return cost
 
 
+class RouteCostCache:
+    """Memoized placement-derived routing inputs, shared across arrivals.
+
+    ``edge_cost_matrix`` and ``RoutingGraph.build`` depend only on
+    (problem, placement, client) — yet the online controller used to
+    rebuild both on EVERY arriving request.  This cache computes the
+    routing graph once, one edge-cost matrix per (client, avg_over_tokens),
+    and the eq. (20) slot capacities once, and hands them to
+    ``shortest_path_route`` / ``ws_rr`` / ``edge_waiting_times`` via their
+    ``cache=`` parameter.  The holder must invalidate by REPLACING the
+    cache whenever the placement, the RTT matrices, server capacities or
+    τ values change (``OnlineBPRR.replace_servers`` does exactly that);
+    per-arrival state (waiting times) is never cached here.
+    """
+
+    def __init__(self, problem: Problem, placement: Placement):
+        self.problem = problem
+        self.placement = placement
+        self.graph = RoutingGraph.build(placement, problem.L)
+        # eq. (20) inputs reused by edge_waiting_times on every arrival
+        m = placement.m
+        self.total_slots = np.floor((problem.mem() - problem.s_m * m)
+                                    / problem.s_c)
+        self._cost: Dict[Tuple[int, bool], np.ndarray] = {}
+
+    def cost(self, client: int, avg_over_tokens: bool = False) -> np.ndarray:
+        key = (int(client), bool(avg_over_tokens))
+        if key not in self._cost:
+            self._cost[key] = edge_cost_matrix(
+                self.problem, self.placement, client, avg_over_tokens)
+        return self._cost[key]
+
+
 def _dag_shortest(graph: RoutingGraph, cost: np.ndarray,
                   extra: Optional[np.ndarray] = None
                   ) -> Tuple[np.ndarray, np.ndarray]:
@@ -87,16 +120,23 @@ def _dag_shortest(graph: RoutingGraph, cost: np.ndarray,
 def shortest_path_route(problem: Problem, placement: Placement, client: int,
                         avg_over_tokens: bool = False,
                         waiting: Optional[np.ndarray] = None,
-                        l_max_weight: float = 1.0
+                        l_max_weight: float = 1.0,
+                        cache: Optional[RouteCostCache] = None
                         ) -> Tuple[Optional[Route], float]:
     """Optimal feasible route for ``client`` (Lemma 3.4).
 
     ``waiting``: optional (n+1, n) per-edge waiting times t^W_ij(t) — when
     given, edge cost becomes  t^W_ij + l_max_weight * t^c_ij  (WS-RR).
+    ``cache``: optional :class:`RouteCostCache` for the SAME (problem,
+    placement) — skips rebuilding the routing graph and edge-cost matrix
+    per call (the online-controller fast path).
     Returns (route, path_cost); (None, inf) if no feasible chain exists.
     """
-    graph = RoutingGraph.build(placement, problem.L)
-    cost = edge_cost_matrix(problem, placement, client, avg_over_tokens)
+    if cache is not None:
+        graph, cost = cache.graph, cache.cost(client, avg_over_tokens)
+    else:
+        graph = RoutingGraph.build(placement, problem.L)
+        cost = edge_cost_matrix(problem, placement, client, avg_over_tokens)
     if waiting is not None:
         cost = waiting + l_max_weight * cost
     dist, parent = _dag_shortest(graph, cost)
@@ -133,15 +173,19 @@ class ServerState:
 
 
 def edge_waiting_times(problem: Problem, placement: Placement,
-                       states: Dict[int, ServerState]) -> np.ndarray:
+                       states: Dict[int, ServerState],
+                       cache: Optional[RouteCostCache] = None) -> np.ndarray:
     """t^W_ij(t) per eq (20) for every (i, j): time until server j frees
-    enough cache slots for k_j = e_j − e_i new blocks."""
+    enough cache slots for k_j = e_j − e_i new blocks.  ``cache`` reuses
+    the precomputed slot capacities (the per-arrival state lives in
+    ``states``, never in the cache)."""
     a, m = placement.a, placement.m
     n = problem.n_servers
     e = a + m
     e_from = np.concatenate([e, [0]])
-    total_slots = np.floor((problem.mem() - problem.s_m * m)
-                           / problem.s_c)  # ⌊(M_j − s_m m_j)/s_c⌋
+    total_slots = cache.total_slots if cache is not None else np.floor(
+        (problem.mem() - problem.s_m * m)
+        / problem.s_c)  # ⌊(M_j − s_m m_j)/s_c⌋
     wait = np.zeros((n + 1, n))
     for j in range(n):
         if m[j] <= 0:
@@ -167,14 +211,17 @@ def edge_waiting_times(problem: Problem, placement: Placement,
 
 
 def ws_rr(problem: Problem, placement: Placement, client: int,
-          states: Dict[int, ServerState]
+          states: Dict[int, ServerState],
+          cache: Optional[RouteCostCache] = None
           ) -> Tuple[Optional[Route], float, float]:
     """Waiting-penalised shortest path (Alg. 2).  Returns
-    (route, path_cost, waiting_time) where waiting_time = max hop wait."""
-    wait = edge_waiting_times(problem, placement, states)
+    (route, path_cost, waiting_time) where waiting_time = max hop wait.
+    ``cache``: optional :class:`RouteCostCache` reusing the routing graph,
+    edge costs and slot capacities across arrivals."""
+    wait = edge_waiting_times(problem, placement, states, cache=cache)
     route, cost = shortest_path_route(
         problem, placement, client, avg_over_tokens=False, waiting=wait,
-        l_max_weight=float(problem.workload.l_out))
+        l_max_weight=float(problem.workload.l_out), cache=cache)
     if route is None:
         return None, np.inf, np.inf
     # actual waiting for this route = max over hops (Cor. 3.7: the session

@@ -10,11 +10,12 @@ from repro.serving.engine import (BlockServer, EngineSession,
 from repro.serving.kv_cache import (SUPPORTED_KINDS, CachePool, StateSpec,
                                     bucket_for, default_prefill_buckets,
                                     kind_runs, make_pool_decode_step,
-                                    make_pool_prefill_step, new_block_cache,
+                                    make_pool_prefill_step,
+                                    make_pool_round_step, new_block_cache,
                                     new_cache_pool_tree, new_state_pool_tree,
                                     state_spec_for, state_specs,
                                     write_prefill_kv)
-from repro.serving.sampling import SamplingSpec, make_sampler
+from repro.serving.sampling import SamplingSpec, make_round_tail, make_sampler
 from repro.serving.scheduler import (AdmissionScheduler,
                                      ContinuousBatchingScheduler,
                                      ServedRequest)
@@ -23,6 +24,7 @@ __all__ = ["AdmissionScheduler", "BlockServer", "CachePool",
            "ContinuousBatchingScheduler", "EngineSession", "GeoServingSystem",
            "SUPPORTED_KINDS", "SamplingSpec", "ServedRequest", "StateSpec",
            "bucket_for", "default_prefill_buckets", "generate", "kind_runs",
-           "make_pool_decode_step", "make_pool_prefill_step", "make_sampler",
+           "make_pool_decode_step", "make_pool_prefill_step",
+           "make_pool_round_step", "make_round_tail", "make_sampler",
            "new_block_cache", "new_cache_pool_tree", "new_state_pool_tree",
            "state_spec_for", "state_specs", "write_prefill_kv"]

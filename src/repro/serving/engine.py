@@ -11,7 +11,13 @@ Multi-session execution (eq. (5)/(20) semantics):
 * every server keeps ONE family-polymorphic stacked state pool
   (``repro.serving.kv_cache``) whose rows are per-session slots; a single
   jitted step — vmapped over rows, scanned over the server's hosted block
-  runs — decodes every resident session at once.  Which state a block row
+  runs — decodes every resident session at once.  The decode round is
+  DEVICE-RESIDENT (``decode_mode="fused"``): one batched embed, one fused
+  gather+step+scatter dispatch per (hop, server) over fixed-width round
+  buffers, one fused lm_head+sample tail, one host sync per round, with
+  every pooled step donating its cache pool (in-place update — see
+  docs/serving.md "Round anatomy" for the aliasing contract).  Which
+  state a block row
   carries (KV tensors, MLA latents, SSM+conv state, wkv/shift state,
   self-KV + encoder cross-KV) is dispatched per block via its
   :class:`~repro.serving.kv_cache.StateSpec`; the pool shape is fixed, so
@@ -62,8 +68,10 @@ from repro.serving.kv_cache import (CachePool, bucket_for,
                                     default_prefill_buckets, kind_runs,
                                     make_pool_decode_step,
                                     make_pool_prefill_step,
+                                    make_pool_round_step,
                                     make_prefill_block, state_specs)
-from repro.serving.sampling import SamplingSpec, make_sampler
+from repro.serving.sampling import (SamplingSpec, make_round_tail,
+                                    make_sampler)
 
 
 @dataclass
@@ -90,8 +98,11 @@ class EngineSession:
     state: str = "admitted"  # admitted | prefilling | active | failed | done
     # per-hop input history (the PETALS fault-tolerance cache); entry 0 is
     # the prompt-phase record — a plain array for single-phase stacks, a
-    # {"enc": ..., "dec": ...} dict for enc-dec — followed by one array per
-    # decoded token that flowed through the hop
+    # {"enc": ..., "dec": ...} dict for enc-dec — followed by one record per
+    # decoded token that flowed through the hop: a (1, 1, d) array on the
+    # host-staged paths, or a lazy ((members, 1, d) hop gather, index)
+    # tuple on the fused path (materialized by GeoServingSystem._hop_record
+    # only if a failover replays it)
     hop_inputs: List[List] = field(default_factory=list)
     sampling: SamplingSpec = field(default_factory=SamplingSpec)
     frames: Optional[np.ndarray] = None  # encoder input (enc-dec only)
@@ -101,10 +112,27 @@ class EngineSession:
     prefill_time: float = 0.0
     per_token_time: float = 0.0
     end: float = float("inf")
-    last_logits: Optional[jnp.ndarray] = None  # logits behind tokens[-1]
+    # logits behind tokens[-1]: a concrete (V,)/(1, V) array, or — on the
+    # fused round path — a lazy ((W, V) rows, slot) reference materialized
+    # on first read so the round hot loop never pays per-session slicing
+    # dispatches (see the ``last_logits`` property below)
+    _logits_box: Optional[object] = None
     # transient per-round hidden state / original embedding
     _h: Optional[jnp.ndarray] = None
     _emb0: Optional[jnp.ndarray] = None
+
+    @property
+    def last_logits(self) -> Optional[jnp.ndarray]:
+        box = self._logits_box
+        if isinstance(box, tuple):  # lazy (rows, slot) from a fused round
+            rows, g = box
+            box = rows[g]
+            self._logits_box = box
+        return box
+
+    @last_logits.setter
+    def last_logits(self, value):
+        self._logits_box = value
 
 
 class BlockServer:
@@ -142,6 +170,7 @@ class BlockServer:
         self.alive = True
         self.slowdown = slowdown
         self._step = make_pool_decode_step(cfg, self.kinds, backend)
+        self._round_step = make_pool_round_step(cfg, self.kinds, backend)
         self._prefill_pool = make_pool_prefill_step(cfg, self.kinds, backend)
         self._prefill_blocks = {k: make_prefill_block(cfg, k, backend)
                                 for k in set(self.kinds)}
@@ -216,7 +245,11 @@ class BlockServer:
 
     def decode_rows(self, h_rows, pos_rows, layer_active, emb0_rows=None,
                     enc_len_rows=None):
-        """THE batched step: one jitted call decodes all masked rows."""
+        """THE batched step: one jitted call decodes all masked rows.
+
+        The pool tree is donated into the step (cache updated in place);
+        the stale input tree is rebound here and must never be read again
+        — see docs/serving.md "Round anatomy" for the aliasing contract."""
         assert self.alive, f"server {self.sid} is dead"
         h_out, self.pool.tree = self._step(
             self.run_params, self.shared, self.pool.tree, h_rows, pos_rows,
@@ -224,6 +257,19 @@ class BlockServer:
             self._zero_encl if enc_len_rows is None else enc_len_rows,
             layer_active, self.layer_ids)
         return h_out
+
+    def round_rows(self, h_round, pos_round, encl_round, slot_of_row,
+                   row_of_slot, layer_active, emb0_round=None):
+        """The fused device-resident hop: gather this server's rows out of
+        the round buffers, decode them through the pooled step, scatter the
+        results back — ONE dispatch, donated pool, no host transfer."""
+        assert self.alive, f"server {self.sid} is dead"
+        h_round, self.pool.tree = self._round_step(
+            self.run_params, self.shared, self.pool.tree, h_round,
+            pos_round, self._dummy if emb0_round is None else emb0_round,
+            encl_round, slot_of_row, row_of_slot, layer_active,
+            self.layer_ids)
+        return h_round
 
     def decode_range(self, sid: int, h, lo: int, hi: int, pos: int,
                      emb0=None, enc_len: int = 0):
@@ -293,6 +339,19 @@ class GeoServingSystem:
     the exact prompt length — grouping batches equal lengths instead.
     ``max_enc_len``: cross-KV pool capacity for enc-dec stacks (defaults to
     ``max_seq_len``).
+    ``decode_mode``: "fused" (default) keeps each decode round resident on
+    device end to end — ONE batched embed dispatch, one fused
+    gather+step+scatter dispatch per (hop, server), ONE fused
+    lm_head+sample tail, and a single host sync on the round's token
+    vector; "serial" is the pre-refactor reference path (per-session embed
+    and lm_head, host-staged row buffers between hops) kept for
+    round-for-round comparison and as the per-session throughput baseline.
+    Token streams, admission, and the virtual clock are identical between
+    the two modes; logits agree to float-ulp (the fused tail projects all
+    round slots in one GEMM, whose per-row reduction order XLA may pick
+    differently than the width-1 reference — see ``make_round_tail``).
+    Within ONE mode, solo-vs-grouped stays bit-exact: the fused round's
+    fixed-width buffers make it structural, exactly like the pooled step.
     ``backend``: compute backend for every pooled step — ``"xla"`` (default;
     the oracle paths, runs everywhere) or ``"pallas"`` (the
     ``repro.kernels`` TPU kernels; interpret mode off-TPU).  Dispatch is
@@ -310,11 +369,13 @@ class GeoServingSystem:
                  prefill_mode: str = "batched",
                  prefill_buckets: Optional[Tuple[int, ...]] = None,
                  max_enc_len: Optional[int] = None,
+                 decode_mode: str = "fused",
                  backend: str = "xla"):
         from repro.kernels.runtime import resolve_backend
 
         assert problem.L == cfg.n_layers
         assert prefill_mode in ("batched", "serial"), prefill_mode
+        assert decode_mode in ("fused", "serial"), decode_mode
         self.backend = resolve_backend(backend)
         self.cfg = cfg
         self.params = params
@@ -357,6 +418,18 @@ class GeoServingSystem:
         self._lm_head = jax.jit(
             lambda emb, h: lm_head(emb, cfg, NULL_SH, h))
         self._sampler = make_sampler()
+        self.decode_mode = decode_mode
+        self._round_tail = make_round_tail(cfg)
+        # fixed round width: the device-resident round buffers span W slots
+        # whatever the round's membership, so the fused programs trace once
+        # and per-session results are bit-identical solo or grouped.  Grown
+        # (rare re-trace) if a round ever exceeds it.
+        self._round_width = max(1, self.max_sessions)
+        # per-round dispatch accounting (the perf contract: ONE embed, ONE
+        # lm_head+sample tail, one fused dispatch per (hop, server), ONE
+        # host sync — tests/test_round_fusion.py asserts against this)
+        self.round_stats = {"rounds": 0, "embed_dispatches": 0,
+                            "tail_dispatches": 0, "hop_dispatches": 0}
 
     # ------------------------------------------------------------------
     def _cap_slots(self, j: int, m: int) -> int:
@@ -786,7 +859,14 @@ class GeoServingSystem:
         """One continuous-batching round: every listed active session (all
         unfinished active sessions when ``sids`` is None) advances one token
         through its route; co-resident sessions share ONE pooled step per
-        (hop, server) group.  Returns {sid: new_token}."""
+        (hop, server) group.  Returns {sid: new_token}.
+
+        In ``decode_mode="fused"`` (default) the round is device-resident:
+        one batched embed, one fused gather+step+scatter dispatch per
+        (hop, server), one fused lm_head+sample tail, and a single host
+        sync on the sampled token vector.  ``decode_mode="serial"`` runs
+        the pre-refactor per-session reference — identical tokens, logits
+        and virtual-clock accounting."""
         if sids is None:
             sids = [s.sid for s in self.sessions.values()
                     if s.state == "active" and s.n_generated < s.n_new]
@@ -794,6 +874,17 @@ class GeoServingSystem:
                  if self.sessions[sid].state == "active"]
         if not group:
             return {}
+        if self.decode_mode == "serial":
+            return self._decode_round_serial(group)
+        return self._decode_round_fused(group)
+
+    def _decode_round_serial(self, group: List[EngineSession]
+                             ) -> Dict[int, int]:
+        """The pre-refactor round: per-session embed / lm_head dispatches
+        and host-staged row buffers between hops (``_traverse``).  Kept as
+        the reference (identical tokens/clock, float-ulp logits) and the
+        per-session throughput baseline for the fused path
+        (``BENCH_engine.json`` ``decode.tput.*``)."""
         for sess in group:
             tok = jnp.asarray([[sess.tokens[-1]]], jnp.int32)
             sess._h = self._embed(self.params["embed"], tok)
@@ -815,15 +906,73 @@ class GeoServingSystem:
                 out[sess.sid] = nxt
         return out
 
+    def _decode_round_fused(self, group: List[EngineSession]
+                            ) -> Dict[int, int]:
+        """Device-resident round over fixed-width (W, ...) buffers: the
+        hidden states never leave the device between the embed and the
+        round tail, and the ONLY host sync is the final batched token
+        readback (one ``np.asarray``)."""
+        if len(group) > self._round_width:  # rare: re-trace at the new W
+            self._round_width = len(group)
+        W = self._round_width
+        slot = {s.sid: i for i, s in enumerate(group)}
+        tok_buf = np.zeros((W, 1), np.int32)
+        pos_buf = np.zeros((W,), np.int32)
+        encl_buf = np.zeros((W,), np.int32)
+        for i, s in enumerate(group):
+            tok_buf[i, 0] = s.tokens[-1]
+            pos_buf[i] = s.pos
+            encl_buf[i] = s.enc_len
+        h_round = self._embed(self.params["embed"], jnp.asarray(tok_buf))
+        self.round_stats["embed_dispatches"] += 1
+        emb0_round = h_round if self._needs_emb0 else None
+        h_round = self._traverse_fused(group, slot, h_round,
+                                       jnp.asarray(pos_buf), emb0_round,
+                                       jnp.asarray(encl_buf))
+        emit = [s for s in group if s.state == "active"]
+        out: Dict[int, int] = {}
+        if emit:
+            temps = np.zeros((W,), np.float32)
+            topks = np.zeros((W,), np.int32)
+            # uint32: the full SamplingSpec.seed range (validated there)
+            seeds = np.zeros((W,), np.uint32)
+            tindex = np.zeros((W,), np.int32)
+            for s in emit:
+                g = slot[s.sid]
+                temps[g], topks[g] = s.sampling.row_params()
+                seeds[g] = s.sampling.seed
+                tindex[g] = s.n_generated
+            toks_dev, logits_rows = self._round_tail(
+                self.params["embed"], h_round, jnp.asarray(temps),
+                jnp.asarray(topks), jnp.asarray(seeds),
+                jnp.asarray(tindex))
+            self.round_stats["tail_dispatches"] += 1
+            toks = np.asarray(toks_dev)  # THE one host sync of the round
+            for s in emit:
+                g = slot[s.sid]
+                s.pos += 1
+                s._logits_box = (logits_rows, g)  # lazy: sliced on read
+                nxt = int(toks[g])
+                s.tokens.append(nxt)
+                s.n_generated += 1
+                s.virtual_time += s.per_token_time
+                out[s.sid] = nxt
+        self.round_stats["rounds"] += 1
+        return out
+
     def _hop_span(self, sess: EngineSession, hop: int) -> Tuple[int, int]:
         e_lo = sum(sess.route.blocks[:hop])
         return e_lo, e_lo + sess.route.blocks[hop]
 
-    def _traverse(self, group: List[EngineSession]):
-        """Advance every session in ``group`` through its full route (one
-        token's worth of work), batching per (hop, server).  Hops hosting
-        only encoder blocks are skipped — they do no decode-time work (and
-        need no failover: their blocks are stateless)."""
+    def _traverse_core(self, group: List[EngineSession], process_group):
+        """THE decode traversal skeleton shared by the host-staged and
+        device-resident paths: advance every session in ``group`` through
+        its full route (one token's worth of work), batching per
+        (hop, server).  Hops hosting only encoder blocks are skipped —
+        they do no decode-time work (and need no failover: their blocks
+        are stateless).  ``process_group(srv, members, progress)`` runs
+        ONE (server, members) hop group — the only thing the two variants
+        differ in — after which each member's progress advances."""
         progress = {s.sid: 0 for s in group}
 
         def skip_enc_hops(s):
@@ -862,40 +1011,97 @@ class GeoServingSystem:
                 groups.setdefault(s.route.servers[progress[s.sid]],
                                   []).append(s)
             for j, members in groups.items():
-                srv = self.servers[j]
-                N = srv.pool.n_rows
-                d = members[0]._h.shape[-1]
-                dt = np.asarray(members[0]._h).dtype
-                h_buf = np.zeros((N, 1, d), dt)
-                pos_buf = np.zeros((N,), np.int32)
-                emb0_buf = (np.zeros((N, 1, d), dt)
-                            if self._needs_emb0 else None)
-                encl_buf = (np.zeros((N,), np.int32)
-                            if self._is_enc_dec else None)
-                mask = np.zeros((srv.m, N), bool)
-                rows = {}
+                process_group(self.servers[j], members, progress)
                 for s in members:
-                    hop = progress[s.sid]
-                    row = srv.pool.rows[s.sid]
-                    e_lo, e_hi = self._hop_span(s, hop)
-                    lo = max(e_lo, self._n_enc)
-                    s.hop_inputs[hop].append(s._h)
-                    h_buf[row] = np.asarray(s._h[0])
-                    pos_buf[row] = s.pos
-                    if emb0_buf is not None:
-                        emb0_buf[row] = np.asarray(s._emb0[0])
-                    if encl_buf is not None:
-                        encl_buf[row] = s.enc_len
-                    mask[lo - srv.a: e_hi - srv.a, row] = True
-                    rows[s.sid] = row
-                h_out = srv.decode_rows(
-                    jnp.asarray(h_buf), jnp.asarray(pos_buf),
-                    jnp.asarray(mask),
-                    None if emb0_buf is None else jnp.asarray(emb0_buf),
-                    None if encl_buf is None else jnp.asarray(encl_buf))
-                for s in members:
-                    s._h = h_out[rows[s.sid]][None]
                     progress[s.sid] += 1
+
+    def _traverse(self, group: List[EngineSession]):
+        """Host-staged traversal (``decode_mode="serial"`` and the legacy
+        per-session ``decode``): per-session hidden states are scattered
+        into (N, ...) row buffers on the host before every hop.  The
+        device-resident round uses ``_traverse_fused`` — same skeleton
+        (``_traverse_core``), different hop-group body."""
+
+        def process_group(srv, members, progress):
+            N = srv.pool.n_rows
+            d = members[0]._h.shape[-1]
+            dt = np.asarray(members[0]._h).dtype
+            h_buf = np.zeros((N, 1, d), dt)
+            pos_buf = np.zeros((N,), np.int32)
+            emb0_buf = (np.zeros((N, 1, d), dt)
+                        if self._needs_emb0 else None)
+            encl_buf = (np.zeros((N,), np.int32)
+                        if self._is_enc_dec else None)
+            mask = np.zeros((srv.m, N), bool)
+            rows = {}
+            for s in members:
+                hop = progress[s.sid]
+                row = srv.pool.rows[s.sid]
+                e_lo, e_hi = self._hop_span(s, hop)
+                lo = max(e_lo, self._n_enc)
+                s.hop_inputs[hop].append(s._h)
+                h_buf[row] = np.asarray(s._h[0])
+                pos_buf[row] = s.pos
+                if emb0_buf is not None:
+                    emb0_buf[row] = np.asarray(s._emb0[0])
+                if encl_buf is not None:
+                    encl_buf[row] = s.enc_len
+                mask[lo - srv.a: e_hi - srv.a, row] = True
+                rows[s.sid] = row
+            h_out = srv.decode_rows(
+                jnp.asarray(h_buf), jnp.asarray(pos_buf),
+                jnp.asarray(mask),
+                None if emb0_buf is None else jnp.asarray(emb0_buf),
+                None if encl_buf is None else jnp.asarray(encl_buf))
+            for s in members:
+                s._h = h_out[rows[s.sid]][None]
+
+        self._traverse_core(group, process_group)
+
+    def _traverse_fused(self, group: List[EngineSession],
+                        slot: Dict[int, int], h_round, pos_round,
+                        emb0_round, encl_round):
+        """Device-resident traversal: the round's hidden states live in
+        ``h_round`` (W, 1, d) and flow hop to hop through the fused
+        gather+step+scatter dispatch (``BlockServer.round_rows``) — only
+        small int32 index/mask vectors cross the host boundary, never
+        activations.  Control flow is ``_traverse_core``, shared with the
+        host-staged ``_traverse``."""
+
+        def process_group(srv, members, progress):
+            nonlocal h_round
+            N = srv.pool.n_rows
+            W = h_round.shape[0]
+            slot_of_row = np.full((N,), -1, np.int32)
+            row_of_slot = np.full((W,), -1, np.int32)
+            mask = np.zeros((srv.m, N), bool)
+            gidx = []
+            for s in members:
+                hop = progress[s.sid]
+                row = srv.pool.rows[s.sid]
+                e_lo, e_hi = self._hop_span(s, hop)
+                lo = max(e_lo, self._n_enc)
+                slot_of_row[row] = slot[s.sid]
+                row_of_slot[slot[s.sid]] = row
+                mask[lo - srv.a: e_hi - srv.a, row] = True
+                gidx.append(slot[s.sid])
+            # client-side failover cache: ONE device gather of the hop's
+            # member rows; each member holds a lazy (buffer, index) record
+            # materialized to (1, 1, d) only if a failover ever replays it
+            # (_hop_record).  Retained memory per (hop, round) is
+            # members x d — the serial path's footprint, not
+            # round-width x d.
+            h_in = h_round[jnp.asarray(gidx)]
+            for i, s in enumerate(members):
+                s.hop_inputs[progress[s.sid]].append((h_in, i))
+            h_round = srv.round_rows(
+                h_round, pos_round, encl_round,
+                jnp.asarray(slot_of_row), jnp.asarray(row_of_slot),
+                jnp.asarray(mask), emb0_round=emb0_round)
+            self.round_stats["hop_dispatches"] += 1
+
+        self._traverse_core(group, process_group)
+        return h_round
 
     def _abort_session(self, sess: EngineSession):
         """Mark a session unservable (failover found no capacity) and free
@@ -1125,6 +1331,16 @@ class GeoServingSystem:
                                               "dec", enc_rows=enc_rows)
         return hs_enc, hs_dec
 
+    @staticmethod
+    def _hop_record(rec):
+        """Materialize one decode-token hop record: the fused round path
+        stores lazy ((members, 1, d) hop gather, index) tuples; the
+        host-staged paths store (1, 1, d) arrays directly."""
+        if isinstance(rec, tuple):
+            buf, g = rec
+            return buf[g][None]
+        return rec
+
     def _failover(self, sess: EngineSession, hop: int):
         """Replace the dead server at ``hop`` by a chain of alive servers and
         replay the client-side cached inputs to rebuild their caches."""
@@ -1175,6 +1391,7 @@ class GeoServingSystem:
         # recorded no decode inputs)
         S = sess.prompt_len
         for t_idx, h_tok in enumerate(inputs[1:]):
+            h_tok = self._hop_record(h_tok)
             pos = S + t_idx
             emb0 = None
             if self._needs_emb0:

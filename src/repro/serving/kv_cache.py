@@ -590,7 +590,10 @@ def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...],
             new_trees[r] = new_tree
         return h, tuple(new_trees)
 
-    return jax.jit(step, static_argnums=(8, 9))
+    # pool trees donated: chunk writes update the pool in place (same
+    # aliasing contract as make_pool_decode_step — the caller rebinds its
+    # pool reference to the returned tree and never reads the old one)
+    return jax.jit(step, static_argnums=(8, 9), donate_argnums=(2,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -633,12 +636,11 @@ def make_prefill_block(cfg: ModelConfig, kind: str, backend: str = "xla"):
         + ", ".join(SUPPORTED_KINDS))
 
 
-@functools.lru_cache(maxsize=None)
-def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...],
-                          backend: str = "xla"):
-    """Build THE jitted multi-session decode step for a hosted block range,
-    shared per (cfg, per-layer kind tuple, compute backend) — each server
-    calls it with its own (layers, rows) shapes.
+def _decode_step_body(cfg: ModelConfig, kinds: Tuple[str, ...],
+                      backend: str):
+    """The UNJITTED pooled decode-step body shared by
+    :func:`make_pool_decode_step` (row-buffer entry point) and
+    :func:`make_pool_round_step` (the fused round-resident entry point).
 
     step(run_params, shared_params, pool_trees, h, pos, emb0, enc_len,
          layer_active, layer_ids) -> (h, pool_trees)
@@ -749,4 +751,78 @@ def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...],
             new_trees[r] = new_tree
         return h, tuple(new_trees)
 
-    return jax.jit(step)
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...],
+                          backend: str = "xla"):
+    """Jitted pooled decode step (see :func:`_decode_step_body` for the
+    contract), shared per (cfg, per-layer kind tuple, compute backend) —
+    each server calls it with its own (layers, rows) shapes.
+
+    The pool trees (arg 2) are DONATED: the call updates each server's
+    cache pool in place instead of copying every leaf per round.  Aliasing
+    contract: after the call the input tree is dead — the caller MUST
+    rebind its pool reference to the returned tree and never touch the old
+    one (reading a donated leaf raises ``RuntimeError: Array has been
+    deleted``).  ``BlockServer.decode_rows``/``round_rows`` do exactly
+    that; see docs/serving.md "Round anatomy".
+    """
+    return jax.jit(_decode_step_body(cfg, kinds, backend),
+                   donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def make_pool_round_step(cfg: ModelConfig, kinds: Tuple[str, ...],
+                         backend: str = "xla"):
+    """Build THE fused per-(hop, server) dispatch of a device-resident
+    decode round: gather the hop's rows out of the round buffers, run the
+    pooled decode step, scatter the results back — ONE jitted call, no host
+    round-trip between hops.
+
+    hop(run_params, shared_params, pool_trees, h_round, pos_round,
+        emb0_round, encl_round, slot_of_row, row_of_slot, layer_active,
+        layer_ids) -> (h_round, pool_trees)
+
+    * ``h_round``: (W, 1, d) round-resident hidden states — one slot per
+      session of the round (W is the engine's fixed round width, so the
+      program never re-traces as sessions come and go),
+    * ``pos_round`` (W,) / ``encl_round`` (W,): per-slot cache position and
+      encoder length; ``emb0_round``: (W, 1, d) round-start embeddings for
+      shared-attention stacks (the engine's constant-shape dummy otherwise),
+    * ``slot_of_row``: (n_rows,) int32 — for each pool row, the round slot
+      feeding it this hop (-1 for rows not in the hop; they receive a
+      clipped placeholder gather that ``layer_active`` masks out),
+    * ``row_of_slot``: (W,) int32 — for each round slot, the pool row whose
+      result it takes back (-1 keeps the slot's hidden state untouched),
+    * ``layer_active`` / ``layer_ids``: as in the decode step.
+
+    Per-slot results are bit-identical to staging the same rows through
+    :func:`make_pool_decode_step`: the gather feeds each ACTIVE row exactly
+    the values the host path would have scattered in, rows are computed
+    independently (vmap), and inactive rows/slots are `where`-masked.  The
+    pool trees (arg 2) are DONATED — same aliasing contract as
+    :func:`make_pool_decode_step`.
+    """
+    body = _decode_step_body(cfg, kinds, backend)
+
+    def hop(run_params, shared_params, pool_trees, h_round, pos_round,
+            emb0_round, encl_round, slot_of_row, row_of_slot, layer_active,
+            layer_ids):
+        W = h_round.shape[0]
+        n_rows = slot_of_row.shape[0]
+        src = jnp.clip(slot_of_row, 0, W - 1)
+        h = h_round[src]
+        pos = pos_round[src]
+        # the dummy emb0 is (1, 1, 1): clip separately so the gather stays
+        # in bounds whatever the engine passed
+        emb0 = emb0_round[jnp.clip(src, 0, emb0_round.shape[0] - 1)]
+        enc_len = encl_round[src]
+        h_out, new_trees = body(run_params, shared_params, pool_trees, h,
+                                pos, emb0, enc_len, layer_active, layer_ids)
+        back = h_out[jnp.clip(row_of_slot, 0, n_rows - 1)]
+        keep = (row_of_slot >= 0)[:, None, None]
+        return jnp.where(keep, back, h_round), new_trees
+
+    return jax.jit(hop, donate_argnums=(2,))

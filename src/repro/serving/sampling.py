@@ -53,6 +53,11 @@ class SamplingSpec:
             raise ValueError("temperature must be > 0 for stochastic kinds")
         if self.kind == "top_k" and self.top_k <= 0:
             raise ValueError("top_k must be >= 1 for kind='top_k'")
+        if not 0 <= int(self.seed) < 2 ** 32:
+            # the fused round tail ships seeds as uint32 row inputs; a
+            # wider seed would silently fold differently than the host
+            # key_for path — reject at construction, not mid-round
+            raise ValueError("seed must be in [0, 2**32)")
 
     def row_params(self):
         """(temperature, top_k) as the vmapped row inputs: greedy is
@@ -64,9 +69,21 @@ class SamplingSpec:
         return float(self.temperature), int(self.top_k)
 
     def key_for(self, token_index: int):
-        """PRNG key of this session's ``token_index``-th generated token."""
-        return jax.random.fold_in(jax.random.PRNGKey(self.seed),
-                                  token_index)
+        """PRNG key of this session's ``token_index``-th generated token.
+
+        The fused round tail derives the SAME key on device from the raw
+        ``(seed, token_index)`` row inputs (``_key_for_row`` — identical
+        integer computation, identical bits), so the two paths draw
+        identical streams."""
+        return _key_for_row(self.seed, token_index)
+
+
+def _key_for_row(seed, token_index):
+    """fold_in(PRNGKey(seed), token_index) — THE key derivation, shared by
+    the host path (``SamplingSpec.key_for``) and the fused round tail
+    (traced seeds/indices); a pure integer function either way, so both
+    produce bit-identical keys."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), token_index)
 
 
 def _sample_one(logits, temperature, top_k, key):
@@ -94,3 +111,41 @@ def make_sampler():
     keys (N,2)) -> (N,) int32 tokens.  vmapped over rows — the engine stacks
     one row per session of a decode round."""
     return jax.jit(jax.vmap(_sample_one))
+
+
+@functools.lru_cache(maxsize=None)
+def make_round_tail(cfg):
+    """THE fused decode-round tail: ONE jitted dispatch folding the lm_head
+    projection and the vmapped row sampler over the round's device-resident
+    hidden states.
+
+    tail(embed_params, h_round (W, 1, d), temperature (W,), top_k (W,),
+         seeds (W,), token_index (W,)) -> (tokens (W,), logits (W, V))
+
+    Per-row PRNG keys are derived ON DEVICE inside the dispatch
+    (``_key_for_row`` vmapped over the raw seed/index rows) — the host
+    never builds per-session key arrays in the round hot path, and the
+    keys are bit-identical to ``SamplingSpec.key_for``.
+
+    ``W`` is the engine's fixed round width: unused slots carry dummy
+    inputs (temperature 0 → a discarded argmax), so the program never
+    re-traces as round membership changes, and — rows being independent
+    throughout (row-wise norm/einsum, vmapped sampler) — per-slot results
+    are bit-identical however many neighbours share the round.  Against
+    the per-session (width-1) ``lm_head`` of the serial reference path,
+    tokens are identical and logits agree to float-ulp: XLA may order the
+    projection's per-row reduction differently at different GEMM widths,
+    which cannot flip the sampler unless two logits already tie within one
+    ulp.  The engine issues its single host sync per round on the returned
+    ``tokens``; ``logits`` rows stay on device behind each session's
+    ``last_logits``.
+    """
+    from repro.models.layers import NULL_SH, lm_head
+
+    def tail(embed_params, h_round, temperature, top_k, seeds, token_index):
+        logits = lm_head(embed_params, cfg, NULL_SH, h_round)[:, 0]
+        keys = jax.vmap(_key_for_row)(seeds, token_index)
+        toks = jax.vmap(_sample_one)(logits, temperature, top_k, keys)
+        return toks, logits
+
+    return jax.jit(tail)

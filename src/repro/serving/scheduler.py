@@ -20,6 +20,13 @@ round).  The event loop:
               ending session has all its tokens; it then retires, frees its
               block-slots, and deferred sessions are re-admitted
 
+Every decode round the loop drives is device-resident by default
+(``GeoServingSystem.decode_round`` with ``decode_mode="fused"``): the
+round costs one batched embed, one fused dispatch per (hop, server), one
+fused lm_head+sample tail, and exactly one host sync — the scheduler's
+per-round Python overhead is bookkeeping, not data movement
+(``round_stats`` surfaces the engine's dispatch accounting).
+
 Within a client, starts are FIFO (a later arrival never overtakes an
 earlier one of the same client).  Used by examples/geo_serve.py and
 benchmarks/engine_validation.py — the engine half of the simulator
@@ -95,6 +102,13 @@ class ContinuousBatchingScheduler:
         self._last_start: Dict[int, float] = {}  # FIFO-within-client clamp
         self.results: Dict[int, ServedRequest] = {}
         self.max_concurrency = 0
+
+    @property
+    def round_stats(self) -> Dict[str, int]:
+        """The engine's per-round dispatch accounting (rounds driven, embed
+        / round-tail / fused-hop dispatches) — the device-resident round
+        contract the benchmarks and tests/test_round_fusion.py assert."""
+        return self.system.round_stats
 
     # ------------------------------------------------------------------
     def submit(self, rid: int, tokens: np.ndarray, arrival: float,

@@ -35,8 +35,9 @@ from repro.core.perf_model import (Placement, Problem, Route,
 from repro.core.placement import (auto_R, cg_bp, max_feasible_R,
                                   optimized_number_bp, optimized_order_bp,
                                   petals_bp, petals_m)
-from repro.core.routing import (ServerState, edge_waiting_times,
-                                petals_route, shortest_path_route, ws_rr)
+from repro.core.routing import (RouteCostCache, ServerState,
+                                edge_waiting_times, petals_route,
+                                shortest_path_route, ws_rr)
 from repro.sim.workload import Request, poisson_requests
 
 ALGORITHMS = ("petals", "proposed", "optimized_order", "optimized_number",
@@ -68,7 +69,18 @@ class SimResult:
 
 
 class _Timeline:
-    """Per-server cache-slot commitments [(start, end, k_blocks)]."""
+    """Per-server cache-slot commitments, stored as flat numpy event arrays
+    (start, end, k_blocks) with amortized-doubling growth.
+
+    ``usage_max`` — the inner loop of every ``fits()`` probe — is a fully
+    vectorized sweep: clip the overlapping intervals to the window, lexsort
+    the ±k events by (time, delta) exactly like the old per-tuple sort, and
+    take the max of the running ``cumsum``.  The old implementation built
+    and re-sorted a Python event list per call, which made admission
+    quadratic in the number of committed sessions — this keeps the
+    "light-weight CPU-only simulator for large deployments" claim honest at
+    thousands of requests (``BENCH_engine.json`` ``sim.tput``).
+    """
 
     def __init__(self, problem: Problem, placement: Placement):
         self.problem = problem
@@ -77,24 +89,35 @@ class _Timeline:
         self.cap = np.floor((problem.mem() - problem.s_m * m)
                             / problem.s_c).astype(np.int64)
         self.cap = np.maximum(self.cap, 0)
-        self.commits: List[List[Tuple[float, float, int]]] = [
-            [] for _ in range(problem.n_servers)]
+        n = problem.n_servers
+        self._start = [np.empty(8) for _ in range(n)]
+        self._end = [np.empty(8) for _ in range(n)]
+        self._k = [np.empty(8, np.int64) for _ in range(n)]
+        self._n = [0] * n
+
+    @property
+    def commits(self) -> List[List[Tuple[float, float, int]]]:
+        """Per-server [(start, end, k_blocks)] view of the event arrays."""
+        return [list(zip(self._start[j][: self._n[j]].tolist(),
+                         self._end[j][: self._n[j]].tolist(),
+                         self._k[j][: self._n[j]].tolist()))
+                for j in range(self.problem.n_servers)]
 
     def usage_max(self, j: int, t0: float, t1: float) -> int:
         """Max concurrent slot usage on server j over [t0, t1)."""
-        events = []
-        for s, e, k in self.commits[j]:
-            if s < t1 and e > t0:
-                events.append((max(s, t0), k))
-                events.append((min(e, t1), -k))
-        if not events:
+        n = self._n[j]
+        if n == 0:
             return 0
-        events.sort()
-        cur = peak = 0
-        for _, dk in events:
-            cur += dk
-            peak = max(peak, cur)
-        return peak
+        s, e, k = self._start[j][:n], self._end[j][:n], self._k[j][:n]
+        live = (s < t1) & (e > t0)
+        if not live.any():
+            return 0
+        ks = k[live]
+        times = np.concatenate([np.maximum(s[live], t0),
+                                np.minimum(e[live], t1)])
+        deltas = np.concatenate([ks, -ks])
+        order = np.lexsort((deltas, times))  # == sorted (time, ±k) tuples
+        return int(np.cumsum(deltas[order]).max())
 
     def fits(self, route: Route, t: float, dur: float) -> bool:
         for j, k in zip(route.servers, route.blocks):
@@ -105,11 +128,10 @@ class _Timeline:
     def earliest_start(self, route: Route, t: float, dur: float) -> float:
         cands = {t}
         for j in route.servers:
-            for s, e, k in self.commits[j]:
-                if e > t:
-                    cands.add(e)
-                if s > t:
-                    cands.add(s)
+            n = self._n[j]
+            s, e = self._start[j][:n], self._end[j][:n]
+            cands.update(e[e > t].tolist())
+            cands.update(s[s > t].tolist())
         for u in sorted(cands):
             if self.fits(route, u, dur):
                 return u
@@ -117,19 +139,29 @@ class _Timeline:
 
     def commit(self, route: Route, start: float, dur: float):
         for j, k in zip(route.servers, route.blocks):
-            self.commits[j].append((start, start + dur, k))
+            n = self._n[j]
+            if n == len(self._start[j]):  # amortized growth
+                self._start[j] = np.concatenate(
+                    [self._start[j], np.empty_like(self._start[j])])
+                self._end[j] = np.concatenate(
+                    [self._end[j], np.empty_like(self._end[j])])
+                self._k[j] = np.concatenate(
+                    [self._k[j], np.empty_like(self._k[j])])
+            self._start[j][n] = start
+            self._end[j][n] = start + dur
+            self._k[j][n] = k
+            self._n[j] = n + 1
 
     def states_at(self, t: float) -> Dict[int, ServerState]:
         """eq (20) view: active-or-committed sessions as (remaining, k)."""
         states: Dict[int, ServerState] = {}
-        for j, lst in enumerate(self.commits):
-            rem, blk = [], []
-            for s, e, k in lst:
-                if e > t:
-                    rem.append(e - t)
-                    blk.append(k)
-            if rem:
-                states[j] = ServerState(rem, blk)
+        for j in range(self.problem.n_servers):
+            n = self._n[j]
+            live = self._end[j][:n] > t
+            if live.any():
+                states[j] = ServerState(
+                    (self._end[j][:n][live] - t).tolist(),
+                    self._k[j][:n][live].tolist())
         return states
 
 
@@ -184,13 +216,17 @@ def simulate(problem: Problem, cfg: SimConfig,
     rows = []
     decision_time = place_time
     lw = problem.workload
+    # placement is fixed for the whole trace: memoize the routing graph /
+    # edge costs / slot capacities across arrivals (same cache the online
+    # controller uses)
+    route_cache = RouteCostCache(problem, placement)
     for req in requests:
         t = req.arrival
         t0 = _time.perf_counter()
         wait_est = 0.0
         if cfg.algorithm in ("proposed",):
             route, _, wait_est = ws_rr(problem, placement, req.client,
-                                       tl.states_at(t))
+                                       tl.states_at(t), cache=route_cache)
         elif cfg.algorithm == "optimized_rr":
             waiting = edge_waiting_times(problem, placement, tl.states_at(t))
             route, _ = solve_online_routing(problem, placement, req.client,
