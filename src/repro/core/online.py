@@ -12,7 +12,7 @@ The controller is the integration point for the serving stack
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -44,8 +44,16 @@ class OnlineBPRR:
     """Alg. 2 controller with session bookkeeping."""
 
     def __init__(self, problem: Problem, R: Optional[int] = None,
-                 arrival_rate: Optional[float] = None):
-        self.problem = problem
+                 arrival_rate: Optional[float] = None,
+                 slot_scale: float = 1.0):
+        # page-granular eq. (5)/(20): when the serving engine books pages
+        # instead of worst-case slots, each co-resident session reserves
+        # s_c / slot_scale cache bytes — scaling the controller's view of
+        # s_c ONCE propagates consistently through CG-BP's conservative_m
+        # (Alg. 1 line 1), the eq. (15) capacities, and the eq. (20)
+        # waiting times (1.0 keeps the paper's slab worst case)
+        self.slot_scale = float(slot_scale)
+        self.problem = problem = self._cache_scaled(problem)
         if R is None:
             guess = cg_upper_bound(problem, max(1, min(8, max_feasible_R(
                 problem)))) * problem.workload.l_out
@@ -59,6 +67,16 @@ class OnlineBPRR:
         # are arrival-invariant: memoize them across admits and invalidate
         # only when the placement / server set changes (replace_servers)
         self._route_cache = RouteCostCache(self.problem, self.placement)
+
+    def _cache_scaled(self, problem: Problem) -> Problem:
+        if self.slot_scale == 1.0:
+            return problem
+        llm = problem.llm
+        return replace(problem, llm=replace(
+            llm,
+            cache_bytes_per_token=llm.cache_bytes_per_token
+            / self.slot_scale,
+            cache_bytes_const=llm.cache_bytes_const / self.slot_scale))
 
     # ------------------------------------------------------------------
     def server_states(self, now: float) -> Dict[int, ServerState]:
@@ -105,7 +123,7 @@ class OnlineBPRR:
         """Re-run CG-BP after a join/leave/failure (Alg. 2 extension,
         §3.3.3).  Running sessions keep their routes; new requests use the
         new placement."""
-        self.problem = problem
+        self.problem = self._cache_scaled(problem)
         if R is not None:
             self.R = int(R)
         self.placement, self.info = cg_bp(self.problem, self.R)

@@ -2,17 +2,24 @@
 family-polymorphic per-server state pools (StateSpec-dispatched), pooled
 decode + bucketed prefill steps with a pluggable compute backend
 (``GeoServingSystem(backend="xla" | "pallas")`` — oracle jnp paths vs the
-``repro.kernels`` Pallas kernels with per-call XLA fallback), per-session
-sampling policies, the event-loop scheduler, and the session/request
-record types."""
+``repro.kernels`` Pallas kernels with per-call XLA fallback), slab and
+paged cache layouts (``cache_layout="paged"``: PagePool free-list
+allocation, page-granular eq. (5)/(20) accounting, preemption/resume),
+per-session sampling policies, the event-loop scheduler, and the
+session/request record types."""
 from repro.serving.engine import (BlockServer, EngineSession,
                                   GeoServingSystem, generate)
-from repro.serving.kv_cache import (SUPPORTED_KINDS, CachePool, StateSpec,
-                                    bucket_for, default_prefill_buckets,
-                                    kind_runs, make_pool_decode_step,
+from repro.serving.kv_cache import (SUPPORTED_KINDS, CachePool, PagePool,
+                                    StateSpec, bucket_for,
+                                    default_prefill_buckets, kind_runs,
+                                    make_paged_decode_step,
+                                    make_paged_prefill_step,
+                                    make_paged_round_step,
+                                    make_pool_decode_step,
                                     make_pool_prefill_step,
                                     make_pool_round_step, new_block_cache,
-                                    new_cache_pool_tree, new_state_pool_tree,
+                                    new_cache_pool_tree, new_paged_pool_tree,
+                                    new_state_pool_tree, pages_for,
                                     state_spec_for, state_specs,
                                     write_prefill_kv)
 from repro.serving.sampling import SamplingSpec, make_round_tail, make_sampler
@@ -22,9 +29,12 @@ from repro.serving.scheduler import (AdmissionScheduler,
 
 __all__ = ["AdmissionScheduler", "BlockServer", "CachePool",
            "ContinuousBatchingScheduler", "EngineSession", "GeoServingSystem",
-           "SUPPORTED_KINDS", "SamplingSpec", "ServedRequest", "StateSpec",
-           "bucket_for", "default_prefill_buckets", "generate", "kind_runs",
-           "make_pool_decode_step", "make_pool_prefill_step",
-           "make_pool_round_step", "make_round_tail", "make_sampler",
-           "new_block_cache", "new_cache_pool_tree", "new_state_pool_tree",
-           "state_spec_for", "state_specs", "write_prefill_kv"]
+           "PagePool", "SUPPORTED_KINDS", "SamplingSpec", "ServedRequest",
+           "StateSpec", "bucket_for", "default_prefill_buckets", "generate",
+           "kind_runs", "make_paged_decode_step", "make_paged_prefill_step",
+           "make_paged_round_step", "make_pool_decode_step",
+           "make_pool_prefill_step", "make_pool_round_step",
+           "make_round_tail", "make_sampler", "new_block_cache",
+           "new_cache_pool_tree", "new_paged_pool_tree",
+           "new_state_pool_tree", "pages_for", "state_spec_for",
+           "state_specs", "write_prefill_kv"]

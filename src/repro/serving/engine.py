@@ -66,10 +66,14 @@ from repro.models.layers import NULL_SH, embed_frames, embed_tokens, lm_head
 from repro.models.model import block_param_range
 from repro.serving.kv_cache import (CachePool, bucket_for,
                                     default_prefill_buckets, kind_runs,
+                                    make_paged_decode_step,
+                                    make_paged_prefill_step,
+                                    make_paged_round_step,
                                     make_pool_decode_step,
                                     make_pool_prefill_step,
                                     make_pool_round_step,
-                                    make_prefill_block, state_specs)
+                                    make_prefill_block, pages_for,
+                                    state_specs)
 from repro.serving.sampling import (SamplingSpec, make_round_tail,
                                     make_sampler)
 
@@ -95,7 +99,11 @@ class EngineSession:
     pos: int = 0  # next cache write position
     tokens: List[int] = field(default_factory=list)  # prompt + generated
     n_generated: int = 0
-    state: str = "admitted"  # admitted | prefilling | active | failed | done
+    # admitted | prefilling | active | preempted | failed | done —
+    # "preempted" (paged layout only): evicted from every route server
+    # under page pressure, resumable via the failover-replay machinery
+    state: str = "admitted"
+    n_preemptions: int = 0  # times this session was swapped out
     # per-hop input history (the PETALS fault-tolerance cache); entry 0 is
     # the prompt-phase record — a plain array for single-phase stacks, a
     # {"enc": ..., "dec": ...} dict for enc-dec — followed by one record per
@@ -150,7 +158,8 @@ class BlockServer:
     def __init__(self, sid: int, cfg: ModelConfig, params, a: int, m: int,
                  *, n_rows: int, max_len: int, cap_slots: int,
                  enc_len: int = 0, slowdown: float = 1.0,
-                 backend: str = "xla"):
+                 backend: str = "xla", cache_layout: str = "slab",
+                 page_size: int = 0):
         self.sid = sid
         self.backend = backend
         self.cfg = cfg
@@ -165,13 +174,24 @@ class BlockServer:
             for kind, lo, hi in self.runs)
         self.shared = params.get("shared")  # zamba2 shared attention
         self.layer_ids = jnp.arange(self.a, self.a + self.m, dtype=jnp.int32)
+        self.cache_layout = cache_layout
         self.pool = CachePool(cfg, self.kinds, n_rows, max_len, cap_slots,
-                              enc_len=enc_len)
+                              enc_len=enc_len, layout=cache_layout,
+                              page_size=page_size)
         self.alive = True
         self.slowdown = slowdown
-        self._step = make_pool_decode_step(cfg, self.kinds, backend)
-        self._round_step = make_pool_round_step(cfg, self.kinds, backend)
-        self._prefill_pool = make_pool_prefill_step(cfg, self.kinds, backend)
+        if cache_layout == "paged":
+            self._step = make_paged_decode_step(cfg, self.kinds, backend,
+                                                page_size)
+            self._round_step = make_paged_round_step(cfg, self.kinds,
+                                                     backend, page_size)
+            self._prefill_pool = make_paged_prefill_step(cfg, self.kinds,
+                                                         backend, page_size)
+        else:
+            self._step = make_pool_decode_step(cfg, self.kinds, backend)
+            self._round_step = make_pool_round_step(cfg, self.kinds, backend)
+            self._prefill_pool = make_pool_prefill_step(cfg, self.kinds,
+                                                        backend)
         self._prefill_blocks = {k: make_prefill_block(cfg, k, backend)
                                 for k in set(self.kinds)}
         # constant-shape filler for unused emb0/enc_rows step inputs, so the
@@ -180,11 +200,14 @@ class BlockServer:
         self._zero_encl = jnp.zeros((n_rows,), jnp.int32)
 
     # -- session admission bookkeeping --------------------------------------
-    def fits(self, sid: int, k_blocks: int) -> bool:
+    def fits(self, sid: int, k_blocks: int, n_pages: int = 0,
+             worst_pages: Optional[int] = None) -> bool:
+        if self.cache_layout == "paged":
+            return self.pool.fits(sid, k_blocks, n_pages, worst_pages)
         return self.pool.fits(sid, k_blocks)
 
-    def admit(self, sid: int, k_blocks: int) -> int:
-        return self.pool.alloc(sid, k_blocks)
+    def admit(self, sid: int, k_blocks: int, n_pages: int = 0) -> int:
+        return self.pool.alloc(sid, k_blocks, n_pages)
 
     def evict(self, sid: int):
         self.pool.release(sid)
@@ -236,11 +259,17 @@ class BlockServer:
         chunk's state into the pool.  ``phase`` selects encoder vs
         non-encoder runs for enc-dec stacks (see make_pool_prefill_step)."""
         assert self.alive, f"server {self.sid} is dead"
-        h_out, self.pool.tree = self._prefill_pool(
-            self.run_params, self.shared, self.pool.tree, h_rows,
-            self._dummy if emb0_rows is None else emb0_rows,
-            self._dummy if enc_rows is None else enc_rows,
-            layer_active, self.layer_ids, offset, phase)
+        args = (h_rows,
+                self._dummy if emb0_rows is None else emb0_rows,
+                self._dummy if enc_rows is None else enc_rows,
+                layer_active, self.layer_ids, offset, phase)
+        if self.cache_layout == "paged":
+            h_out, self.pool.tree = self._prefill_pool(
+                self.run_params, self.shared, self.pool.tree,
+                self.pool.page_table(), *args)
+        else:
+            h_out, self.pool.tree = self._prefill_pool(
+                self.run_params, self.shared, self.pool.tree, *args)
         return h_out
 
     def decode_rows(self, h_rows, pos_rows, layer_active, emb0_rows=None,
@@ -251,11 +280,17 @@ class BlockServer:
         the stale input tree is rebound here and must never be read again
         — see docs/serving.md "Round anatomy" for the aliasing contract."""
         assert self.alive, f"server {self.sid} is dead"
-        h_out, self.pool.tree = self._step(
-            self.run_params, self.shared, self.pool.tree, h_rows, pos_rows,
-            self._dummy if emb0_rows is None else emb0_rows,
-            self._zero_encl if enc_len_rows is None else enc_len_rows,
-            layer_active, self.layer_ids)
+        args = (h_rows, pos_rows,
+                self._dummy if emb0_rows is None else emb0_rows,
+                self._zero_encl if enc_len_rows is None else enc_len_rows,
+                layer_active, self.layer_ids)
+        if self.cache_layout == "paged":
+            h_out, self.pool.tree = self._step(
+                self.run_params, self.shared, self.pool.tree,
+                self.pool.page_table(), *args)
+        else:
+            h_out, self.pool.tree = self._step(
+                self.run_params, self.shared, self.pool.tree, *args)
         return h_out
 
     def round_rows(self, h_round, pos_round, encl_round, slot_of_row,
@@ -264,11 +299,17 @@ class BlockServer:
         the round buffers, decode them through the pooled step, scatter the
         results back — ONE dispatch, donated pool, no host transfer."""
         assert self.alive, f"server {self.sid} is dead"
-        h_round, self.pool.tree = self._round_step(
-            self.run_params, self.shared, self.pool.tree, h_round,
-            pos_round, self._dummy if emb0_round is None else emb0_round,
-            encl_round, slot_of_row, row_of_slot, layer_active,
-            self.layer_ids)
+        args = (h_round, pos_round,
+                self._dummy if emb0_round is None else emb0_round,
+                encl_round, slot_of_row, row_of_slot, layer_active,
+                self.layer_ids)
+        if self.cache_layout == "paged":
+            h_round, self.pool.tree = self._round_step(
+                self.run_params, self.shared, self.pool.tree,
+                self.pool.page_table(), *args)
+        else:
+            h_round, self.pool.tree = self._round_step(
+                self.run_params, self.shared, self.pool.tree, *args)
         return h_round
 
     def decode_range(self, sid: int, h, lo: int, hi: int, pos: int,
@@ -360,6 +401,17 @@ class GeoServingSystem:
     never change which features work — and round RESULTS (token streams,
     admission, virtual clock) are backend-independent (logits agree to
     float-eps; see docs/serving.md).
+    ``cache_layout``: ``"slab"`` (default) books worst-case fixed-width
+    cache rows at admission — the exact reference twin; ``"paged"`` books
+    ``page_size``-token pages instead (page-granular eq. (5)/(20)
+    accounting, see docs/serving.md "Paged pools"): admission charges only
+    the prompt's pages, sessions grow page-by-page during decode, and
+    under page pressure the engine PREEMPTS a victim session (its pages
+    are freed; its client-side hop histories remain) and later resumes it
+    through the failover-replay machinery — token streams and the virtual
+    clock are bit-identical to the slab layout and to an unpreempted run.
+    ``page_size``: tokens per page; must divide ``max_seq_len`` (defaults
+    to the largest divisor ≤ 16).
     """
 
     def __init__(self, cfg: ModelConfig, params, problem: Problem,
@@ -370,12 +422,15 @@ class GeoServingSystem:
                  prefill_buckets: Optional[Tuple[int, ...]] = None,
                  max_enc_len: Optional[int] = None,
                  decode_mode: str = "fused",
-                 backend: str = "xla"):
+                 backend: str = "xla",
+                 cache_layout: str = "slab",
+                 page_size: Optional[int] = None):
         from repro.kernels.runtime import resolve_backend
 
         assert problem.L == cfg.n_layers
         assert prefill_mode in ("batched", "serial"), prefill_mode
         assert decode_mode in ("fused", "serial"), decode_mode
+        assert cache_layout in ("slab", "paged"), cache_layout
         self.backend = resolve_backend(backend)
         self.cfg = cfg
         self.params = params
@@ -386,6 +441,22 @@ class GeoServingSystem:
         self.max_seq_len = int(
             max_seq_len if max_seq_len is not None
             else problem.workload.l_in + max_new_tokens + 32)
+        self.cache_layout = cache_layout
+        if cache_layout == "paged":
+            if page_size is None:  # largest divisor of max_seq_len <= 16
+                page_size = next(p for p in range(min(16, self.max_seq_len),
+                                                  0, -1)
+                                 if self.max_seq_len % p == 0)
+            page_size = int(page_size)
+            if page_size < 1 or self.max_seq_len % page_size != 0:
+                raise ValueError(
+                    f"page_size {page_size} must divide max_seq_len "
+                    f"{self.max_seq_len}")
+        else:
+            page_size = 0
+        self.page_size = page_size
+        # FIFO resume queue + preemption bookkeeping (paged layout)
+        self._preempt_order: List[int] = []
         self.prefill_mode = prefill_mode
         self.specs = state_specs(cfg)
         self._recurrent = any(s.recurrent for s in self.specs)
@@ -429,7 +500,8 @@ class GeoServingSystem:
         # lm_head+sample tail, one fused dispatch per (hop, server), ONE
         # host sync — tests/test_round_fusion.py asserts against this)
         self.round_stats = {"rounds": 0, "embed_dispatches": 0,
-                            "tail_dispatches": 0, "hop_dispatches": 0}
+                            "tail_dispatches": 0, "hop_dispatches": 0,
+                            "preemptions": 0, "resumes": 0}
 
     # ------------------------------------------------------------------
     def _cap_slots(self, j: int, m: int) -> int:
@@ -447,13 +519,21 @@ class GeoServingSystem:
                 continue  # keep live objects (running sessions hold caches)
             cap = self._cap_slots(j, m)
             # pool arrays need >= 1 row for fixed jit shapes, but the
-            # block-slot budget stays honest: cap == 0 admits nothing
-            n_rows = max(1, min(self.max_sessions, cap))
+            # block-slot budget stays honest: cap == 0 admits nothing.
+            # Paged layout: rows are cheap (the expensive self-KV bytes
+            # live in the shared page arrays), so every session the engine
+            # could ever co-host gets a row — co-residency is then bounded
+            # by the page-unit budget, not the worst-case slot count.
+            if self.cache_layout == "paged":
+                n_rows = max(1, self.max_sessions)
+            else:
+                n_rows = max(1, min(self.max_sessions, cap))
             self.servers[j] = BlockServer(
                 j, self.cfg, self.params, a, m, n_rows=n_rows,
                 max_len=self.max_seq_len, cap_slots=cap,
                 enc_len=self.max_enc_len if self._is_enc_dec else 0,
-                backend=self.backend)
+                backend=self.backend, cache_layout=self.cache_layout,
+                page_size=self.page_size)
 
     def alive_placement(self) -> Placement:
         a = np.array(self.placement.a)
@@ -509,10 +589,26 @@ class GeoServingSystem:
             frames=frames, enc_len=enc_len)
         return sid
 
+    def _prompt_pages(self, sess: EngineSession) -> int:
+        """Pages booked at admission: enough for the prompt (paged)."""
+        return pages_for(sess.prompt_len, self.page_size)
+
+    def _worst_pages(self, sess: EngineSession) -> int:
+        """Fully-grown page count — the solo-completability bound admission
+        asserts so preempted sessions can always eventually resume."""
+        return pages_for(sess.prompt_len + sess.n_new, self.page_size)
+
     def fits_session(self, sid: int) -> bool:
-        """True iff every route server has a free row AND block-slots for
-        this session (no-overbooking check)."""
+        """True iff every route server has a free row AND block-slots
+        (slab) / prompt pages plus solo-completability headroom (paged)
+        for this session (no-overbooking check)."""
         sess = self.sessions[sid]
+        if self.cache_layout == "paged":
+            p, w = self._prompt_pages(sess), self._worst_pages(sess)
+            return all(self.servers[j].alive
+                       and self.servers[j].fits(sid, k, p, w)
+                       for j, k in zip(sess.route.servers,
+                                       sess.route.blocks))
         return all(self.servers[j].alive and self.servers[j].fits(sid, k)
                    for j, k in zip(sess.route.servers, sess.route.blocks))
 
@@ -549,8 +645,10 @@ class GeoServingSystem:
             if sess.client in failed_clients or not self.fits_session(sid):
                 failed_clients.add(sess.client)
                 continue
+            n_pages = (self._prompt_pages(sess)
+                       if self.cache_layout == "paged" else 0)
             for j, k in zip(sess.route.servers, sess.route.blocks):
-                self.servers[j].admit(sid, k)
+                self.servers[j].admit(sid, k, n_pages=n_pages)
             sess.start = now
             admitted.append(sess)
         if not admitted:
@@ -866,17 +964,222 @@ class GeoServingSystem:
         (hop, server), one fused lm_head+sample tail, and a single host
         sync on the sampled token vector.  ``decode_mode="serial"`` runs
         the pre-refactor per-session reference — identical tokens, logits
-        and virtual-clock accounting."""
-        if sids is None:
-            sids = [s.sid for s in self.sessions.values()
-                    if s.state == "active" and s.n_generated < s.n_new]
-        group = [self.sessions[sid] for sid in sids
-                 if self.sessions[sid].state == "active"]
+        and virtual-clock accounting.
+
+        Paged layout: preempted sessions are resumed (FIFO) when their
+        pages fit again, and every session decoding this round first
+        grows its pages to cover the write position — preempting victims
+        under page pressure (see ``preempt_session``)."""
+        if self.cache_layout == "paged":
+            explicit = sids is not None
+            self._resume_preempted()
+            if sids is None:
+                sids = [s.sid for s in self.sessions.values()
+                        if s.state == "active" and s.n_generated < s.n_new]
+            group = [self.sessions[sid] for sid in sids
+                     if self.sessions[sid].state == "active"]
+            group = self._ensure_page_capacity(group)
+            if not group and not explicit and any(
+                    s.state == "preempted" and s.n_generated < s.n_new
+                    for s in self.sessions.values()):
+                # nothing resident could decode, but swapped-out sessions
+                # still owe tokens: force-resume the queue head (evicting
+                # finished-but-unretired holdouts) so the round makes
+                # progress — admission's solo-fit bound guarantees the
+                # oldest preempted session eventually fits
+                self._resume_preempted(force=True)
+                group = self._ensure_page_capacity(
+                    [s for s in self.sessions.values()
+                     if s.state == "active" and s.n_generated < s.n_new])
+        else:
+            if sids is None:
+                sids = [s.sid for s in self.sessions.values()
+                        if s.state == "active" and s.n_generated < s.n_new]
+            group = [self.sessions[sid] for sid in sids
+                     if self.sessions[sid].state == "active"]
         if not group:
             return {}
         if self.decode_mode == "serial":
             return self._decode_round_serial(group)
         return self._decode_round_fused(group)
+
+    # ------------------------------------------------------------------
+    # Paged layout: page growth, preemption, resume
+    # ------------------------------------------------------------------
+    def _pick_victim(self, j: int, protect: set,
+                     finished_only: bool = False) -> Optional[int]:
+        """Choose a session to preempt on server ``j``: finished-but-
+        unretired sessions first (their caches are dead weight — no replay
+        ever needed), then the latest-admitted active session (LIFO — the
+        earliest-admitted session always survives, so every round makes
+        forward progress).  Mid-prefill sessions are never victims: their
+        pages are exactly their in-flight prompt."""
+        cands = []
+        for sid in self.servers[j].pool.rows:
+            if sid in protect:
+                continue
+            s = self.sessions.get(sid)
+            if s is None or s.state != "active":
+                continue
+            finished = s.n_generated >= s.n_new
+            if finished_only and not finished:
+                continue
+            cands.append((0 if finished else 1, -sid, sid))
+        return min(cands)[2] if cands else None
+
+    def preempt_session(self, sid: int):
+        """Swap a session out under page pressure: free its rows/pages on
+        EVERY route server.  The client-side artifacts that survive — hop
+        input histories, tokens, ``enc_out``, the sampling policy — are
+        exactly the failover-replay cache, so ``_try_resume`` can rebuild
+        bit-identical server state later.  The virtual clock is untouched:
+        preemption models a host-memory swap, which the paper's clock
+        (eq. (1)) does not bill."""
+        sess = self.sessions[sid]
+        assert sess.state == "active", sess.state
+        sess.last_logits  # materialize a lazy fused-round logits box
+        sess.state = "preempted"
+        sess.n_preemptions += 1
+        sess._h = None
+        sess._emb0 = None
+        for j in set(sess.route.servers):
+            if j in self.servers:
+                self.servers[j].evict(sid)
+        self._preempt_order.append(sid)
+        self.round_stats["preemptions"] += 1
+
+    def _grow_session(self, sess: EngineSession, need: int,
+                      protect: set) -> bool:
+        """Grow ``sess`` to ``need`` pages on every route server,
+        preempting victims under pressure.  False when even preempting
+        every candidate cannot make room (the caller then self-preempts
+        the session; partial growth is harmless — pages stay booked)."""
+        for j, k in zip(sess.route.servers, sess.route.blocks):
+            srv = self.servers.get(j)
+            if srv is None or not srv.alive or sess.sid not in srv.pool.rows:
+                continue  # dead / not-yet-resident hop: _failover re-books
+            pool = srv.pool
+            while not pool.can_grow(sess.sid, need):
+                victim = self._pick_victim(j, protect)
+                if victim is None:
+                    return False
+                self.preempt_session(victim)
+            pool.grow_pages(sess.sid, need)
+        return True
+
+    def _ensure_page_capacity(self, group: List[EngineSession]
+                              ) -> List[EngineSession]:
+        """Before a decode round: every member needs pages covering its
+        write position.  Members are grown oldest-first (admission order);
+        one that cannot fit even after evicting every victim preempts
+        ITSELF and retries in a later round.  Returns the surviving group
+        in the caller's order."""
+        kept: List[EngineSession] = []
+        for sess in sorted(group, key=lambda s: s.sid):
+            if sess.state != "active":  # preempted as a victim just now
+                continue
+            need = pages_for(sess.pos + 1, self.page_size)
+            if self._grow_session(sess, need,
+                                  protect={s.sid for s in kept}
+                                  | {sess.sid}):
+                kept.append(sess)
+            else:
+                self.preempt_session(sess.sid)
+        order = {s.sid: i for i, s in enumerate(group)}
+        return sorted(kept, key=lambda s: order[s.sid])
+
+    def _resume_preempted(self, force: bool = False):
+        """Resume swapped-out sessions in preemption (FIFO) order while
+        they fit; stop at the first that does not (no overtaking — the
+        queue head's admission-time solo-fit bound guarantees it
+        eventually fits).  ``force``: additionally evict finished-but-
+        unretired page holders to make room for the queue head."""
+        while self._preempt_order:
+            sid = self._preempt_order[0]
+            sess = self.sessions.get(sid)
+            if (sess is None or sess.state != "preempted"
+                    or sess.n_generated >= sess.n_new):
+                self._preempt_order.pop(0)  # retired / finished meanwhile
+                continue
+            if not self._try_resume(sess, evict_finished=force):
+                return
+            self._preempt_order.pop(0)
+            force = False  # only the queue head gets the forced eviction
+
+    def _try_resume(self, sess: EngineSession,
+                    evict_finished: bool = False) -> bool:
+        """Re-admit a preempted session on its route's ALIVE servers and
+        replay its client-side history — each hop independently replays
+        its own recorded inputs (prompt chunks through the deterministic
+        chunk plan, then one pooled decode per generated token), exactly
+        the failover machinery, so the rebuilt caches are bit-identical
+        and the virtual clock needs no adjustment.  Dead route servers are
+        skipped: the next traverse splices them out via ``_failover`` once
+        the session is resident again."""
+        need = pages_for(max(sess.pos, 1), self.page_size)
+        worst = self._worst_pages(sess)
+        hops = [(j, k) for j, k in zip(sess.route.servers,
+                                       sess.route.blocks)
+                if j in self.servers and self.servers[j].alive]
+        if not hops:
+            # the whole route died while swapped out: resume holding
+            # nothing — the next traverse's ``_failover`` splices a full
+            # replacement chain (booking its own pages) from the client-
+            # side history, exactly as for a resident session
+            sess.state = "active"
+            self.round_stats["resumes"] += 1
+            return True
+        for j, k in hops:
+            while not self.servers[j].fits(sess.sid, k, need, worst):
+                if not evict_finished:
+                    return False
+                victim = self._pick_victim(j, protect={sess.sid},
+                                           finished_only=True)
+                if victim is None:
+                    return False
+                self.preempt_session(victim)
+        for j, k in hops:
+            self.servers[j].admit(sess.sid, k, n_pages=need)
+        self._replay_session(sess)
+        sess.state = "active"
+        self.round_stats["resumes"] += 1
+        return True
+
+    def _replay_session(self, sess: EngineSession):
+        """Rebuild a preempted session's caches on its (alive) route
+        servers from the client-side hop histories.  Unlike ``_failover``
+        — which chains activations through a REPLACEMENT chain — every
+        original hop has its own complete input history, so hops replay
+        independently and the outputs are discarded."""
+        S = sess.prompt_len
+        e = 0
+        for hop, (j, k) in enumerate(zip(sess.route.servers,
+                                         sess.route.blocks)):
+            e_lo, e_hi = e, e + k
+            e += k
+            if j not in self.servers or not self.servers[j].alive:
+                continue
+            rec = sess.hop_inputs[hop][0]
+            if self._is_enc_dec:
+                hs_enc = rec.get("enc") if isinstance(rec, dict) else None
+                hs_dec = rec.get("dec") if isinstance(rec, dict) else rec
+                self._replay_prefill_encdec(sess, j, e_lo, e_hi, hs_enc,
+                                            hs_dec)
+            else:
+                self._replay_prefill_range(sess, j, e_lo, e_hi, rec)
+            if max(e_lo, self._n_enc) >= e_hi:
+                continue  # encoder-only hop: no decode records
+            for t_idx, h_tok in enumerate(sess.hop_inputs[hop][1:]):
+                h_tok = self._hop_record(h_tok)
+                pos = S + t_idx
+                emb0 = None
+                if self._needs_emb0:
+                    emb0 = self._embed(
+                        self.params["embed"],
+                        jnp.asarray([[sess.tokens[pos]]], jnp.int32))
+                self.servers[j].decode_range(
+                    sess.sid, h_tok, max(e_lo, self._n_enc), e_hi, pos,
+                    emb0=emb0, enc_len=sess.enc_len)
 
     def _decode_round_serial(self, group: List[EngineSession]
                              ) -> Dict[int, int]:
@@ -1138,9 +1441,10 @@ class GeoServingSystem:
                    if s.state in ("active", "prefilling"))
 
     def slot_usage(self) -> Dict[int, Tuple[int, int]]:
-        """{server: (block-slots used, capacity)} — invariant-check hook."""
-        return {j: (srv.pool.slots_used, srv.pool.cap_slots)
-                for j, srv in self.servers.items()}
+        """{server: (used, capacity)} in the layout's eq. (5) accounting
+        unit — block-slots (slab) or page-units (paged); the
+        invariant-check hook."""
+        return {j: srv.pool.usage() for j, srv in self.servers.items()}
 
     # ------------------------------------------------------------------
     # Legacy single-session API (implemented on the pooled machinery)
@@ -1175,6 +1479,14 @@ class GeoServingSystem:
         else:
             sess.tokens.append(int(token))
         sess.n_generated = len(sess.tokens) - sess.prompt_len
+        if self.cache_layout == "paged":
+            # legacy single-session semantics: growth failure propagates
+            if not self._grow_session(sess,
+                                      pages_for(sess.pos + 1,
+                                                self.page_size),
+                                      protect={sess.sid}):
+                raise RuntimeError(
+                    f"session {sid}: no page capacity for decode")
         tok = jnp.asarray([[int(token)]], jnp.int32)
         sess._h = self._embed(self.params["embed"], tok)
         sess._emb0 = sess._h
@@ -1362,13 +1674,23 @@ class GeoServingSystem:
             k = int(min(alive.a[j] + alive.m[j], e_hi) - e)
             repl_routes.append((j, e, e + k))
             e += k
-        # claim slots on the replacement chain, then replay
+        # claim slots on the replacement chain, then replay.  Paged layout:
+        # the replacement hops book pages covering everything the replay
+        # and the in-flight round will write ([0, pos] — the round that
+        # triggered this failover writes position pos)
+        n_pages = worst = None
+        if self.cache_layout == "paged":
+            n_pages = pages_for(min(sess.pos + 1, self.max_seq_len),
+                                self.page_size)
+            worst = self._worst_pages(sess)
         for j, lo, hi2 in repl_routes:
-            if not self.servers[j].fits(sess.sid, hi2 - lo):
+            if not self.servers[j].fits(sess.sid, hi2 - lo,
+                                        n_pages or 0, worst):
                 raise RuntimeError(
                     f"failover target {j} has no free cache slots")
         for j, lo, hi2 in repl_routes:
-            self.servers[j].admit(sess.sid, hi2 - lo)
+            self.servers[j].admit(sess.sid, hi2 - lo,
+                                  n_pages=n_pages or 0)
         # replay, recording each replacement hop's OWN input history so a
         # later failure of any replacement hop replays correct activations
         new_histories: List[List] = [[] for _ in repl_routes]

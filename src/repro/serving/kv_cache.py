@@ -32,6 +32,24 @@ model is family-agnostic): a server hosting ``m`` blocks has
 ``k`` of the server's blocks occupies ``k`` block-slots from start to
 retirement.  ``CachePool`` enforces both the row budget (physical arrays)
 and the block-slot budget — the no-overbooking commitment.
+
+Two cache layouts share that accounting:
+
+* ``layout="slab"`` (default, the exact reference twin): every row owns a
+  fixed-width ``(max_len, ...)`` stripe of each time-indexed leaf, so one
+  admitted session books worst-case memory whatever its actual length.
+* ``layout="paged"``: the time axis of every *self-KV* leaf is carved into
+  ``page_size``-token pages held in shared physical page arrays
+  ``(layers, n_pages + 1, page_size, ...)``; a :class:`PagePool` free list
+  plus one int32 page table ``(n_rows, max_pages)`` per server map row
+  time-slices to physical pages (page id 0 is the reserved trash page for
+  unassigned entries).  Admission books only the pages a prompt needs, and
+  eq. (5)'s budget becomes page-granular: ``cap_units = cap_slots ×
+  max_pages`` page-units against which a session through ``k`` blocks
+  holding ``p`` pages charges ``k·p`` — the same ⌊(M_j − s_m·m_j)/s_c⌋
+  bytes, metered at page rather than worst-case-sequence granularity.
+  Recurrent / cross-KV leaves (wkv, ssm+conv, ck/cv) stay row-resident:
+  their footprint is length-independent, so paging buys nothing there.
 """
 from __future__ import annotations
 
@@ -41,6 +59,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 
@@ -249,6 +268,144 @@ def new_cache_pool_tree(cfg: ModelConfig, kind: str, n_layers: int,
     return new_state_pool_tree(cfg, kind, n_layers, n_rows, max_len)
 
 
+# ---------------------------------------------------------------------------
+# Paged layout: free-list page allocator + paged state trees
+# ---------------------------------------------------------------------------
+
+TRASH_PAGE = 0  # physical page id 0: write target of every unassigned entry
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` cache positions (0 for 0)."""
+    n_tokens = int(n_tokens)
+    assert n_tokens >= 0
+    return -(-n_tokens // int(page_size))
+
+
+class PagePool:
+    """Deterministic free-list page allocator (the vLLM block-table trick).
+
+    Physical pages are numbered ``1..n_pages``; id ``TRASH_PAGE == 0`` is
+    reserved as the write target of unassigned page-table entries, so the
+    jitted gather/scatter never needs a validity branch.  ``table`` is the
+    shared int32 page table ``(n_rows, max_pages_per_row)``: row ``r``'s
+    time-slice ``[i*page_size, (i+1)*page_size)`` lives in physical page
+    ``table[r, i]`` (0 = unassigned).  Rows grow monotonically
+    (``grow_to``) and free wholesale (``free_row`` — preemption and
+    retirement are the same operation to the allocator).
+
+    The free list is LIFO and all operations are pure functions of the
+    call sequence — replaying the same sequence reproduces the same
+    tables bit-for-bit (the property suite in tests/test_paged_pools.py
+    fuzzes exactly these invariants via ``check_invariants``).
+    """
+
+    def __init__(self, n_pages: int, n_rows: int, max_pages_per_row: int):
+        self.n_pages = int(n_pages)
+        self.n_rows = int(n_rows)
+        self.max_pages_per_row = int(max_pages_per_row)
+        assert self.n_pages >= 0 and self.n_rows >= 1
+        assert self.max_pages_per_row >= 1
+        self.table = np.zeros((self.n_rows, self.max_pages_per_row),
+                              np.int32)
+        self.count = np.zeros((self.n_rows,), np.int32)
+        # LIFO free list; initialized so the first pops hand out 1, 2, 3...
+        self._free: List[int] = list(range(self.n_pages, 0, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return int(self.count.sum())
+
+    def pages_of(self, row: int) -> List[int]:
+        """The live page ids of ``row`` in table order."""
+        return [int(self.table[row, i])
+                for i in range(int(self.count[row]))]
+
+    def can_grow(self, row: int, n_pages: int) -> bool:
+        return n_pages - int(self.count[row]) <= len(self._free)
+
+    def grow_to(self, row: int, n_pages: int) -> List[int]:
+        """Extend ``row`` to ``n_pages`` pages (no-op when already there);
+        returns the newly assigned page ids.  Raises on free-list
+        exhaustion — callers must check ``can_grow``."""
+        have = int(self.count[row])
+        if n_pages <= have:
+            return []
+        if n_pages > self.max_pages_per_row:
+            raise RuntimeError(
+                f"row {row}: {n_pages} pages exceed the per-row table "
+                f"width {self.max_pages_per_row}")
+        if n_pages - have > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: row {row} needs {n_pages - have} "
+                f"pages, {len(self._free)} free")
+        fresh = []
+        for i in range(have, n_pages):
+            pid = self._free.pop()
+            self.table[row, i] = pid
+            fresh.append(pid)
+        self.count[row] = n_pages
+        return fresh
+
+    def free_row(self, row: int) -> List[int]:
+        """Return every page of ``row`` to the free list (reverse order, so
+        alloc→free→alloc round-trips reproduce the same page ids).
+        Returns the freed page ids."""
+        freed = []
+        for i in reversed(range(int(self.count[row]))):
+            pid = int(self.table[row, i])
+            self._free.append(pid)
+            freed.append(pid)
+            self.table[row, i] = 0
+        self.count[row] = 0
+        return freed
+
+    def check_invariants(self):
+        """Allocator invariants (the property-test contract):
+        * entries beyond ``count[r]`` are 0; entries below are in
+          ``[1, n_pages]`` — tables only reference live pages,
+        * no physical page is referenced twice (no double-booking),
+        * live ∪ free is a partition of ``{1..n_pages}`` (conservation).
+        """
+        live: List[int] = []
+        for r in range(self.n_rows):
+            c = int(self.count[r])
+            assert 0 <= c <= self.max_pages_per_row
+            assert (self.table[r, c:] == 0).all(), f"row {r}: stale entries"
+            ids = self.table[r, :c].tolist()
+            assert all(1 <= p <= self.n_pages for p in ids), \
+                f"row {r}: out-of-range page id"
+            live.extend(ids)
+        assert len(live) == len(set(live)), "double-booked page"
+        free = self._free
+        assert len(free) == len(set(free)), "duplicate free-list entry"
+        assert not set(live) & set(free), "page both live and free"
+        assert len(live) + len(free) == self.n_pages, "page leak"
+
+
+def new_paged_pool_tree(cfg: ModelConfig, kind: str, n_layers: int,
+                        n_rows: int, max_len: int, page_size: int,
+                        n_phys: int, enc_len: int = 0):
+    """Paged-layout state tree: self-KV leaves become shared physical page
+    arrays ``(n_layers, n_phys, page_size, ...)`` (``n_phys`` includes the
+    trash page) addressed through the pool's page table; every other leaf
+    keeps its row-resident ``(n_layers, n_rows, ...)`` slab layout."""
+    template = new_state_pool_tree(cfg, kind, n_layers, 1, max_len, enc_len)
+    out = {}
+    for key, leaf in template.items():
+        if key in _SELF_KV_KEYS:
+            out[key] = jnp.zeros(
+                (n_layers, n_phys, page_size) + leaf.shape[3:], leaf.dtype)
+        else:
+            out[key] = jnp.zeros((n_layers, n_rows) + leaf.shape[2:],
+                                 leaf.dtype)
+    return out
+
+
 class CachePool:
     """Row + block-slot bookkeeping around the stacked state trees of ONE
     server.
@@ -259,10 +416,20 @@ class CachePool:
     * ``n_rows`` physical rows (the vmapped batch extent of the jitted step),
     * ``cap_slots`` block-slots per eq. (5): ⌊(M_j − s_m·m_j)/s_c⌋ — a
       session holding ``k`` of this server's blocks consumes ``k`` slots.
+
+    ``layout="paged"`` carves the self-KV time axis into ``page_size``-token
+    pages (see the module docstring): the budget becomes ``cap_units =
+    cap_slots × max_pages`` page-units, a session through ``k`` blocks
+    holding ``p`` pages charges ``k·p`` units, and physical page arrays are
+    sized to the SAME byte budget (``cap_slots × max_pages / n_layers``
+    pages, clamped to what the rows could ever reference) — so both the
+    accounting and the free list enforce eq. (5), just page-granular.
     """
 
     def __init__(self, cfg: ModelConfig, kinds: Sequence[str], n_rows: int,
-                 max_len: int, cap_slots: int, enc_len: int = 0):
+                 max_len: int, cap_slots: int, enc_len: int = 0,
+                 layout: str = "slab", page_size: int = 0):
+        assert layout in ("slab", "paged"), layout
         self.cfg = cfg
         self.kinds = tuple(kinds)
         self.runs = kind_runs(self.kinds)
@@ -271,17 +438,65 @@ class CachePool:
         self.max_len = max_len
         self.enc_len = int(enc_len)
         self.cap_slots = int(cap_slots)
-        self.tree: Tuple[Dict, ...] = tuple(
-            new_state_pool_tree(cfg, kind, hi - lo, n_rows, max_len,
-                                self.enc_len)
-            for kind, lo, hi in self.runs)
+        self.layout = layout
+        if layout == "paged":
+            page_size = int(page_size)
+            if page_size < 1 or max_len % page_size != 0:
+                raise ValueError(
+                    f"page_size {page_size} must be >= 1 and divide "
+                    f"max_len {max_len} (keeps the paged time axis "
+                    "identical to the slab reference)")
+            self.page_size = page_size
+            self.max_pages = max_len // page_size
+            self.cap_units = self.cap_slots * self.max_pages
+            n_phys = max(1, min(
+                self.cap_units // max(1, self.n_layers),
+                n_rows * self.max_pages))
+            self.pages = PagePool(n_phys, n_rows, self.max_pages)
+            self.units_used = 0
+            self.sid_pages: Dict[int, int] = {}  # sid -> pages held
+            self.tree = tuple(
+                new_paged_pool_tree(cfg, kind, hi - lo, n_rows, max_len,
+                                    page_size, n_phys + 1, self.enc_len)
+                for kind, lo, hi in self.runs)
+        else:
+            self.page_size = 0
+            self.tree: Tuple[Dict, ...] = tuple(
+                new_state_pool_tree(cfg, kind, hi - lo, n_rows, max_len,
+                                    self.enc_len)
+                for kind, lo, hi in self.runs)
         self._free: List[int] = list(range(n_rows))
         self.rows: Dict[int, int] = {}  # sid -> row
         self.blocks: Dict[int, int] = {}  # sid -> k block-slots held
         self.slots_used = 0
 
     # -- admission ----------------------------------------------------------
-    def fits(self, sid: int, k_blocks: int) -> bool:
+    def pages_needed(self, n_tokens: int) -> int:
+        """Pages covering ``n_tokens`` cache positions (paged layout)."""
+        return pages_for(n_tokens, self.page_size)
+
+    def fits(self, sid: int, k_blocks: int, n_pages: int = 0,
+             worst_pages: Optional[int] = None) -> bool:
+        """No-overbooking check.  Paged layout: ``n_pages`` is the page
+        count to book now (ignored on re-entry — the resident pages are
+        shared across the session's hops) and ``worst_pages`` optionally
+        asserts solo-completability: the fully-grown session must fit this
+        server ALONE, so a preempted session can always eventually resume
+        (the deadlock-freedom guarantee preemption relies on)."""
+        if self.layout == "paged":
+            p = self.sid_pages.get(sid, 0) if sid in self.rows \
+                else int(n_pages)
+            k_total = self.blocks.get(sid, 0) + k_blocks
+            if worst_pages is not None:
+                if (k_total * int(worst_pages) > self.cap_units
+                        or int(worst_pages) > min(self.pages.n_pages,
+                                                  self.max_pages)):
+                    return False
+            if sid in self.rows:
+                return self.units_used + k_blocks * p <= self.cap_units
+            return (bool(self._free)
+                    and self.units_used + k_blocks * p <= self.cap_units
+                    and p <= self.pages.free_pages)
         if sid in self.rows:
             # re-entry (failover chain revisiting this server): no new row,
             # but the ADDITIONAL blocks still count against the budget
@@ -289,9 +504,30 @@ class CachePool:
         return bool(self._free) and (self.slots_used + k_blocks
                                      <= self.cap_slots)
 
-    def alloc(self, sid: int, k_blocks: int) -> int:
-        """Claim one row + ``k_blocks`` slots.  Raises if over budget — the
-        scheduler must check ``fits`` first (no-overbooking commitment)."""
+    def alloc(self, sid: int, k_blocks: int, n_pages: int = 0) -> int:
+        """Claim one row + ``k_blocks`` slots (slab) or one row +
+        ``n_pages`` pages charged at ``k_blocks × n_pages`` page-units
+        (paged).  Raises if over budget — the scheduler must check
+        ``fits`` first (no-overbooking commitment)."""
+        if self.layout == "paged":
+            p = self.sid_pages[sid] if sid in self.rows else int(n_pages)
+            if self.units_used + k_blocks * p > self.cap_units:
+                raise RuntimeError(
+                    f"page-unit overbooking: {self.units_used}+"
+                    f"{k_blocks}*{p} > {self.cap_units}")
+            if sid in self.rows:  # re-entry: charge the extra blocks
+                self.blocks[sid] += int(k_blocks)
+                self.units_used += int(k_blocks) * p
+                return self.rows[sid]
+            if not self._free:
+                raise RuntimeError("cache pool rows exhausted")
+            row = self._free.pop()
+            self.pages.grow_to(row, p)
+            self.rows[sid] = row
+            self.blocks[sid] = int(k_blocks)
+            self.sid_pages[sid] = p
+            self.units_used += int(k_blocks) * p
+            return row
         if self.slots_used + k_blocks > self.cap_slots:
             raise RuntimeError(
                 f"block-slot overbooking: {self.slots_used}+{k_blocks} > "
@@ -308,17 +544,62 @@ class CachePool:
         self.slots_used += int(k_blocks)
         return row
 
+    # -- page growth (paged layout) -----------------------------------------
+    def can_grow(self, sid: int, n_pages: int) -> bool:
+        """True iff ``sid`` can be extended to ``n_pages`` total pages
+        within both the page-unit budget and the physical free list."""
+        assert self.layout == "paged"
+        extra = int(n_pages) - self.sid_pages[sid]
+        if extra <= 0:
+            return True
+        return (self.units_used + self.blocks[sid] * extra <= self.cap_units
+                and self.pages.can_grow(self.rows[sid], int(n_pages)))
+
+    def grow_pages(self, sid: int, n_pages: int):
+        """Extend ``sid`` to ``n_pages`` total pages (decode growth).
+        Raises on overbooking — callers check ``can_grow`` first."""
+        assert self.layout == "paged"
+        extra = int(n_pages) - self.sid_pages[sid]
+        if extra <= 0:
+            return
+        if self.units_used + self.blocks[sid] * extra > self.cap_units:
+            raise RuntimeError(
+                f"page-unit overbooking on grow: {self.units_used}+"
+                f"{self.blocks[sid]}*{extra} > {self.cap_units}")
+        self.pages.grow_to(self.rows[sid], int(n_pages))
+        self.sid_pages[sid] = int(n_pages)
+        self.units_used += self.blocks[sid] * extra
+
     def release(self, sid: int):
         row = self.rows.pop(sid, None)
         if row is None:
             return
-        self.slots_used -= self.blocks.pop(sid, 0)
+        if self.layout == "paged":
+            self.units_used -= self.blocks.pop(sid, 0) * \
+                self.sid_pages.pop(sid, 0)
+            self.pages.free_row(row)
+        else:
+            self.slots_used -= self.blocks.pop(sid, 0)
         self._free.append(row)
         # stale row contents are never observable: a new occupant's prefill
         # overwrites [:prompt_len] (recurrent states entirely), decode
         # attention masks kv_pos <= pos, and cross-attention masks
         # kv_pos < enc_len — so no zeroing (a full pool copy per retirement)
-        # is needed.
+        # is needed.  The paged layout leans on the same invariant: freed
+        # pages re-enter the free list with stale contents, and a reader
+        # only ever sees a page through its own table entries at masked-in
+        # positions it has itself written.
+
+    def usage(self) -> Tuple[int, int]:
+        """(used, capacity) in the layout's accounting unit: block-slots
+        for slab, page-units (block-slots × pages) for paged."""
+        if self.layout == "paged":
+            return self.units_used, self.cap_units
+        return self.slots_used, self.cap_slots
+
+    def page_table(self) -> jnp.ndarray:
+        """The device copy of the shared page table (paged layout)."""
+        return jnp.asarray(self.pages.table)
 
     def n_sessions(self) -> int:
         return len(self.rows)
@@ -331,7 +612,9 @@ class CachePool:
         ranged update per leaf per run — a per-layer loop would copy the
         whole pool O(layers) times.  Self-KV leaves write [:length];
         cross-KV leaves write their own (encoder) length; recurrent state
-        leaves overwrite whole."""
+        leaves overwrite whole.  Paged layout: self-KV tokens scatter into
+        the row's physical pages (one ranged update per page — the serial
+        reference path, so a handful of dispatches is fine)."""
         assert len(entries) == hi_rel - lo_rel
         new_tree = list(self.tree)
         for r, (kind, rlo, rhi) in enumerate(self.runs):
@@ -344,8 +627,18 @@ class CachePool:
                 stacked = jnp.stack([e[key][0] for e in sub]).astype(
                     t[key].dtype)
                 if key in _SELF_KV_KEYS:
-                    t[key] = t[key].at[lo - rlo:hi - rlo, row,
-                                       :length].set(stacked[:, :length])
+                    if self.layout == "paged":
+                        X = t[key]
+                        pg = self.page_size
+                        for pi in range(self.pages_needed(length)):
+                            ppid = int(self.pages.table[row, pi])
+                            a, b = pi * pg, min(length, (pi + 1) * pg)
+                            X = X.at[lo - rlo:hi - rlo, ppid, :b - a].set(
+                                stacked[:, a:b])
+                        t[key] = X
+                    else:
+                        t[key] = t[key].at[lo - rlo:hi - rlo, row,
+                                           :length].set(stacked[:, :length])
                 elif key in _CROSS_KV_KEYS:
                     el = stacked.shape[1]
                     t[key] = t[key].at[lo - rlo:hi - rlo, row,
@@ -423,11 +716,12 @@ def _masked_ranged_write(cache, chunk, active, keys, lo, span):
     return out
 
 
-@functools.lru_cache(maxsize=None)
-def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...],
-                           backend: str = "xla"):
-    """Build THE jitted multi-session prefill step for a hosted block range,
-    shared per (cfg, per-layer kind tuple, compute backend).
+def _prefill_step_body(cfg: ModelConfig, kinds: Tuple[str, ...],
+                       backend: str):
+    """The UNJITTED multi-session prefill step body shared by
+    :func:`make_pool_prefill_step` (slab layout) and
+    :func:`make_paged_prefill_step` (which wraps it in the page
+    gather/scatter).
 
     pstep(run_params, shared_params, pool_trees, h, emb0, enc_rows,
           layer_active, layer_ids, offset, phase) -> (h, pool_trees)
@@ -590,10 +884,21 @@ def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...],
             new_trees[r] = new_tree
         return h, tuple(new_trees)
 
-    # pool trees donated: chunk writes update the pool in place (same
-    # aliasing contract as make_pool_decode_step — the caller rebinds its
-    # pool reference to the returned tree and never reads the old one)
-    return jax.jit(step, static_argnums=(8, 9), donate_argnums=(2,))
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...],
+                           backend: str = "xla"):
+    """THE jitted multi-session prefill step for a hosted block range,
+    shared per (cfg, per-layer kind tuple, compute backend) — see
+    :func:`_prefill_step_body` for the calling contract.
+
+    Pool trees donated: chunk writes update the pool in place (same
+    aliasing contract as make_pool_decode_step — the caller rebinds its
+    pool reference to the returned tree and never reads the old one)."""
+    return jax.jit(_prefill_step_body(cfg, kinds, backend),
+                   static_argnums=(8, 9), donate_argnums=(2,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -821,6 +1126,156 @@ def make_pool_round_step(cfg: ModelConfig, kinds: Tuple[str, ...],
         enc_len = encl_round[src]
         h_out, new_trees = body(run_params, shared_params, pool_trees, h,
                                 pos, emb0, enc_len, layer_active, layer_ids)
+        back = h_out[jnp.clip(row_of_slot, 0, n_rows - 1)]
+        keep = (row_of_slot >= 0)[:, None, None]
+        return jnp.where(keep, back, h_round), new_trees
+
+    return jax.jit(hop, donate_argnums=(2,))
+
+
+# ---------------------------------------------------------------------------
+# Paged step factories: gather pages -> run the slab body -> scatter back
+# ---------------------------------------------------------------------------
+#
+# The paged entry points do NOT reimplement any block math.  They gather
+# each row's pages into a scratch tree whose self-KV leaves have the exact
+# (layers, n_rows, max_len, ...) slab shape, run the UNCHANGED slab step
+# body on it, and scatter the written positions back into the physical
+# page arrays.  Bit-exactness vs the slab layout follows from two facts:
+# positions inside a session's pages carry the same values either way, and
+# positions outside (trash-page garbage where slab holds stale rows) are
+# only ever read through the causal / enc-len masks, whose -1e30 logits
+# underflow to EXACTLY zero probability in both layouts.  One trace per
+# server is preserved: the page table is a runtime int32 operand.
+
+
+def _gather_paged(runs, pool_trees, page_table, page_size: int):
+    """Expand physical pages into slab-shaped scratch: self-KV leaves
+    (L, n_phys, page, ...) -> (L, n_rows, max_pages*page, ...) via one
+    fancy-indexed gather per leaf; row-resident leaves pass through."""
+    n_rows, max_pages = page_table.shape
+    scratch = []
+    for r, _run in enumerate(runs):
+        t = dict(pool_trees[r])
+        for key in t:
+            if key in _SELF_KV_KEYS:
+                X = t[key]
+                g = X[:, page_table]  # (L, n_rows, max_pages, page, ...)
+                t[key] = g.reshape((X.shape[0], n_rows,
+                                    max_pages * page_size) + X.shape[3:])
+        scratch.append(t)
+    return tuple(scratch)
+
+
+def _scatter_paged(runs, pool_trees, scratch, page_table, page_size: int,
+                   pos=None):
+    """Fold the body's scratch updates back into the physical page arrays.
+
+    ``pos is None`` (prefill): every table entry writes back its page —
+    rows the body masked out write their own gathered values (a no-op).
+    ``pos`` (n_rows,) (decode): only the single page containing each row's
+    write position scatters back (a vmapped dynamic slice) — all other
+    pages are untouched by a decode step.  Unassigned entries target the
+    shared trash page 0; its content is unspecified but unobservable
+    (masked-in positions always live in assigned pages).  Row-resident
+    leaves take the body's output directly."""
+    n_rows, max_pages = page_table.shape
+    new_trees = list(pool_trees)
+    for r, _run in enumerate(runs):
+        t = dict(scratch[r])
+        for key in pool_trees[r]:
+            if key not in _SELF_KV_KEYS:
+                continue
+            X = pool_trees[r][key]  # (L, n_phys, page, ...) — donated
+            S = scratch[r][key]     # (L, n_rows, max_len, ...)
+            if pos is None:
+                val = S.reshape((S.shape[0], n_rows, max_pages, page_size)
+                                + S.shape[3:])
+                t[key] = X.at[:, page_table].set(val)
+            else:
+                pidx = jnp.clip(pos // page_size, 0, max_pages - 1)
+                ppid = jnp.take_along_axis(page_table, pidx[:, None],
+                                           axis=1)[:, 0]
+
+                def one(s_row, p):
+                    return jax.lax.dynamic_slice_in_dim(
+                        s_row, p * page_size, page_size, axis=1)
+
+                val = jax.vmap(one, in_axes=(1, 0), out_axes=1)(S, pidx)
+                t[key] = X.at[:, ppid].set(val)
+        new_trees[r] = t
+    return tuple(new_trees)
+
+
+@functools.lru_cache(maxsize=None)
+def make_paged_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...],
+                           backend: str = "xla", page_size: int = 16):
+    """Paged twin of :func:`make_pool_decode_step`: same contract with one
+    extra runtime operand, the int32 page table, inserted after the pool
+    trees.  The pool trees (arg 2) are donated — same aliasing contract."""
+    body = _decode_step_body(cfg, kinds, backend)
+    runs = kind_runs(kinds)
+
+    def step(run_params, shared_params, pool_trees, page_table, h, pos,
+             emb0, enc_len, layer_active, layer_ids):
+        scratch = _gather_paged(runs, pool_trees, page_table, page_size)
+        h_out, new_scratch = body(run_params, shared_params, scratch, h,
+                                  pos, emb0, enc_len, layer_active,
+                                  layer_ids)
+        return h_out, _scatter_paged(runs, pool_trees, new_scratch,
+                                     page_table, page_size, pos)
+
+    return jax.jit(step, donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def make_paged_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...],
+                            backend: str = "xla", page_size: int = 16):
+    """Paged twin of :func:`make_pool_prefill_step` (page table inserted
+    after the pool trees; ``offset``/``phase`` stay static)."""
+    body = _prefill_step_body(cfg, kinds, backend)
+    runs = kind_runs(kinds)
+
+    def step(run_params, shared_params, pool_trees, page_table, h, emb0,
+             enc_rows, layer_active, layer_ids, offset, phase):
+        scratch = _gather_paged(runs, pool_trees, page_table, page_size)
+        h_out, new_scratch = body(run_params, shared_params, scratch, h,
+                                  emb0, enc_rows, layer_active, layer_ids,
+                                  offset, phase)
+        return h_out, _scatter_paged(runs, pool_trees, new_scratch,
+                                     page_table, page_size)
+
+    return jax.jit(step, static_argnums=(9, 10), donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def make_paged_round_step(cfg: ModelConfig, kinds: Tuple[str, ...],
+                          backend: str = "xla", page_size: int = 16):
+    """Paged twin of :func:`make_pool_round_step`: the fused
+    gather+step+scatter hop over the round buffers, with the page
+    gather/scatter wrapped around the same decode body.  Rows outside the
+    hop scatter their own gathered page back (their ``pos`` placeholder is
+    arbitrary but the page it selects belongs to the row — a no-op write,
+    or the trash page when unassigned)."""
+    body = _decode_step_body(cfg, kinds, backend)
+    runs = kind_runs(kinds)
+
+    def hop(run_params, shared_params, pool_trees, page_table, h_round,
+            pos_round, emb0_round, encl_round, slot_of_row, row_of_slot,
+            layer_active, layer_ids):
+        W = h_round.shape[0]
+        n_rows = slot_of_row.shape[0]
+        src = jnp.clip(slot_of_row, 0, W - 1)
+        h = h_round[src]
+        pos = pos_round[src]
+        emb0 = emb0_round[jnp.clip(src, 0, emb0_round.shape[0] - 1)]
+        enc_len = encl_round[src]
+        scratch = _gather_paged(runs, pool_trees, page_table, page_size)
+        h_out, new_scratch = body(run_params, shared_params, scratch, h,
+                                  pos, emb0, enc_len, layer_active,
+                                  layer_ids)
+        new_trees = _scatter_paged(runs, pool_trees, new_scratch,
+                                   page_table, page_size, pos)
         back = h_out[jnp.clip(row_of_slot, 0, n_rows - 1)]
         keep = (row_of_slot >= 0)[:, None, None]
         return jnp.where(keep, back, h_round), new_trees

@@ -63,6 +63,9 @@ class ServedRequest:
     per_token_rest: float = 0.0  # decode-phase per-token time
     dropped: bool = False
     n_deferrals: int = 0
+    # paged cache layout: times the session was swapped out under page
+    # pressure mid-generation (0 on the slab layout / without pressure)
+    n_preemptions: int = 0
 
 
 @dataclass
@@ -77,6 +80,26 @@ class _Pending:
     sid: int = -1
     sid_ctl: int = -1
     deferrals: int = 0
+
+
+def _slot_scale(system: GeoServingSystem) -> float:
+    """Page-granular eq. (20) capacity multiplier for the controller.
+
+    The slab layout books a worst-case slot of ``s_c`` bytes
+    (``l_in + l_out`` tokens) per block, so the controller's
+    ⌊(M_j − s_m·m_j)/s_c⌋ capacity is exact (scale 1).  Paged admission
+    books only the PROMPT's pages — ``pages_for(l_in) · page_size``
+    tokens — and sessions grow page-by-page afterwards, preempting under
+    pressure; the controller's CG-BP reservation and eq. (20) waiting
+    times should see that admission footprint, not the worst case, so
+    ``s_c`` shrinks by ``total_tokens / prompt_page_tokens``."""
+    if getattr(system, "cache_layout", "slab") != "paged":
+        return 1.0
+    from repro.serving.kv_cache import pages_for
+    wl = system.problem.workload
+    booked_tokens = pages_for(min(int(wl.l_in), system.max_seq_len),
+                              system.page_size) * system.page_size
+    return wl.total_tokens / max(1, booked_tokens)
 
 
 class ContinuousBatchingScheduler:
@@ -94,7 +117,8 @@ class ContinuousBatchingScheduler:
                  arrival_rate: float = 0.1):
         self.system = system
         self.controller = OnlineBPRR(system.problem, R=R,
-                                     arrival_rate=arrival_rate)
+                                     arrival_rate=arrival_rate,
+                                     slot_scale=_slot_scale(system))
         self._events: List[Tuple[float, int, int, int]] = []  # (t,prio,seq,i)
         self._seq = itertools.count()
         self._requests: List[_Pending] = []
@@ -228,8 +252,11 @@ class ContinuousBatchingScheduler:
         req = self._requests[idx]
         sess = self.system.sessions[req.sid]
         # continuous batching: co-resident sessions share decode rounds until
-        # the ending session has produced all its tokens
-        while sess.state == "active" and sess.n_generated < sess.n_new:
+        # the ending session has produced all its tokens.  A paged-layout
+        # session may sit swapped out ("preempted") between rounds — keep
+        # driving rounds; the engine's resume queue brings it back.
+        while (sess.state in ("active", "preempted")
+               and sess.n_generated < sess.n_new):
             self.system.decode_round()
         done = self.system.retire_session(req.sid)
         self.controller.finish(req.sid_ctl)
@@ -248,7 +275,8 @@ class ContinuousBatchingScheduler:
                 total=wait + service,
                 tokens=np.asarray(done.tokens), wait=wait,
                 per_token_rest=done.per_token_time,
-                n_deferrals=req.deferrals)
+                n_deferrals=req.deferrals,
+                n_preemptions=done.n_preemptions)
         # re-admission: retry deferred sessions in FIFO order; a client whose
         # head-of-line request stays deferred keeps its later ones queued.
         # Admission goes one session at a time (exact FIFO semantics), but

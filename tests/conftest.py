@@ -10,10 +10,20 @@ search.  With real hypothesis installed the shim is inert.
 """
 from __future__ import annotations
 
+import os
 import sys
 
 try:  # pragma: no cover - exercised only when hypothesis is installed
     import hypothesis  # noqa: F401
+
+    # bounded CI profile: the property suites cap their example budget so
+    # the engine-bench-smoke job stays fast (select with
+    # HYPOTHESIS_PROFILE=ci; the default profile is untouched locally)
+    hypothesis.settings.register_profile(
+        "ci", max_examples=int(os.environ.get("REPRO_CI_EXAMPLES", "20")),
+        deadline=None)
+    if os.environ.get("HYPOTHESIS_PROFILE"):
+        hypothesis.settings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
 except ImportError:  # build the minimal fallback
     import random
     import types
@@ -54,6 +64,9 @@ except ImportError:  # build the minimal fallback
             # signature (the drawn values are not fixtures).
             def run():
                 n = getattr(run, "_shim_max_examples", _DEFAULT_EXAMPLES)
+                if os.environ.get("HYPOTHESIS_PROFILE") == "ci":
+                    # mirror the real-hypothesis "ci" profile's bound
+                    n = min(n, int(os.environ.get("REPRO_CI_EXAMPLES", "20")))
                 rng = random.Random(0xB9A11)
                 for _ in range(n):
                     drawn = tuple(s.draw(rng) for s in strategies)

@@ -30,7 +30,8 @@ def _params_for(cfg):
     return _PARAMS_CACHE[cfg.name]
 
 
-def _build(arch, decode_mode, n_servers=2, max_new=4):
+def _build(arch, decode_mode, n_servers=2, max_new=4, cache_layout="slab",
+           page_size=None):
     cfg = get_reduced_config(arch)
     params = _params_for(cfg)
     llm = LLMSpec("toy", cfg.n_layers, block_bytes=100.0,
@@ -44,8 +45,19 @@ def _build(arch, decode_mode, n_servers=2, max_new=4):
                    workload=Workload(4, max_new))
     system = GeoServingSystem(cfg, params, prob, algorithm="proposed", R=2,
                               max_new_tokens=max_new, max_sessions=4,
-                              decode_mode=decode_mode)
+                              decode_mode=decode_mode,
+                              cache_layout=cache_layout, page_size=page_size)
     return cfg, system
+
+
+# one scenario per state family: decoder / recurrent / hybrid / enc-dec —
+# shared by the fused-vs-serial and the paged-vs-slab parity matrices
+FAMILY_SCENARIOS = [
+    ("llama3_2_1b", (4, 6, 5), None),       # decoder (mixed positions)
+    ("rwkv6_7b", (4, 6, 4), None),          # recurrent pools
+    ("zamba2_7b", (4, 6), None),            # hybrid (emb0 threading)
+    ("seamless_m4t_large_v2", (4, 6, 5), (5, 8, 5)),  # enc-dec (cross-KV)
+]
 
 
 def _jobs_for(cfg, lengths, enc_lens=None, seed=0):
@@ -96,12 +108,7 @@ def _serve(system, jobs, n_new, sampling=None):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("arch,lengths,enc_lens", [
-    ("llama3_2_1b", (4, 6, 5), None),       # decoder (mixed positions)
-    ("rwkv6_7b", (4, 6, 4), None),          # recurrent pools
-    ("zamba2_7b", (4, 6), None),            # hybrid (emb0 threading)
-    ("seamless_m4t_large_v2", (4, 6, 5), (5, 8, 5)),  # enc-dec (cross-KV)
-])
+@pytest.mark.parametrize("arch,lengths,enc_lens", FAMILY_SCENARIOS)
 def test_fused_matches_serial_reference(arch, lengths, enc_lens):
     """Token streams and virtual-clock accounting must be IDENTICAL between
     the device-resident rounds and the pre-refactor per-session reference,
@@ -119,6 +126,37 @@ def test_fused_matches_serial_reference(arch, lengths, enc_lens):
         assert len(hf) == len(hs) == 4
         for a, b in zip(hf, hs):
             np.testing.assert_allclose(a, b, **LOGIT_TOL)
+
+
+# ---------------------------------------------------------------------------
+# Paged vs slab layout: the exact-reference-twin contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,lengths,enc_lens", FAMILY_SCENARIOS)
+@pytest.mark.parametrize("mode", ["fused", "serial"])
+def test_paged_matches_slab(arch, lengths, enc_lens, mode):
+    """cache_layout="paged" must be BIT-exact against the slab reference —
+    tokens, logits, and the virtual clock — for every state family, both
+    decode modes, grouped and solo.  The paged step only re-indexes the
+    self-KV time axis through the page table around the UNCHANGED step
+    body, so any divergence is an aliasing/indexing bug, not float noise."""
+    results = {}
+    for layout in ("slab", "paged"):
+        cfg, system = _build(arch, mode, cache_layout=layout, page_size=2)
+        jobs = _jobs_for(cfg, lengths, enc_lens=enc_lens)
+        grouped = _serve(system, jobs, n_new=4)
+        solo = [_serve(system, [job], n_new=4) for job in jobs]
+        results[layout] = (grouped, solo)
+    (toks_s, hist_s, vt_s), solo_s = results["slab"]
+    (toks_p, hist_p, vt_p), solo_p = results["paged"]
+    assert toks_p == toks_s, f"{arch}/{mode}: paged tokens diverge"
+    assert vt_p == vt_s, f"{arch}/{mode}: paged virtual clock diverges"
+    for hp, hs in zip(hist_p, hist_s):
+        for a, b in zip(hp, hs):
+            np.testing.assert_array_equal(a, b)  # bit-for-bit
+    for (tp, _, vp), (ts, _, vs) in zip(solo_p, solo_s):
+        assert tp == ts and vp == vs, f"{arch}/{mode}: solo diverges"
 
 
 def test_fused_matches_serial_stochastic_sampling():
