@@ -290,6 +290,71 @@ def decode_throughput(n_servers: int = 2, n_sessions: int = 8,
             "n_servers": n_servers, "n_sessions": n_sessions}
 
 
+def shard_decode_throughput(n_sessions: int = 8, n_rounds: int = 4,
+                            warm: int = 2, mesh_shape=(1, 1)):
+    """Decode throughput of DEVICE-GROUP servers (mesh-sharded pooled
+    steps, docs/serving.md "Device-group servers") against the mesh=None
+    twin — same cohort, same rounds, token parity asserted at measure
+    time.  Defaults to a 1-device mesh so the row runs on any host (the
+    sharded-parity CI lane re-proves the multi-device matrix); also
+    records the step-cost-calibrated τ (``launch.costs.tau_from_step_cost``)
+    that ``GeoServingSystem.calibrated_problem`` folds back into eq. (1)."""
+    import time
+
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.core import (LLMSpec, Problem, ServerSpec, Workload,
+                            shortest_path_route)
+    from repro.launch.mesh import compat_make_mesh
+    from repro.models import init_params
+    from repro.serving import GeoServingSystem
+
+    L = 8
+    lw = Workload(4, warm + n_rounds + 2)
+    llm = LLMSpec("shard", L, block_bytes=50.0, cache_bytes_per_token=0.5)
+    servers = [ServerSpec(j, 2000.0, 0.004, tau_prefill_base=0.002,
+                          tau_prefill_per_token=0.0005) for j in range(2)]
+    rtt = np.full((1, 2), 0.01)
+    problem = Problem(llm, servers, 1, rtt, 3 * rtt, workload=lw)
+    cfg = get_reduced_config("llama3_2_1b").replace(n_layers=L)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, size=lw.l_in)
+               for _ in range(n_sessions)]
+
+    mesh = compat_make_mesh(mesh_shape, ("data", "model"))
+    out, toks, tau_cal = {}, {}, float("nan")
+    for tag, m in (("twin", None), ("sharded", mesh)):
+        system = GeoServingSystem(cfg, params, problem,
+                                  algorithm="proposed", R=n_sessions,
+                                  max_new_tokens=lw.l_out,
+                                  max_sessions=n_sessions, mesh=m)
+        sids = []
+        for p in prompts:
+            route, _ = shortest_path_route(problem,
+                                           system.alive_placement(), 0)
+            sids.append(system.create_session(p, 0, route, lw.l_out))
+        assert len(system.try_admit_sessions(sids)) == n_sessions
+        system.drain_prefill()
+        for _ in range(warm):
+            system.decode_round(sids)
+        t0 = time.perf_counter()
+        for _ in range(n_rounds):
+            system.decode_round(sids)
+        dt = time.perf_counter() - t0
+        out[tag] = n_sessions * n_rounds / dt
+        toks[tag] = [list(system.sessions[s].tokens) for s in sids]
+        if tag == "sharded":
+            tau_cal = float(min(system.calibrate_taus().values()))
+    assert toks["sharded"] == toks["twin"], \
+        "device-group decode must emit the twin's token stream"
+    return {"sharded_tok_s": out["sharded"], "twin_tok_s": out["twin"],
+            "ratio": out["sharded"] / out["twin"], "token_parity": 1,
+            "tau_calibrated_s": tau_cal,
+            "mesh_devices": int(np.prod(mesh_shape))}
+
+
 def _one_server_problem(slab_cap: int, l_out: int = 60):
     """One server hosting the whole 8-block stack with cache memory for
     EXACTLY ``slab_cap`` worst-case sessions — the fixed-width co-residency
@@ -544,6 +609,16 @@ def run(full: bool = False, smoke: bool = False):
              f"dispatches/round={row['fused_dispatches_per_round']:.0f}")
         _record(name, **row)
 
+    # device-group serving: mesh-sharded pooled steps vs the mesh=None
+    # twin (token parity asserted inside), plus the step-cost-calibrated τ
+    row, us = timed(shard_decode_throughput, n_rounds=2 if smoke else 4)
+    emit("shard.decode.tput", us,
+         f"sharded={row['sharded_tok_s']:.0f} tok/s "
+         f"twin={row['twin_tok_s']:.0f} tok/s ratio={row['ratio']:.2f}x "
+         f"tau_cal={row['tau_calibrated_s']*1e6:.3f}us "
+         f"({row['mesh_devices']} device(s))")
+    _record("shard.decode.tput", **row)
+
     # paged cache pools: co-residency headline (the same topology's
     # worst-case budget caps slab at 1/4 of the cohort) + the
     # oversubscription-with-preemption scenario
@@ -609,6 +684,8 @@ _REQUIRED_ROWS = {
     "prefill.tput.R4": ("serial_tok_s", "batched_tok_s", "speedup"),
     "decode.tput.R8": ("serial_tok_s", "fused_tok_s", "speedup"),
     "decode.tput.R32": ("serial_tok_s", "fused_tok_s", "speedup"),
+    "shard.decode.tput": ("sharded_tok_s", "twin_tok_s", "ratio",
+                          "token_parity", "tau_calibrated_s"),
     "decode.tput.R128": ("paged_tok_s", "slab_coresident",
                          "paged_coresident", "coresidency_ratio"),
     "oversub": ("n_sessions", "slab_admitted", "paged_admitted",
@@ -642,6 +719,11 @@ def check_json(path: str) -> int:
     assert data["decode.tput.R32"]["speedup"] >= 2.0
     r128 = data["decode.tput.R128"]
     assert r128["coresidency_ratio"] >= 4.0, r128
+    # device-group serving: parity is pass/fail (asserted when measured),
+    # the calibrated τ must be a usable eq. (1) input
+    shard = data["shard.decode.tput"]
+    assert shard["token_parity"] == 1, shard
+    assert shard["tau_calibrated_s"] > 0 and shard["ratio"] > 0, shard
     ov = data["oversub"]
     assert ov["slab_admitted"] < ov["n_sessions"], ov
     assert ov["completed"] == ov["n_sessions"] == ov["paged_admitted"], ov

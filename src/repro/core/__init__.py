@@ -9,7 +9,8 @@ from repro.core.perf_model import (BLOOM_PETALS, GB, MB, LLMSpec, Placement,
                                    Problem, Route, ServerSpec, Workload,
                                    route_avg_per_token_time,
                                    route_per_token_time, route_prefill_time,
-                                   route_total_time, server_memory_use)
+                                   route_total_time, server_memory_use,
+                                   with_server_taus)
 from repro.core.placement import (auto_R, capacity, cg_bp, cg_feasible_R,
                                   conservative_m, max_feasible_R,
                                   optimized_number_bp, optimized_order_bp,
@@ -31,5 +32,6 @@ __all__ = [
     "optimized_order_bp", "petals_bp", "petals_m", "petals_route",
     "route_avg_per_token_time", "route_blocks", "route_feasible",
     "route_per_token_time", "route_prefill_time", "route_total_time",
-    "server_memory_use", "shortest_path_route", "ws_rr",
+    "server_memory_use", "shortest_path_route", "with_server_taus",
+    "ws_rr",
 ]

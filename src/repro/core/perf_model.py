@@ -15,6 +15,7 @@ caches — DESIGN.md §4).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -197,6 +198,21 @@ class Problem:
     def t_star(self) -> np.ndarray:
         """t_*j = max_c t_cj (worst-case client RTT per server)."""
         return self.rtt_token.max(axis=0)
+
+
+def with_server_taus(problem: Problem, taus: Dict[int, float]) -> Problem:
+    """A copy of ``problem`` with per-server τ replaced for the given sids.
+
+    The calibration entry point for device-group servers: the engine
+    measures each server's (sharded) pooled decode step via
+    ``launch.costs.tau_from_step_cost`` and this folds the result back into
+    the perf model — eq. (1)'s per-token times, eq. (20)'s waiting terms,
+    and the placement MILP all read τ from here.  Servers absent from
+    ``taus`` keep their spec'd value."""
+    servers = [dataclasses.replace(s, tau=float(taus[s.sid]))
+               if s.sid in taus else s for s in problem.servers]
+    return Problem(problem.llm, servers, problem.n_clients,
+                   problem.rtt_token, problem.rtt_prefill, problem.workload)
 
 
 # ---------------------------------------------------------------------------

@@ -159,6 +159,20 @@ HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link (assignment constant)
 
 
+def tau_from_step_cost(cost: CostSummary, n_chips: int, m_blocks: int,
+                       n_rows: int) -> float:
+    """Per-block per-token decode τ (s) from one pooled decode step's cost.
+
+    The step advances every pool row one token through all ``m_blocks``
+    hosted blocks, so the roofline bound of ONE dispatch amortises over
+    ``m_blocks x n_rows`` (block, token) pairs — exactly the τ the paper's
+    eq. (1) multiplies back up.  With a sharded step the cost analysis is
+    per-device after SPMD partitioning, so a TP/EP device group's speedup
+    (and its collective bytes) land in τ automatically."""
+    terms = roofline_terms(cost, n_chips)
+    return terms["bound_s"] / max(1, int(m_blocks) * int(n_rows))
+
+
 def roofline_terms(cost: CostSummary, n_chips: int,
                    mem_floor_bytes: float = 0.0) -> Dict:
     """cost_analysis numbers are PER-DEVICE after SPMD partitioning, so the

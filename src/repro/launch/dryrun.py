@@ -1,9 +1,13 @@
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 MUST set the fake-device flag before ANY other import (jax locks the device
-count at first init)."""
+count at first init).  Merged into — not overwriting — any XLA_FLAGS the
+user already exported (repro.launch.xla_flags is stdlib-only)."""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.xla_flags import force_host_device_count
+
+force_host_device_count(os.environ, 512)
 
 import argparse  # noqa: E402
 import gc  # noqa: E402

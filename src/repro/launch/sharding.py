@@ -253,3 +253,95 @@ def cache_shardings(cfg: ModelConfig, sh: ShardingCtx, cache_shape_tree):
 
 def param_shardings(cfg: ModelConfig, sh: ShardingCtx, axes_tree):
     return sh.param_shardings(axes_tree)
+
+
+# ---------------------------------------------------------------------------
+# Serving-path rules: a geo server as a TP/EP device group
+# ---------------------------------------------------------------------------
+#
+# The pooled serving steps (repro/serving/kv_cache.py) are jitted per
+# (cfg, kinds, backend) and lru-cached, so everything that parameterises a
+# sharded trace must be hashable: the mesh already is, and ``freeze_rules``
+# turns a rules dict into a canonical tuple-of-pairs key.  ``guarded_spec``
+# is the single choke point every serving PartitionSpec goes through — it
+# drops (replicates) any axis whose mesh extent does not divide the leaf
+# dimension, so pool rows, page counts, and round widths chosen by the
+# engine can never produce an invalid sharding.
+
+
+def serving_rules(cfg: ModelConfig, mesh, n_rows: int,
+                  max_len: int) -> Dict[str, object]:
+    """Logical-axis rules for the serving hot path: a decode-shaped cell
+    whose "batch" is the cache pool's row count.  Sequence-activation
+    sharding is forced off — pooled steps vmap one token per row, there is
+    no sequence dimension to split."""
+    shape = ShapeSpec("serving_decode", max(1, int(max_len)),
+                      max(1, int(n_rows)), "decode")
+    rules = make_rules(cfg, mesh, shape)
+    rules["seq_act"] = None
+    rules["attn_seq_q"] = None
+    return rules
+
+
+def freeze_rules(rules: Optional[Dict[str, object]]):
+    """Canonical hashable form of a rules dict (for lru_cache keys)."""
+    if rules is None:
+        return None
+    return tuple(sorted(rules.items()))
+
+
+def thaw_rules(frozen) -> Dict[str, object]:
+    return {} if frozen is None else dict(frozen)
+
+
+def guarded_spec(axes, shape, rules: Dict[str, object], mesh) -> P:
+    """PartitionSpec for one leaf: logical axes -> mesh axes with a per-dim
+    divisibility guard.  Any dim whose assigned mesh extent does not divide
+    it falls back to replication, and a mesh axis is never used twice."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
+    spec = []
+    for dim, logical in zip(shape, axes):
+        mesh_ax = rules.get(logical) if logical else None
+        if mesh_ax is None:
+            spec.append(None)
+            continue
+        ax_tuple = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+        ax_tuple = tuple(a for a in ax_tuple
+                         if a is not None and a not in used)
+        extent = int(np.prod([sizes.get(a, 1) for a in ax_tuple])) \
+            if ax_tuple else 1
+        if not ax_tuple or not _div(int(dim), extent):
+            spec.append(None)
+            continue
+        used.update(ax_tuple)
+        spec.append(ax_tuple if len(ax_tuple) > 1 else ax_tuple[0])
+    return P(*spec)
+
+
+def pool_tree_shardings(mesh, rules: Dict[str, object], pool_trees):
+    """NamedSharding tuple-of-trees for a CachePool's pool trees (slab or
+    paged layout): per-leaf logical axes via :func:`cache_axes_for`, mapped
+    through :func:`guarded_spec`.  Works on arrays or ShapeDtypeStructs."""
+    rules = dict(rules)  # cache_axes_for may add the kv_time_noverlap rule
+
+    def one(path, leaf):
+        name = next((p.key for p in reversed(path) if hasattr(p, "key")),
+                    None)
+        axes = cache_axes_for(name, leaf.ndim, rules)
+        return NamedSharding(mesh, guarded_spec(axes, leaf.shape, rules,
+                                                mesh))
+
+    return jax.tree_util.tree_map_with_path(one, pool_trees)
+
+
+def block_param_shardings(mesh, rules: Dict[str, object], axes_tree,
+                          param_tree):
+    """NamedSharding tree for a server's stacked block params: the logical
+    axes tree from ``models.model.block_param_axes`` mapped through
+    :func:`guarded_spec` against the actual leaf shapes."""
+    return jax.tree.map(
+        lambda ax, p: NamedSharding(
+            mesh, guarded_spec(ax, p.shape, rules, mesh)),
+        axes_tree, param_tree,
+        is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,43 @@
+"""XLA_FLAGS composition (stdlib-only: importable before jax).
+
+The dry-run and the forced-multi-device test lanes need
+``--xla_force_host_platform_device_count=N`` set BEFORE jax initialises —
+but overwriting ``os.environ["XLA_FLAGS"]`` wholesale silently drops
+whatever flags the user (or a CI lane) already exported.  ``merge_xla_flags``
+appends instead: existing flags are preserved verbatim, and a flag that is
+already present (by name) wins over the requested one — an explicit user
+setting is never clobbered.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+def _flag_name(flag: str) -> str:
+    return flag.split("=", 1)[0]
+
+
+def merge_xla_flags(existing: Optional[str], *new_flags: str) -> str:
+    """Merge ``new_flags`` into an existing ``XLA_FLAGS`` string.
+
+    * existing flags keep their order and values,
+    * a new flag whose name already appears is DROPPED (user wins),
+    * remaining new flags are appended in the given order.
+    """
+    current = (existing or "").split()
+    present = {_flag_name(f) for f in current}
+    merged = current + [f for f in new_flags
+                        if _flag_name(f) not in present]
+    return " ".join(merged)
+
+
+def force_host_device_count(environ, n: int) -> str:
+    """Set ``--xla_force_host_platform_device_count=n`` in ``environ``
+    (a mutable mapping, normally ``os.environ``) without clobbering any
+    flags already there.  Returns the merged string.  If the user already
+    forced a device count, theirs is kept."""
+    merged = merge_xla_flags(
+        environ.get("XLA_FLAGS"),
+        f"--xla_force_host_platform_device_count={int(n)}")
+    environ["XLA_FLAGS"] = merged
+    return merged

@@ -196,6 +196,28 @@ def block_param_range(params, cfg: ModelConfig, kind: str, lo: int, hi: int):
         "mamba_shared, enc, dec")
 
 
+def block_param_axes(cfg: ModelConfig, kind: str):
+    """Logical-axes tree matching :func:`block_param_range`'s output
+    structure for one kind (slicing a layer range keeps every leaf's axes,
+    so no range argument is needed).  Used to derive per-server
+    NamedShardings when a geo server is a TP/EP device group."""
+    axes = param_axes(cfg)["segments"]
+    if kind in ("decoder", "rwkv"):
+        return axes["blocks"]
+    if kind in ("mamba", "mamba_shared"):
+        # hybrid_mamba_stack merges the mega segment's (n_mega, per) leading
+        # dims into one block axis: drop one of the two stacked "layers"
+        mega = axes.get("mega", {}).get("mamba")
+        if mega is not None:
+            return jax.tree.map(lambda a: a[1:], mega, is_leaf=_tuple_leaf)
+        return axes["tail"]
+    if kind == "enc":
+        return axes["enc"]
+    if kind == "dec":
+        return axes["dec"]
+    raise ValueError(kind)
+
+
 # ---------------------------------------------------------------------------
 # Segment scan bodies (shared by forward passes AND the dry-run's exact
 # scan-cost correction, which lowers each body separately — DESIGN.md §6)

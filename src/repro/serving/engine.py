@@ -57,6 +57,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.perf_model import Placement, Problem, Route
@@ -159,7 +160,7 @@ class BlockServer:
                  *, n_rows: int, max_len: int, cap_slots: int,
                  enc_len: int = 0, slowdown: float = 1.0,
                  backend: str = "xla", cache_layout: str = "slab",
-                 page_size: int = 0):
+                 page_size: int = 0, mesh=None, mesh_rules=None):
         self.sid = sid
         self.backend = backend
         self.cfg = cfg
@@ -180,18 +181,52 @@ class BlockServer:
                               page_size=page_size)
         self.alive = True
         self.slowdown = slowdown
+        # Optional TP/EP device group: this server's params + pool live
+        # sharded over `mesh` per the logical-axis rules, and its pooled
+        # steps constrain every operand accordingly (docs/serving.md
+        # "Device-group servers").  mesh=None is the single-device twin.
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.launch.sharding import (
+                block_param_shardings, freeze_rules, pool_tree_shardings,
+                serving_rules, thaw_rules)
+            from repro.models.model import block_param_axes
+
+            rules = (thaw_rules(mesh_rules) if mesh_rules is not None
+                     else serving_rules(cfg, mesh, n_rows, max_len))
+            self.mesh_rules = rules
+            frozen = freeze_rules(rules)
+            self.run_params = tuple(
+                jax.device_put(p, block_param_shardings(
+                    mesh, rules, block_param_axes(cfg, kind), p))
+                for p, (kind, _lo, _hi) in zip(self.run_params, self.runs))
+            if self.shared is not None:
+                self.shared = jax.device_put(
+                    self.shared, jax.tree.map(
+                        lambda _: NamedSharding(mesh, P()), self.shared))
+            self.pool.tree = jax.device_put(
+                self.pool.tree,
+                pool_tree_shardings(mesh, rules, self.pool.tree))
+        else:
+            self.mesh_rules = None
+            frozen = None
         if cache_layout == "paged":
             self._step = make_paged_decode_step(cfg, self.kinds, backend,
-                                                page_size)
+                                                page_size, mesh, frozen)
             self._round_step = make_paged_round_step(cfg, self.kinds,
-                                                     backend, page_size)
+                                                     backend, page_size,
+                                                     mesh, frozen)
             self._prefill_pool = make_paged_prefill_step(cfg, self.kinds,
-                                                         backend, page_size)
+                                                         backend, page_size,
+                                                         mesh, frozen)
         else:
-            self._step = make_pool_decode_step(cfg, self.kinds, backend)
-            self._round_step = make_pool_round_step(cfg, self.kinds, backend)
+            self._step = make_pool_decode_step(cfg, self.kinds, backend,
+                                               mesh, frozen)
+            self._round_step = make_pool_round_step(cfg, self.kinds,
+                                                    backend, mesh, frozen)
             self._prefill_pool = make_pool_prefill_step(cfg, self.kinds,
-                                                        backend)
+                                                        backend, mesh,
+                                                        frozen)
         self._prefill_blocks = {k: make_prefill_block(cfg, k, backend)
                                 for k in set(self.kinds)}
         # constant-shape filler for unused emb0/enc_rows step inputs, so the
@@ -337,6 +372,40 @@ class BlockServer:
                                  emb0_rows, encl_rows)
         return h_out[row][None]
 
+    # -- cost introspection -------------------------------------------------
+    def decode_step_cost(self):
+        """CostSummary of THE pooled decode step this server dispatches per
+        round, from an ahead-of-time lowering+compile on abstract operands
+        (no execution).  With a mesh the numbers are per-device after SPMD
+        partitioning — the basis for the device-group τ calibration
+        (``GeoServingSystem.calibrate_taus``)."""
+        from repro.launch import costs as C
+
+        def abst(x):
+            return jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(
+                    a.shape, a.dtype, sharding=getattr(a, "sharding", None)),
+                x)
+
+        N = self.pool.n_rows
+        d = self.cfg.d_model
+        act = jnp.dtype(getattr(self.cfg, "act_dtype", "float32"))
+        h = jax.ShapeDtypeStruct((N, 1, d), act)
+        pos = jax.ShapeDtypeStruct((N,), jnp.int32)
+        emb0 = (jax.ShapeDtypeStruct((N, 1, d), act)
+                if any(s.needs_emb0 for s in self.specs)
+                else abst(self._dummy))
+        encl = jax.ShapeDtypeStruct((N,), jnp.int32)
+        la = jax.ShapeDtypeStruct((self.m, N), jnp.bool_)
+        lids = abst(self.layer_ids)
+        args = (abst(self.run_params), abst(self.shared),
+                abst(self.pool.tree))
+        if self.cache_layout == "paged":
+            args += (abst(self.pool.page_table()),)
+        args += (h, pos, emb0, encl, la, lids)
+        compiled = self._step.lower(*args).compile()
+        return C.summarize_compiled(compiled)
+
 
 @dataclass
 class _PrefillGroup:
@@ -424,7 +493,8 @@ class GeoServingSystem:
                  decode_mode: str = "fused",
                  backend: str = "xla",
                  cache_layout: str = "slab",
-                 page_size: Optional[int] = None):
+                 page_size: Optional[int] = None,
+                 mesh=None, mesh_rules=None):
         from repro.kernels.runtime import resolve_backend
 
         assert problem.L == cfg.n_layers
@@ -435,6 +505,16 @@ class GeoServingSystem:
         self.cfg = cfg
         self.params = params
         self.problem = problem
+        # Optional device-group serving: every BlockServer becomes one
+        # TP/EP group over `mesh` (placement then allocates device groups,
+        # not devices).  `mesh_rules` overrides the derived logical-axis
+        # rules (see launch.sharding.serving_rules); accepted as a dict or
+        # a frozen tuple-of-pairs.
+        self.mesh = mesh
+        if mesh_rules is not None and not isinstance(mesh_rules, tuple):
+            from repro.launch.sharding import freeze_rules
+            mesh_rules = freeze_rules(dict(mesh_rules))
+        self.mesh_rules = mesh_rules
         self.algorithm = algorithm
         self.max_new_tokens = max_new_tokens
         self.max_sessions = int(max_sessions)
@@ -533,7 +613,8 @@ class GeoServingSystem:
                 max_len=self.max_seq_len, cap_slots=cap,
                 enc_len=self.max_enc_len if self._is_enc_dec else 0,
                 backend=self.backend, cache_layout=self.cache_layout,
-                page_size=self.page_size)
+                page_size=self.page_size, mesh=self.mesh,
+                mesh_rules=self.mesh_rules)
 
     def alive_placement(self) -> Placement:
         a = np.array(self.placement.a)
@@ -544,6 +625,37 @@ class GeoServingSystem:
             if j not in self.servers:
                 m[j] = 0
         return Placement(a=a, m=m)
+
+    # ------------------------------------------------------------------
+    # τ calibration from the (sharded) pooled step
+    # ------------------------------------------------------------------
+    def calibrate_taus(self) -> Dict[int, float]:
+        """Per-server τ (per-block per-token decode seconds, eq. (1))
+        derived from each server's ACTUAL pooled decode step: AOT
+        lowering + compile, ``launch.costs`` roofline over the per-device
+        cost analysis.  With a mesh, the step is the SPMD-partitioned
+        device-group program, so TP/EP speedups (and their collective
+        costs) flow straight into the perf model the placement and the
+        virtual clock consume."""
+        from repro.launch import costs as C
+
+        n_chips = int(self.mesh.devices.size) if self.mesh is not None else 1
+        taus = {}
+        for j, srv in self.servers.items():
+            cost = srv.decode_step_cost()
+            taus[j] = C.tau_from_step_cost(cost, n_chips, srv.m,
+                                           srv.pool.n_rows)
+        return taus
+
+    def calibrated_problem(self) -> Problem:
+        """A copy of ``self.problem`` whose server τs come from
+        :meth:`calibrate_taus` — feed it back into placement / the
+        simulator.  The live engine's virtual clock keeps the original
+        problem: swapping τ mid-flight would break the mesh-vs-reference
+        parity contract."""
+        from repro.core.perf_model import with_server_taus
+
+        return with_server_taus(self.problem, self.calibrate_taus())
 
     # ------------------------------------------------------------------
     # Session lifecycle (continuous batching API)

@@ -887,18 +887,76 @@ def _prefill_step_body(cfg: ModelConfig, kinds: Tuple[str, ...],
     return step
 
 
+def _mesh_constraints(mesh, frozen_rules):
+    """Sharding-constraint closures for a TP/EP device-group server.
+
+    Returns ``(pools, rows, repl)``:
+
+    * ``pools(trees)`` constrains a pool-tree tuple (slab or paged) to its
+      :func:`repro.launch.sharding.pool_tree_shardings` layout,
+    * ``rows(x, *logical)`` constrains one activation/vector by logical
+      axes through the divisibility-guarded spec,
+    * ``repl(x)`` pins per-round index vectors / masks replicated.
+
+    Only built on the ``mesh is not None`` factory paths — the
+    ``mesh=None`` twin never routes through this module's sharding code.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.sharding import (guarded_spec, pool_tree_shardings,
+                                       thaw_rules)
+
+    rules = thaw_rules(frozen_rules)
+
+    def pools(trees):
+        sh = pool_tree_shardings(mesh, rules, trees)
+        return jax.tree.map(jax.lax.with_sharding_constraint, trees, sh)
+
+    def rows(x, *logical):
+        spec = guarded_spec(logical, x.shape, rules, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def repl(x):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
+
+    return pools, rows, repl
+
+
 @functools.lru_cache(maxsize=None)
 def make_pool_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...],
-                           backend: str = "xla"):
+                           backend: str = "xla", mesh=None, rules=None):
     """THE jitted multi-session prefill step for a hosted block range,
-    shared per (cfg, per-layer kind tuple, compute backend) — see
+    shared per (cfg, per-layer kind tuple, compute backend[, mesh]) — see
     :func:`_prefill_step_body` for the calling contract.
 
     Pool trees donated: chunk writes update the pool in place (same
     aliasing contract as make_pool_decode_step — the caller rebinds its
-    pool reference to the returned tree and never reads the old one)."""
-    return jax.jit(_prefill_step_body(cfg, kinds, backend),
-                   static_argnums=(8, 9), donate_argnums=(2,))
+    pool reference to the returned tree and never reads the old one).
+
+    ``mesh``/``rules``: optional device-group sharding (``rules`` is a
+    frozen rules mapping, see ``launch.sharding.freeze_rules``).  With a
+    mesh, pool trees / hidden rows / params follow the NamedShardings the
+    rules derive and XLA partitions the step across the group;
+    ``mesh=None`` is the byte-identical single-device reference twin."""
+    if mesh is None:
+        return jax.jit(_prefill_step_body(cfg, kinds, backend),
+                       static_argnums=(8, 9), donate_argnums=(2,))
+    body = _prefill_step_body(cfg, kinds, backend)
+    pools, rows, repl = _mesh_constraints(mesh, rules)
+
+    def step(run_params, shared_params, pool_trees, h, emb0, enc_rows,
+             layer_active, layer_ids, offset, phase):
+        pool_trees = pools(pool_trees)
+        h = rows(h, "batch", None, None)
+        emb0 = rows(emb0, "batch", None, None)
+        enc_rows = rows(enc_rows, "batch", None, None)
+        layer_active, layer_ids = repl(layer_active), repl(layer_ids)
+        h, new_trees = body(run_params, shared_params, pool_trees, h, emb0,
+                            enc_rows, layer_active, layer_ids, offset,
+                            phase)
+        return rows(h, "batch", None, None), pools(new_trees)
+
+    return jax.jit(step, static_argnums=(8, 9), donate_argnums=(2,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -1061,7 +1119,7 @@ def _decode_step_body(cfg: ModelConfig, kinds: Tuple[str, ...],
 
 @functools.lru_cache(maxsize=None)
 def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...],
-                          backend: str = "xla"):
+                          backend: str = "xla", mesh=None, rules=None):
     """Jitted pooled decode step (see :func:`_decode_step_body` for the
     contract), shared per (cfg, per-layer kind tuple, compute backend) —
     each server calls it with its own (layers, rows) shapes.
@@ -1073,14 +1131,36 @@ def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...],
     one (reading a donated leaf raises ``RuntimeError: Array has been
     deleted``).  ``BlockServer.decode_rows``/``round_rows`` do exactly
     that; see docs/serving.md "Round anatomy".
+
+    ``mesh``/``rules``: optional TP/EP device-group sharding — see
+    :func:`make_pool_prefill_step`.  ``mesh=None`` stays the untouched
+    reference twin.
     """
-    return jax.jit(_decode_step_body(cfg, kinds, backend),
-                   donate_argnums=(2,))
+    if mesh is None:
+        return jax.jit(_decode_step_body(cfg, kinds, backend),
+                       donate_argnums=(2,))
+    body = _decode_step_body(cfg, kinds, backend)
+    pools, rows, repl = _mesh_constraints(mesh, rules)
+
+    def step(run_params, shared_params, pool_trees, h, pos, emb0, enc_len,
+             layer_active, layer_ids):
+        pool_trees = pools(pool_trees)
+        h = rows(h, "batch", None, None)
+        pos = rows(pos, "batch")
+        emb0 = rows(emb0, "batch", None, None)
+        enc_len, layer_active, layer_ids = (repl(enc_len),
+                                            repl(layer_active),
+                                            repl(layer_ids))
+        h, new_trees = body(run_params, shared_params, pool_trees, h, pos,
+                            emb0, enc_len, layer_active, layer_ids)
+        return rows(h, "batch", None, None), pools(new_trees)
+
+    return jax.jit(step, donate_argnums=(2,))
 
 
 @functools.lru_cache(maxsize=None)
 def make_pool_round_step(cfg: ModelConfig, kinds: Tuple[str, ...],
-                         backend: str = "xla"):
+                         backend: str = "xla", mesh=None, rules=None):
     """Build THE fused per-(hop, server) dispatch of a device-resident
     decode round: gather the hop's rows out of the round buffers, run the
     pooled decode step, scatter the results back — ONE jitted call, no host
@@ -1109,14 +1189,26 @@ def make_pool_round_step(cfg: ModelConfig, kinds: Tuple[str, ...],
     independently (vmap), and inactive rows/slots are `where`-masked.  The
     pool trees (arg 2) are DONATED — same aliasing contract as
     :func:`make_pool_decode_step`.
+
+    ``mesh``/``rules``: optional TP/EP device-group sharding.  The round
+    buffers and per-round index vectors (``slot_of_row``/``row_of_slot``)
+    are pinned replicated over the group; the pool trees follow the cache
+    rules — the resharding between the two layouts is XLA's, still ONE
+    dispatch per (hop, server).
     """
     body = _decode_step_body(cfg, kinds, backend)
+    cons = None if mesh is None else _mesh_constraints(mesh, rules)
 
     def hop(run_params, shared_params, pool_trees, h_round, pos_round,
             emb0_round, encl_round, slot_of_row, row_of_slot, layer_active,
             layer_ids):
         W = h_round.shape[0]
         n_rows = slot_of_row.shape[0]
+        if cons is not None:
+            pools, _rows, repl = cons
+            pool_trees = pools(pool_trees)
+            h_round, pos_round = repl(h_round), repl(pos_round)
+            slot_of_row, row_of_slot = repl(slot_of_row), repl(row_of_slot)
         src = jnp.clip(slot_of_row, 0, W - 1)
         h = h_round[src]
         pos = pos_round[src]
@@ -1128,7 +1220,10 @@ def make_pool_round_step(cfg: ModelConfig, kinds: Tuple[str, ...],
                                 pos, emb0, enc_len, layer_active, layer_ids)
         back = h_out[jnp.clip(row_of_slot, 0, n_rows - 1)]
         keep = (row_of_slot >= 0)[:, None, None]
-        return jnp.where(keep, back, h_round), new_trees
+        out = jnp.where(keep, back, h_round)
+        if cons is not None:
+            out, new_trees = cons[2](out), cons[0](new_trees)
+        return out, new_trees
 
     return jax.jit(hop, donate_argnums=(2,))
 
@@ -1209,62 +1304,93 @@ def _scatter_paged(runs, pool_trees, scratch, page_table, page_size: int,
 
 @functools.lru_cache(maxsize=None)
 def make_paged_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...],
-                           backend: str = "xla", page_size: int = 16):
+                           backend: str = "xla", page_size: int = 16,
+                           mesh=None, rules=None):
     """Paged twin of :func:`make_pool_decode_step`: same contract with one
     extra runtime operand, the int32 page table, inserted after the pool
-    trees.  The pool trees (arg 2) are donated — same aliasing contract."""
+    trees.  The pool trees (arg 2) are donated — same aliasing contract.
+    ``mesh``/``rules``: optional device-group sharding (page table pinned
+    replicated; physical page arrays follow the cache rules)."""
     body = _decode_step_body(cfg, kinds, backend)
     runs = kind_runs(kinds)
+    cons = None if mesh is None else _mesh_constraints(mesh, rules)
 
     def step(run_params, shared_params, pool_trees, page_table, h, pos,
              emb0, enc_len, layer_active, layer_ids):
+        if cons is not None:
+            pools, rows, repl = cons
+            pool_trees, page_table = pools(pool_trees), repl(page_table)
+            h, pos = rows(h, "batch", None, None), rows(pos, "batch")
         scratch = _gather_paged(runs, pool_trees, page_table, page_size)
         h_out, new_scratch = body(run_params, shared_params, scratch, h,
                                   pos, emb0, enc_len, layer_active,
                                   layer_ids)
-        return h_out, _scatter_paged(runs, pool_trees, new_scratch,
-                                     page_table, page_size, pos)
+        new_trees = _scatter_paged(runs, pool_trees, new_scratch,
+                                   page_table, page_size, pos)
+        if cons is not None:
+            h_out = cons[1](h_out, "batch", None, None)
+            new_trees = cons[0](new_trees)
+        return h_out, new_trees
 
     return jax.jit(step, donate_argnums=(2,))
 
 
 @functools.lru_cache(maxsize=None)
 def make_paged_prefill_step(cfg: ModelConfig, kinds: Tuple[str, ...],
-                            backend: str = "xla", page_size: int = 16):
+                            backend: str = "xla", page_size: int = 16,
+                            mesh=None, rules=None):
     """Paged twin of :func:`make_pool_prefill_step` (page table inserted
-    after the pool trees; ``offset``/``phase`` stay static)."""
+    after the pool trees; ``offset``/``phase`` stay static).
+    ``mesh``/``rules``: optional device-group sharding."""
     body = _prefill_step_body(cfg, kinds, backend)
     runs = kind_runs(kinds)
+    cons = None if mesh is None else _mesh_constraints(mesh, rules)
 
     def step(run_params, shared_params, pool_trees, page_table, h, emb0,
              enc_rows, layer_active, layer_ids, offset, phase):
+        if cons is not None:
+            pools, rows, repl = cons
+            pool_trees, page_table = pools(pool_trees), repl(page_table)
+            h = rows(h, "batch", None, None)
         scratch = _gather_paged(runs, pool_trees, page_table, page_size)
         h_out, new_scratch = body(run_params, shared_params, scratch, h,
                                   emb0, enc_rows, layer_active, layer_ids,
                                   offset, phase)
-        return h_out, _scatter_paged(runs, pool_trees, new_scratch,
-                                     page_table, page_size)
+        new_trees = _scatter_paged(runs, pool_trees, new_scratch,
+                                   page_table, page_size)
+        if cons is not None:
+            h_out = cons[1](h_out, "batch", None, None)
+            new_trees = cons[0](new_trees)
+        return h_out, new_trees
 
     return jax.jit(step, static_argnums=(9, 10), donate_argnums=(2,))
 
 
 @functools.lru_cache(maxsize=None)
 def make_paged_round_step(cfg: ModelConfig, kinds: Tuple[str, ...],
-                          backend: str = "xla", page_size: int = 16):
+                          backend: str = "xla", page_size: int = 16,
+                          mesh=None, rules=None):
     """Paged twin of :func:`make_pool_round_step`: the fused
     gather+step+scatter hop over the round buffers, with the page
     gather/scatter wrapped around the same decode body.  Rows outside the
     hop scatter their own gathered page back (their ``pos`` placeholder is
     arbitrary but the page it selects belongs to the row — a no-op write,
-    or the trash page when unassigned)."""
+    or the trash page when unassigned).  ``mesh``/``rules``: optional
+    device-group sharding (round buffers + page table replicated)."""
     body = _decode_step_body(cfg, kinds, backend)
     runs = kind_runs(kinds)
+    cons = None if mesh is None else _mesh_constraints(mesh, rules)
 
     def hop(run_params, shared_params, pool_trees, page_table, h_round,
             pos_round, emb0_round, encl_round, slot_of_row, row_of_slot,
             layer_active, layer_ids):
         W = h_round.shape[0]
         n_rows = slot_of_row.shape[0]
+        if cons is not None:
+            pools, _rows, repl = cons
+            pool_trees, page_table = pools(pool_trees), repl(page_table)
+            h_round, pos_round = repl(h_round), repl(pos_round)
+            slot_of_row, row_of_slot = repl(slot_of_row), repl(row_of_slot)
         src = jnp.clip(slot_of_row, 0, W - 1)
         h = h_round[src]
         pos = pos_round[src]
@@ -1278,6 +1404,9 @@ def make_paged_round_step(cfg: ModelConfig, kinds: Tuple[str, ...],
                                    page_table, page_size, pos)
         back = h_out[jnp.clip(row_of_slot, 0, n_rows - 1)]
         keep = (row_of_slot >= 0)[:, None, None]
-        return jnp.where(keep, back, h_round), new_trees
+        out = jnp.where(keep, back, h_round)
+        if cons is not None:
+            out, new_trees = cons[2](out), cons[0](new_trees)
+        return out, new_trees
 
     return jax.jit(hop, donate_argnums=(2,))

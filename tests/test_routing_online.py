@@ -123,3 +123,43 @@ def test_online_elastic_replacement():
     if ctl.placement.feasible_cover(prob.L):
         route, start, end, sid = ctl.admit(0, 0.0)
         assert 0 not in route.servers
+
+
+def test_replace_servers_invalidates_route_cache():
+    """Regression guard: ``replace_servers`` must REPLACE the memoized
+    RouteCostCache.  The cache holds the routing graph, per-client edge
+    costs, and the eq. (20) slot capacities — all functions of τ, memory
+    and placement — so serving costs from a stale cache after churn would
+    silently mis-route.  After churn, every memoized input must equal a
+    cache built from scratch on the new problem."""
+    import dataclasses
+
+    from repro.core import RouteCostCache
+
+    rng = np.random.default_rng(7)
+    prob = _problem(rng, n=5)
+    ctl = OnlineBPRR(prob, R=2)
+    # warm the per-client memo on the old topology
+    for c in range(prob.n_clients):
+        ctl._route_cache.cost(c)
+        ctl._route_cache.cost(c, avg_over_tokens=True)
+    old_cache = ctl._route_cache
+
+    # churn: every server doubles τ and gains memory (placement may move)
+    servers = [dataclasses.replace(s, tau=s.tau * 2.0,
+                                   mem_bytes=s.mem_bytes + 4.0)
+               for s in prob.servers]
+    prob2 = Problem(prob.llm, servers, prob.n_clients, prob.rtt_token,
+                    prob.rtt_prefill, prob.workload)
+    ctl.replace_servers(prob2)
+
+    assert ctl._route_cache is not old_cache, "stale cache survived churn"
+    fresh = RouteCostCache(ctl.problem, ctl.placement)
+    np.testing.assert_array_equal(ctl._route_cache.total_slots,
+                                  fresh.total_slots)
+    for c in range(prob.n_clients):
+        for avg in (False, True):
+            np.testing.assert_array_equal(ctl._route_cache.cost(c, avg),
+                                          fresh.cost(c, avg))
+    # and the stale memo really is stale: doubled τ moved the edge costs
+    assert not np.array_equal(old_cache.cost(0), fresh.cost(0))

@@ -1,0 +1,215 @@
+"""Property tests for the serving sharding rules (launch/sharding.py).
+
+``guarded_spec`` is the single choke point every serving PartitionSpec goes
+through, so its invariants carry the whole device-group contract:
+
+* every mesh axis a produced spec assigns to a dim DIVIDES that dim,
+* a mesh axis is never used twice within one spec,
+* non-divisible dims fall back to replication (never an invalid spec),
+* cache spec trees are structurally identical to the cache trees they
+  shard, for all four StateSpec families (decoder / recurrent / hybrid /
+  enc-dec).
+
+Runs under real hypothesis (bounded by the conftest "ci" profile) or the
+conftest fallback shim — strategies are limited to the shim's subset.
+"""
+import types
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_reduced_config
+from repro.launch.sharding import (cache_axes_for, cache_tree_axes,
+                                   freeze_rules, guarded_spec,
+                                   pool_tree_shardings, serving_rules,
+                                   thaw_rules)
+
+SETTINGS = settings(max_examples=20, deadline=None)
+
+# one arch per StateSpec family
+FAMILIES = ["llama3_2_1b", "rwkv6_7b", "zamba2_7b", "seamless_m4t_large_v2"]
+
+
+def _mesh(data, model):
+    """Mesh stand-in: the rules/spec machinery only reads ``axis_names`` and
+    ``devices.shape``, so property tests can sweep mesh extents without
+    forcing host devices."""
+    return types.SimpleNamespace(axis_names=("data", "model"),
+                                 devices=np.zeros((data, model), np.int8))
+
+
+def _check_spec(spec, shape, sizes):
+    """The guarded_spec invariants for one leaf."""
+    used = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        extent = int(np.prod([sizes[a] for a in axes]))
+        assert dim % extent == 0, (spec, shape, sizes)
+        used += list(axes)
+    assert len(used) == len(set(used)), f"mesh axis reused: {spec}"
+
+
+# ---------------------------------------------------------------------------
+# guarded_spec invariants
+# ---------------------------------------------------------------------------
+
+
+@SETTINGS
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 64),
+       st.sampled_from([1, 2, 4, 8]), st.sampled_from([1, 2, 4]))
+def test_guarded_spec_divides_and_never_reuses(d0, d1, d2, model, data):
+    mesh = _mesh(data, model)
+    rules = {"a": "model", "b": ("data", "model"), "c": "data"}
+    spec = guarded_spec(("a", "b", "c"), (d0, d1, d2), rules, mesh)
+    _check_spec(spec, (d0, d1, d2), {"data": data, "model": model})
+
+
+@SETTINGS
+@given(st.sampled_from([3, 5, 7, 11, 13]), st.sampled_from([2, 4, 8]))
+def test_guarded_spec_replicates_nondivisible(dim, model):
+    """Prime dims not divisible by the mesh extent must REPLICATE, not
+    error — the engine picks pool row counts freely."""
+    mesh = _mesh(2, model)
+    spec = guarded_spec(("x",), (dim,), {"x": "model"}, mesh)
+    assert tuple(spec) == (None,)
+
+
+@SETTINGS
+@given(st.sampled_from([1, 2, 4, 8]), st.sampled_from([1, 2, 4]))
+def test_guarded_spec_tuple_axes_partial_use(model, data):
+    """When one axis of a ("data", "model") pair is already claimed by an
+    earlier dim, the survivor alone must still divide — and the produced
+    spec must contain ONLY unused axes."""
+    mesh = _mesh(data, model)
+    rules = {"m": "model", "dm": ("data", "model")}
+    # dim0 takes "model"; dim1 may then only use "data"
+    spec = guarded_spec(("m", "dm"), (8 * model, 8 * data), rules, mesh)
+    _check_spec(spec, (8 * model, 8 * data), {"data": data, "model": model})
+    if model > 1:
+        assert spec[0] == "model"
+        assert spec[1] in (None, "data", ("data",))
+
+
+@SETTINGS
+@given(st.sampled_from([None, "model", "data", ("data", "model")]),
+       st.integers(1, 32))
+def test_guarded_spec_unknown_logical_replicates(axis, dim):
+    """Logical names absent from the rules (or mapped to None) replicate."""
+    mesh = _mesh(2, 4)
+    rules = {} if axis is None else {"known": axis}
+    spec = guarded_spec(("missing",), (dim,), rules, mesh)
+    assert tuple(spec) == (None,)
+
+
+# ---------------------------------------------------------------------------
+# freeze / thaw round-trip
+# ---------------------------------------------------------------------------
+
+
+@SETTINGS
+@given(st.sampled_from(["model", "data", None]),
+       st.sampled_from(["model", None]), st.booleans())
+def test_freeze_rules_canonical_and_roundtrips(v1, v2, flip):
+    a = {"batch": v1, "mlp": v2}
+    b = {"mlp": v2, "batch": v1}  # same mapping, different insertion order
+    if flip:
+        a, b = b, a
+    assert freeze_rules(a) == freeze_rules(b)
+    assert thaw_rules(freeze_rules(a)) == a
+    assert hash(freeze_rules(a)) == hash(freeze_rules(b))
+
+
+# ---------------------------------------------------------------------------
+# Cache trees: axes and spec trees for all four StateSpec families
+# ---------------------------------------------------------------------------
+
+_POOLS = {}
+
+
+def _pool(arch, layout="slab"):
+    from repro.serving.kv_cache import CachePool, state_specs
+
+    key = (arch, layout)
+    if key not in _POOLS:
+        cfg = get_reduced_config(arch)
+        kinds = tuple(s.kind for s in state_specs(cfg))
+        enc = 6 if cfg.is_enc_dec else 0
+        _POOLS[key] = (cfg, CachePool(cfg, kinds, 4, 8, 4, enc_len=enc,
+                                      layout=layout,
+                                      page_size=2 if layout == "paged"
+                                      else 0))
+    return _POOLS[key]
+
+
+@pytest.mark.parametrize("layout", ["slab", "paged"])
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_cache_axes_tree_matches_cache_tree(arch, layout):
+    """cache_tree_axes mirrors the cache tree leaf-for-leaf, and every axes
+    tuple has exactly one logical name per array dim."""
+    cfg, pool = _pool(arch, layout)
+    axes = cache_tree_axes(pool.tree)
+    # an axes leaf is a tuple of logical names / None — the pool tree's
+    # outer tuple-of-run-dicts is a container, not a leaf
+    is_ax = lambda x: (isinstance(x, tuple)
+                       and all(a is None or isinstance(a, str) for a in x))
+    assert (jax.tree.structure(axes, is_leaf=is_ax)
+            == jax.tree.structure(pool.tree))
+    for ax, leaf in zip(jax.tree.leaves(axes, is_leaf=is_ax),
+                        jax.tree.leaves(pool.tree)):
+        assert len(ax) == leaf.ndim
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_cache_leaf_specs_divide_for_all_families(arch):
+    """For every cache leaf of every family, across a sweep of mesh
+    extents, the produced spec obeys the divisibility + no-reuse
+    invariants.  (This is the property that makes engine-chosen pool
+    shapes safe under any mesh.)"""
+    cfg, pool = _pool(arch)
+    for data, model in [(1, 2), (2, 2), (2, 4), (1, 8), (4, 2)]:
+        mesh = _mesh(data, model)
+        rules = serving_rules(cfg, mesh, n_rows=4, max_len=8)
+        scratch = dict(rules)  # cache_axes_for may add kv_time_noverlap
+
+        def one(path, leaf):
+            name = next((p.key for p in reversed(path)
+                         if hasattr(p, "key")), None)
+            axes = cache_axes_for(name, leaf.ndim, scratch)
+            spec = guarded_spec(axes, leaf.shape, scratch, mesh)
+            _check_spec(spec, leaf.shape,
+                        {"data": data, "model": model})
+            return None
+
+        jax.tree_util.tree_map_with_path(one, pool.tree)
+
+
+@pytest.mark.parametrize("layout", ["slab", "paged"])
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_pool_tree_shardings_structure(arch, layout):
+    """pool_tree_shardings yields a NamedSharding per leaf with the exact
+    tree structure of the pool (slab AND paged layouts)."""
+    from repro.launch.mesh import compat_make_mesh
+
+    cfg, pool = _pool(arch, layout)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
+    rules = serving_rules(cfg, mesh, n_rows=4, max_len=8)
+    sh = pool_tree_shardings(mesh, rules, pool.tree)
+    assert jax.tree.structure(sh) == jax.tree.structure(pool.tree)
+    for s, leaf in zip(jax.tree.leaves(sh), jax.tree.leaves(pool.tree)):
+        assert isinstance(s, NamedSharding)
+        assert len(tuple(s.spec)) <= leaf.ndim
+
+
+def test_serving_rules_disable_sequence_sharding():
+    """Pooled steps vmap one token per row — serving rules must never
+    sequence-shard activations, whatever make_rules would pick."""
+    for arch in FAMILIES + ["deepseek_v2_236b", "llama4_scout_17b_a16e"]:
+        cfg = get_reduced_config(arch)
+        rules = serving_rules(cfg, _mesh(2, 4), n_rows=8, max_len=32)
+        assert rules["seq_act"] is None
+        assert rules["attn_seq_q"] is None

@@ -1,0 +1,76 @@
+"""XLA_FLAGS composition: the dry-run's forced device count must MERGE with
+the user's exported flags, never clobber them (launch/xla_flags.py —
+stdlib-only, importable before jax)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.launch.xla_flags import force_host_device_count, merge_xla_flags
+
+
+def test_merge_from_empty():
+    assert merge_xla_flags(None, "--a=1") == "--a=1"
+    assert merge_xla_flags("", "--a=1", "--b") == "--a=1 --b"
+
+
+def test_merge_preserves_existing_order_and_values():
+    got = merge_xla_flags("--x=1 --y=2", "--z=3")
+    assert got == "--x=1 --y=2 --z=3"
+
+
+def test_merge_user_wins_on_name_conflict():
+    """A flag already present (by name) keeps the USER's value — the
+    requested one is dropped, whatever its value."""
+    got = merge_xla_flags("--xla_force_host_platform_device_count=4",
+                          "--xla_force_host_platform_device_count=512")
+    assert got == "--xla_force_host_platform_device_count=4"
+    # valueless and valued spellings are the same flag
+    assert merge_xla_flags("--flag", "--flag=2") == "--flag"
+
+
+def test_merge_is_idempotent():
+    once = merge_xla_flags("--a=1", "--b=2")
+    assert merge_xla_flags(once, "--b=2") == once
+
+
+def test_force_host_device_count_mutates_environ():
+    env = {"XLA_FLAGS": "--xla_cpu_enable_fast_math=false"}
+    got = force_host_device_count(env, 8)
+    assert env["XLA_FLAGS"] == got
+    assert got == ("--xla_cpu_enable_fast_math=false "
+                   "--xla_force_host_platform_device_count=8")
+    # user already forced a count: theirs survives
+    env2 = {"XLA_FLAGS": "--xla_force_host_platform_device_count=4"}
+    assert force_host_device_count(env2, 512) == \
+        "--xla_force_host_platform_device_count=4"
+    # unset env var: created from scratch
+    env3 = {}
+    assert force_host_device_count(env3, 2) == \
+        "--xla_force_host_platform_device_count=2"
+
+
+@pytest.mark.slow
+def test_dryrun_import_preserves_user_flags(tmp_path):
+    """Importing launch.dryrun used to OVERWRITE XLA_FLAGS wholesale; now a
+    pre-set sentinel flag must survive the import, alongside the dry-run's
+    forced 512 host devices."""
+    script = tmp_path / "probe.py"
+    script.write_text(
+        "import os\n"
+        "import repro.launch.dryrun  # noqa: F401 (import-time env setup)\n"
+        "flags = os.environ['XLA_FLAGS'].split()\n"
+        "assert '--xla_cpu_enable_fast_math=false' in flags, flags\n"
+        "assert '--xla_force_host_platform_device_count=512' in flags, flags\n"
+        "print('FLAGS_MERGED_OK')\n")
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_cpu_enable_fast_math=false"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = str(repo / "src")
+    proc = subprocess.run([sys.executable, str(script)], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "FLAGS_MERGED_OK" in proc.stdout
