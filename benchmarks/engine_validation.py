@@ -77,6 +77,52 @@ def _concurrency_problem(block_tau=None):
     return Problem(llm, servers, 1, rtt, 3 * rtt, workload=Workload(8, 12))
 
 
+def _planet_problem(n_servers: int = 8, n_clients: int = 4,
+                    mem: float = 3200.0):
+    """Well-provisioned planet-scale topology for the 1M-request diurnal
+    study: two server classes (fast/slow alternating), each client nearest
+    a distinct server pair, ~200-280 eq. (15) cache slots per server.  At
+    R=8 CG-BP gives every client a dedicated full-stack server, so the
+    diurnal valley runs entirely in the zero-wait regime (the fast engine's
+    W == W0 condition) and the midday rush spills onto the slow exact
+    path — both branches of the vectorized event loop get exercised."""
+    from repro.core import LLMSpec, Problem, ServerSpec, Workload
+
+    llm = LLMSpec("planet", 8, block_bytes=50.0, cache_bytes_per_token=0.5)
+    servers = [
+        ServerSpec(j, mem if j % 2 == 0 else mem * 0.75,
+                   0.004 if j % 2 == 0 else 0.006,
+                   tau_prefill_base=0.002, tau_prefill_per_token=0.0005)
+        for j in range(n_servers)
+    ]
+    rtt = np.full((n_clients, n_servers), 0.02)
+    for c in range(n_clients):
+        rtt[c, (2 * c) % n_servers] = 0.005
+        rtt[c, (2 * c + 1) % n_servers] = 0.005
+    return Problem(llm, servers, n_clients, rtt, 3 * rtt,
+                   workload=Workload(8, 12))
+
+
+def _fleet_problem(n_servers: int = 120, n_clients: int = 4, seed: int = 0):
+    """Large elastic fleet for the churn study: heterogeneous memory and
+    compute in a 3x4 class grid, dense random client RTTs — big enough
+    that CG-BP re-placement (OnlineBPRR.replace_servers) is the dominant
+    cost a storm has to amortize."""
+    from repro.core import LLMSpec, Problem, ServerSpec, Workload
+
+    llm = LLMSpec("fleet", 8, block_bytes=50.0, cache_bytes_per_token=0.5)
+    rng = np.random.default_rng(seed)
+    servers = [
+        ServerSpec(j, float(400.0 + 100.0 * (j % 3)),
+                   float(0.004 + 0.004 * (j % 4)),
+                   tau_prefill_base=0.002, tau_prefill_per_token=0.0005)
+        for j in range(n_servers)
+    ]
+    rtt = 0.005 + 0.045 * rng.random((n_clients, n_servers))
+    return Problem(llm, servers, n_clients, rtt, 3 * rtt,
+                   workload=Workload(8, 12))
+
+
 def cross_validate(R: int, n_requests: int = 10, rate: float = 1.0,
                    seed: int = 0, trace: str = "poisson",
                    arch: str = "llama3_2_1b"):
@@ -476,10 +522,22 @@ def oversubscription_scenario(n_sessions: int = 10, slab_cap: int = 2,
             "resumes": paged_sys.round_stats["resumes"]}
 
 
+def _assert_sim_parity(ref, fast):
+    """The bit-exact twin contract: identical per-request rows (route,
+    start, wait, every timing field) and identical aggregate metrics.
+    ``decision_time_s`` is wall-clock and deliberately NOT part of it."""
+    assert ref.requests == fast.requests, "fast/reference rows diverge"
+    for f in ("drop_rate", "wait", "first_token", "per_token_rest",
+              "per_token_all"):
+        assert getattr(ref, f) == getattr(fast, f), (f, ref, fast)
+
+
 def sim_throughput(n_requests: int = 2000, rate: float = 5.0, seed: int = 0):
     """Requests/s of the CPU-only discrete-event simulator on one long
-    Poisson trace — the scale claim behind the vectorized
-    ``_Timeline.usage_max`` (thousands of committed sessions per probe)."""
+    Poisson trace, measured for BOTH execution modes on the SAME trace:
+    the per-request reference loop and the array-native fast engine
+    (retirement-heap usage counters + memoized zero-wait decisions).
+    Exact row parity is asserted before either number is recorded."""
     import time
 
     from repro.sim import SimConfig, simulate
@@ -487,13 +545,127 @@ def sim_throughput(n_requests: int = 2000, rate: float = 5.0, seed: int = 0):
 
     problem = _concurrency_problem()
     requests = poisson_requests(n_requests, rate, seed=seed)
+    results, wall = {}, {}
+    for mode in ("reference", "fast"):
+        t0 = time.perf_counter()
+        results[mode] = simulate(
+            problem, SimConfig("proposed", n_requests=n_requests, rate=rate,
+                               seed=seed, R=8, sim_mode=mode),
+            requests=requests)
+        wall[mode] = time.perf_counter() - t0
+    _assert_sim_parity(results["reference"], results["fast"])
+    st = results["fast"].fast_stats or {}
+    return {"requests_per_s": n_requests / wall["reference"],
+            "requests_per_s_reference": n_requests / wall["reference"],
+            "requests_per_s_fast": n_requests / wall["fast"],
+            "speedup": wall["reference"] / wall["fast"],
+            "n_requests": n_requests, "wall_s": wall["reference"],
+            "wall_s_fast": wall["fast"],
+            "drop_rate": results["reference"].drop_rate,
+            "fast_frac": st.get("fast_routes", 0) / max(1, n_requests),
+            "parity": 1, "sim_mode": "both"}
+
+
+def sim_throughput_1m(n_requests: int = 1_000_000, base_rate: float = 40.0,
+                      peak_rate: float = 200.0, period: float = 7200.0,
+                      seed: int = 0):
+    """The planet-scale headline: a 1M-request diurnal trace (thinned
+    nonhomogeneous Poisson, ~1.3 day-cycles) through the fast engine with
+    array-backed metrics (``collect_rows=False``).  A 2000-request prefix
+    is first replayed through BOTH modes with full rows as the exactness
+    spot-check; trace generation is timed separately from the event loop."""
+    import time
+
+    from repro.sim import SimConfig, simulate
+    from repro.sim.workload import diurnal_requests
+
+    problem = _planet_problem()
+
+    def _cfg(mode, n, collect):
+        return SimConfig("proposed", n_requests=n, rate=1.0, seed=seed,
+                         R=8, sim_mode=mode, collect_rows=collect)
+
+    # both-modes parity spot-check on a prefix trace
+    n_spot = min(2000, n_requests)
+    spot = diurnal_requests(n_spot, base_rate, peak_rate, period=period,
+                            n_clients=problem.n_clients, seed=seed)
+    _assert_sim_parity(
+        simulate(problem, _cfg("reference", n_spot, True), requests=spot),
+        simulate(problem, _cfg("fast", n_spot, True), requests=spot))
+
     t0 = time.perf_counter()
-    res = simulate(problem, SimConfig("proposed", n_requests=n_requests,
-                                      rate=rate, seed=seed, R=8),
-                   requests=requests)
-    dt = time.perf_counter() - t0
-    return {"requests_per_s": n_requests / dt, "n_requests": n_requests,
-            "wall_s": dt, "drop_rate": res.drop_rate}
+    batch = diurnal_requests(n_requests, base_rate, peak_rate, period=period,
+                             n_clients=problem.n_clients, seed=seed)
+    gen_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = simulate(problem, _cfg("fast", n_requests, False), requests=batch)
+    wall = time.perf_counter() - t0
+    st = res.fast_stats or {}
+    return {"requests_per_s": n_requests / wall, "n_requests": n_requests,
+            "wall_s": wall, "trace_gen_s": gen_s,
+            "trace_span_s": float(batch.arrival[-1]),
+            "drop_rate": res.drop_rate, "wait": res.wait,
+            "fast_frac": st.get("fast_routes", 0) / max(1, n_requests),
+            "compactions": st.get("compactions", 0),
+            "parity_spot_check": 1, "sim_mode": "fast"}
+
+
+def sim_churn_study(n_servers: int = 120, n_requests: int = 2000,
+                    rate: float = 20.0, n_storms: int = 6,
+                    storm_size: int = 10, seed: int = 3):
+    """Elastic-fleet churn: a 120-server fleet serving a Poisson trace
+    while timed storms knock out / revive ``storm_size`` servers at a
+    time.  Each storm triggers ``OnlineBPRR.replace_servers`` — a full
+    CG-BP re-placement plus ``RouteCostCache`` invalidation — and the
+    study reports how routing survives it (drops, waits, fleet size)."""
+    import time
+
+    from repro.sim import simulate_churn
+    from repro.sim.workload import churn_schedule, poisson_requests
+
+    problem = _fleet_problem(n_servers=n_servers)
+    requests = poisson_requests(n_requests, rate=rate, seed=seed,
+                                n_clients=problem.n_clients)
+    span = n_requests / rate
+    spacing = span / (n_storms + 1)
+    schedule = churn_schedule(n_servers, n_storms=n_storms,
+                              storm_size=storm_size, first=spacing,
+                              spacing=spacing, seed=1)
+    t0 = time.perf_counter()
+    res = simulate_churn(problem, requests, schedule, R=16)
+    wall = time.perf_counter() - t0
+    return {"n_servers": n_servers, "n_requests": n_requests,
+            "n_storms": res.n_storms, "n_replacements": res.n_replacements,
+            "drop_rate": res.drop_rate, "wait": res.wait,
+            "per_token_all": res.per_token_all, "alive_min": res.alive_min,
+            "requests_per_s": n_requests / wall, "wall_s": wall}
+
+
+def sim_scale_smoke(n_requests: int = 50_000, budget_s: float = 60.0):
+    """Bounded CI scale check (the ``--sim-scale`` job): a 50k-request
+    diurnal trace through the fast engine must finish under the wall
+    budget on a cold CI runner.  Raises on budget overrun or drops."""
+    import time
+
+    from repro.sim import SimConfig, simulate
+    from repro.sim.workload import diurnal_requests
+
+    problem = _planet_problem()
+    batch = diurnal_requests(n_requests, 40.0, 200.0, period=7200.0,
+                             n_clients=problem.n_clients, seed=0)
+    t0 = time.perf_counter()
+    res = simulate(problem,
+                   SimConfig("proposed", n_requests=n_requests, rate=1.0,
+                             seed=0, R=8, sim_mode="fast",
+                             collect_rows=False),
+                   requests=batch)
+    wall = time.perf_counter() - t0
+    assert res.sim_mode == "fast", res.sim_mode
+    assert wall < budget_s, \
+        f"{n_requests} requests took {wall:.1f}s (budget {budget_s:.0f}s)"
+    return {"n_requests": n_requests, "wall_s": wall,
+            "requests_per_s": n_requests / wall, "budget_s": budget_s,
+            "drop_rate": res.drop_rate}
 
 
 def _emit_xval(name: str, eng, simm, err, us):
@@ -641,12 +813,38 @@ def run(full: bool = False, smoke: bool = False):
          f"({ov['preemptions']} preemptions, {ov['resumes']} resumes)")
     _record("oversub", **ov)
 
-    # simulator throughput on a long trace (vectorized timeline)
+    # simulator throughput on a long trace, BOTH modes on the same trace
+    # (exact row parity asserted inside before either number is recorded)
     st, us = timed(sim_throughput, n_requests=600 if smoke else 2000)
     emit("sim.tput", us,
-         f"{st['requests_per_s']:.0f} req/s over {st['n_requests']} "
+         f"ref={st['requests_per_s_reference']:.0f} req/s "
+         f"fast={st['requests_per_s_fast']:.0f} req/s "
+         f"speedup={st['speedup']:.1f}x over {st['n_requests']} "
          f"requests (drop_rate={st['drop_rate']:.2f})")
     _record("sim.tput", **st)
+
+    # planet-scale headline: 1M-request diurnal trace through the fast
+    # engine (2k-request both-modes parity spot-check runs first)
+    st, us = timed(sim_throughput_1m,
+                   n_requests=20_000 if smoke else 1_000_000)
+    emit("sim.tput.1M", us,
+         f"{st['requests_per_s']:.0f} req/s over {st['n_requests']} "
+         f"requests, {st['trace_span_s']/3600:.1f}h simulated in "
+         f"{st['wall_s']:.1f}s (fast_frac={st['fast_frac']:.3f}, "
+         f"drop_rate={st['drop_rate']:.3f})")
+    _record("sim.tput.1M", **st)
+
+    # elastic-fleet churn: 120 servers, timed join/leave storms, each one
+    # a full CG-BP re-placement through OnlineBPRR.replace_servers
+    ch, us = timed(sim_churn_study,
+                   n_requests=600 if smoke else 2000,
+                   n_storms=3 if smoke else 6)
+    emit("sim.churn", us,
+         f"{ch['n_servers']} servers, {ch['n_replacements']} re-placements "
+         f"over {ch['n_storms']} storms, alive_min={ch['alive_min']}, "
+         f"drop_rate={ch['drop_rate']:.3f}, "
+         f"{ch['requests_per_s']:.0f} req/s")
+    _record("sim.churn", **ch)
 
     # kernel-backend throughput: pallas-vs-xla ratio per serving hot path
     # (decode attention / flash prefill).  On this CPU container the pallas
@@ -690,7 +888,12 @@ _REQUIRED_ROWS = {
                          "paged_coresident", "coresidency_ratio"),
     "oversub": ("n_sessions", "slab_admitted", "paged_admitted",
                 "completed", "preemptions", "resumes"),
-    "sim.tput": ("requests_per_s",),
+    "sim.tput": ("requests_per_s", "requests_per_s_reference",
+                 "requests_per_s_fast", "speedup", "parity"),
+    "sim.tput.1M": ("requests_per_s", "n_requests", "wall_s",
+                    "parity_spot_check", "fast_frac"),
+    "sim.churn": ("n_servers", "n_requests", "n_replacements",
+                  "drop_rate", "alive_min"),
 }
 
 
@@ -728,12 +931,30 @@ def check_json(path: str) -> int:
     assert ov["slab_admitted"] < ov["n_sessions"], ov
     assert ov["completed"] == ov["n_sessions"] == ov["paged_admitted"], ov
     assert ov["preemptions"] >= 1 and ov["resumes"] >= 1, ov
+    # planet-scale simulator floors: exact fast/reference parity was
+    # asserted when measured (pass/fail flags), the fast engine must not
+    # be slower than the reference, and the 1M-request study must clear
+    # 20x the same file's reference throughput on the same machine
+    st = data["sim.tput"]
+    assert st["parity"] == 1 and st["speedup"] >= 1.0, st
+    m1 = data["sim.tput.1M"]
+    assert m1["parity_spot_check"] == 1, m1
+    assert m1["n_requests"] >= 1_000_000, m1
+    assert m1["requests_per_s"] >= 20 * st["requests_per_s_reference"], \
+        (m1, st)
+    assert 0.0 < m1["fast_frac"] <= 1.0, m1
+    ch = data["sim.churn"]
+    assert ch["n_servers"] >= 100 and ch["n_replacements"] >= 1, ch
+    assert 0.0 <= ch["drop_rate"] <= 0.5, ch
+    assert 0 < ch["alive_min"] <= ch["n_servers"], ch
     print(f"OK: {len(data)} scenarios, all {len(_REQUIRED_ROWS)} required "
           f"rows present; decode R32 speedup "
           f"{data['decode.tput.R32']['speedup']:.2f}x, paged co-residency "
           f"{r128['coresidency_ratio']:.1f}x, oversub served "
           f"{ov['completed']}/{ov['n_sessions']} with "
-          f"{ov['preemptions']} preemptions")
+          f"{ov['preemptions']} preemptions, sim 1M at "
+          f"{m1['requests_per_s']/st['requests_per_s_reference']:.0f}x "
+          f"reference")
     return len(data)
 
 
@@ -748,11 +969,21 @@ if __name__ == "__main__":
     ap.add_argument("--check-only", action="store_true",
                     help="validate the committed --json file's structure "
                          "and ratio floors without re-timing anything")
+    ap.add_argument("--sim-scale", action="store_true",
+                    help="bounded planet-scale smoke: a 50k-request "
+                         "diurnal fast trace must finish under a fixed "
+                         "wall budget (the sim-scale CI job)")
     ap.add_argument("--json", default=os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_engine.json"), help="output path for the JSON metrics")
     args = ap.parse_args()
-    if args.check_only:
+    if args.sim_scale:
+        row = sim_scale_smoke()
+        print(f"sim-scale OK: {row['n_requests']} requests in "
+              f"{row['wall_s']:.1f}s ({row['requests_per_s']:.0f} req/s, "
+              f"budget {row['budget_s']:.0f}s, "
+              f"drop_rate={row['drop_rate']:.3f})")
+    elif args.check_only:
         check_json(args.json)
     else:
         run(full=args.full, smoke=args.smoke)

@@ -1,13 +1,17 @@
 """Optimality-gap study (context for Thm 3.2 / Thm 3.5): CG-BPRR vs the
-exact MILP (13) on random small instances, plus bound (17) tightness."""
+exact MILP (13) on random small instances, plus bound (17) tightness —
+and the ONLINE scale sweep: the per-arrival MILP (21) vs the polynomial
+eq. (20) DP (ws_rr) on growing fleets."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (LLMSpec, Problem, ServerSpec, Workload, cg_bp,
-                        cg_upper_bound, lower_bound,
-                        route_per_token_time, shortest_path_route)
-from repro.core.milp import solve_bprr_milp
+from repro.core import (LLMSpec, Problem, RouteCostCache, ServerSpec,
+                        ServerState, Workload, cg_bp, cg_upper_bound,
+                        edge_waiting_times, lower_bound,
+                        route_per_token_time, shortest_path_route, ws_rr)
+from repro.core.milp import solve_bprr_milp, solve_online_routing
+from repro.core.routing import edge_cost_matrix
 
 from benchmarks.common import emit, timed
 
@@ -22,6 +26,94 @@ def random_instance(rng, L=4, n=3, n_req=3):
     prob = Problem(llm, servers, C, rtt, rtt * 4, workload=Workload(2, 2))
     reqs = [int(rng.integers(0, C)) for _ in range(n_req)]
     return prob, reqs
+
+
+def online_instance(rng, n: int):
+    """Random fleet of ``n`` servers for the online sweep: enough memory
+    to host a handful of blocks each, spread taus/RTTs so routes are
+    non-trivial."""
+    L = 8
+    llm = LLMSpec("sweep", L, block_bytes=8.0, cache_bytes_per_token=0.5)
+    servers = [ServerSpec(j, mem_bytes=float(8.0 * L + 60 * rng.random()),
+                          tau=float(0.01 + 0.05 * rng.random()))
+               for j in range(n)]
+    C = 4
+    rtt = 0.01 + 0.1 * rng.random((C, n))
+    return Problem(llm, servers, C, rtt, 3 * rtt, workload=Workload(4, 8))
+
+
+def _objective21(problem, cm, waiting, route) -> float:
+    """Realized eq. (21) objective of a committed route: max hop wait +
+    l_max * sum of eq. (4) edge costs (the online MILP's own metric, so
+    both solvers are scored on the same scale)."""
+    n = problem.n_servers
+    lmax = float(problem.workload.l_out)
+    prev, w, c = n, 0.0, 0.0
+    for j in route.servers:
+        w = max(w, float(waiting[prev, j]))
+        c += float(cm[prev, j])
+        prev = j
+    return w + lmax * c
+
+
+def online_scale_sweep(sizes=(8, 16, 32, 48), n_arrivals: int = 12,
+                       seed: int = 11):
+    """Per-arrival online MILP (21) (HiGHS) vs the polynomial eq. (20)
+    DP (``ws_rr``) on growing fleets.  Emits one ``optgap.online.n{N}``
+    row per size with the realized-cost ratio under the MILP's own
+    objective and the wall-time ratio.  Sizes stop below ~50 servers:
+    the MILP's dense edge-variable matrix grows as O(n^2) rows and
+    becomes memory-bound well before the DP (O(n^2) total) does."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for n in sizes:
+        prob = online_instance(rng, n)
+        pl, info = cg_bp(prob, 8)
+        if not info.feasible:
+            continue
+        cache = RouteCostCache(prob, pl)
+        # a few random in-flight sessions so eq. (20) waits are non-zero
+        states = {}
+        for j in rng.choice(n, size=max(2, n // 4), replace=False):
+            k = int(min(pl.m[int(j)], 2))
+            if k <= 0:
+                continue
+            states[int(j)] = ServerState(
+                remaining=[float(1.0 + 5.0 * rng.random())], blocks=[k])
+        waiting = edge_waiting_times(prob, pl, states, cache=cache)
+        ratios, milp_us, dp_us = [], 0.0, 0.0
+        solved = 0
+        for r in range(n_arrivals):
+            c = r % prob.n_clients
+            cm = edge_cost_matrix(prob, pl, c)
+            (rt_m, _), us_m = timed(solve_online_routing, prob, pl, c,
+                                    waiting)
+            (rt_d, _, _), us_d = timed(ws_rr, prob, pl, c, states,
+                                       cache=cache)
+            if rt_m is None or rt_d is None:
+                continue
+            solved += 1
+            milp_us += us_m
+            dp_us += us_d
+            obj_m = _objective21(prob, cm, waiting, rt_m)
+            obj_d = _objective21(prob, cm, waiting, rt_d)
+            ratios.append(obj_d / obj_m if obj_m > 0 else 1.0)
+        if not solved:
+            continue
+        row = {"n_servers": n, "n_arrivals": solved,
+               "cost_ratio_mean": float(np.mean(ratios)),
+               "cost_ratio_max": float(np.max(ratios)),
+               "milp_us_per_arrival": milp_us / solved,
+               "dp_us_per_arrival": dp_us / solved,
+               "milp_over_dp_time": milp_us / max(dp_us, 1e-9)}
+        out[n] = row
+        emit(f"optgap.online.n{n}", milp_us + dp_us,
+             f"cost dp/milp={row['cost_ratio_mean']:.3f} "
+             f"(max {row['cost_ratio_max']:.3f}) | "
+             f"milp={row['milp_us_per_arrival']:.0f}us/arrival "
+             f"dp={row['dp_us_per_arrival']:.0f}us/arrival "
+             f"({row['milp_over_dp_time']:.0f}x)")
+    return out
 
 
 def run(full: bool = False):
@@ -52,6 +144,7 @@ def run(full: bool = False):
         emit("optgap.summary", 0.0,
              f"mean_gap={np.mean(gaps):.3f} max_gap={np.max(gaps):.3f} "
              f"n={len(gaps)}")
+    online_scale_sweep(sizes=(8, 16, 32, 48) if full else (8, 16, 32))
 
 
 if __name__ == "__main__":

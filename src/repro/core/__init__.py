@@ -16,15 +16,16 @@ from repro.core.placement import (auto_R, capacity, cg_bp, cg_feasible_R,
                                   optimized_number_bp, optimized_order_bp,
                                   petals_bp, petals_m)
 from repro.core.routing import (RouteCostCache, ServerState,
-                                edge_waiting_times, jax_shortest_paths,
-                                petals_route, shortest_path_route, ws_rr)
+                                ServerStateArrays, edge_waiting_times,
+                                jax_shortest_paths, petals_route,
+                                shortest_path_route, ws_rr)
 from repro.core.topology import (RoutingGraph, edge_feasible, route_blocks,
                                  route_feasible)
 
 __all__ = [
     "BLOOM_PETALS", "GB", "MB", "LLMSpec", "OnlineBPRR", "Placement",
     "Problem", "Route", "RouteCostCache", "RoutingGraph", "ServerSpec",
-    "ServerState",
+    "ServerState", "ServerStateArrays",
     "Session", "Workload", "approximation_ratio", "auto_R", "capacity",
     "cg_bp", "cg_feasible_R", "cg_upper_bound", "conservative_m",
     "edge_feasible", "edge_waiting_times", "jax_shortest_paths",

@@ -23,7 +23,7 @@ from repro.core.perf_model import (Placement, Problem, Route,
                                    route_total_time)
 from repro.core.placement import auto_R, cg_bp, max_feasible_R
 from repro.core.routing import (RouteCostCache, ServerState,
-                                edge_waiting_times, ws_rr)
+                                ServerStateArrays, edge_waiting_times, ws_rr)
 
 
 @dataclass
@@ -88,6 +88,26 @@ class OnlineBPRR:
                 st.blocks.append(k)
         return states
 
+    def server_state_arrays(self, now: float) -> ServerStateArrays:
+        """Array-backed :meth:`server_states` — same sessions, same
+        insertion order, same floats, but in the SoA form the vectorized
+        ``edge_waiting_times`` branch consumes without per-arrival dict
+        rebuilds (bit-identical wait matrices, tests/test_simulator.py)."""
+        rem: Dict[int, List[float]] = {}
+        blk: Dict[int, List[int]] = {}
+        for s in self.sessions.values():
+            for j, k in zip(s.route.servers, s.route.blocks):
+                if j in rem:
+                    rem[j].append(max(s.end - now, 0.0))
+                    blk[j].append(k)
+                else:
+                    rem[j] = [max(s.end - now, 0.0)]
+                    blk[j] = [k]
+        out = ServerStateArrays(self.problem.n_servers)
+        for j, r in rem.items():
+            out.set(j, np.asarray(r, float), np.asarray(blk[j], np.int64))
+        return out
+
     def concurrency(self) -> int:
         return len(self.sessions)
 
@@ -95,7 +115,7 @@ class OnlineBPRR:
     def admit(self, client: int, now: float
               ) -> Tuple[Optional[Route], float, float, int]:
         """Route a new request.  Returns (route, start_time, end_time, sid)."""
-        states = self.server_states(now)
+        states = self.server_state_arrays(now)
         route, cost, wait = ws_rr(self.problem, self.placement, client,
                                   states, cache=self._route_cache)
         if route is None:

@@ -1,15 +1,21 @@
 from repro.sim.cluster import (A100, MIG, clustered_scenario,
                                scattered_scenario)
-from repro.sim.simulator import (ALGORITHMS, SimConfig, SimResult,
-                                 run_comparison, simulate)
+from repro.sim.simulator import (ALGORITHMS, SIM_MODES, ChurnResult,
+                                 SimConfig, SimResult, run_comparison,
+                                 simulate, simulate_churn)
 from repro.sim.topologies import (TOPOLOGY_SPECS, Topology, make_topology,
                                   place_servers)
-from repro.sim.workload import (Request, burst_requests, poisson_requests,
+from repro.sim.workload import (ChurnEvent, Request, RequestBatch,
+                                burst_requests, bursty_requests,
+                                churn_schedule, diurnal_rate,
+                                diurnal_requests, poisson_requests,
                                 prompts_for)
 
 __all__ = [
-    "A100", "ALGORITHMS", "MIG", "Request", "SimConfig", "SimResult",
-    "TOPOLOGY_SPECS", "Topology", "burst_requests", "clustered_scenario",
+    "A100", "ALGORITHMS", "MIG", "ChurnEvent", "ChurnResult", "Request",
+    "RequestBatch", "SIM_MODES", "SimConfig", "SimResult", "TOPOLOGY_SPECS",
+    "Topology", "burst_requests", "bursty_requests", "churn_schedule",
+    "clustered_scenario", "diurnal_rate", "diurnal_requests",
     "make_topology", "place_servers", "poisson_requests", "prompts_for",
-    "run_comparison", "scattered_scenario", "simulate",
+    "run_comparison", "scattered_scenario", "simulate", "simulate_churn",
 ]

@@ -21,11 +21,27 @@ per-family block weights ``LLMSpec.block_tau`` (zamba2 hybrids, enc-dec) —
 the same weighted eq. (1) the engine's virtual clock uses, so
 engine-vs-simulator cross-validation holds on hybrid topologies
 (``benchmarks/engine_validation.py`` ``xval.hybrid.R{4,8}``).
+
+Two execution modes (``SimConfig.sim_mode``), same results:
+
+* ``"reference"`` — the original per-request loop, kept verbatim as the
+  bit-exact twin (the ``decode_mode="serial"`` pattern).
+* ``"fast"`` — the array-native event engine for planet-scale traces
+  (``sim.tput.1M`` in BENCH_engine.json): a retirement heap + per-server
+  running usage counters keep a contention-free O(1) fast path per
+  arrival, the ``_Timeline`` prunes dead intervals behind the trace
+  frontier, and eq. (20) state is consumed as :class:`ServerStateArrays`
+  instead of per-arrival dict rebuilds.  Per-request rows, routes, start
+  times, drops and every ``SimResult`` metric are EXACTLY equal to the
+  reference mode (tests/test_simulator.py parity matrix); only
+  ``decision_time_s`` (wall clock) differs.  See docs/concurrency.md
+  "Planet-scale simulation".
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -36,12 +52,17 @@ from repro.core.placement import (auto_R, cg_bp, max_feasible_R,
                                   optimized_number_bp, optimized_order_bp,
                                   petals_bp, petals_m)
 from repro.core.routing import (RouteCostCache, ServerState,
-                                edge_waiting_times, petals_route,
-                                shortest_path_route, ws_rr)
-from repro.sim.workload import Request, poisson_requests
+                                ServerStateArrays, edge_waiting_times,
+                                petals_route, shortest_path_route, ws_rr)
+from repro.sim.workload import ChurnEvent, Request, RequestBatch, \
+    poisson_requests
 
 ALGORITHMS = ("petals", "proposed", "optimized_order", "optimized_number",
               "optimized_rr")
+
+SIM_MODES = ("reference", "fast")
+
+Trace = Union[Sequence[Request], RequestBatch]
 
 
 @dataclass
@@ -53,6 +74,16 @@ class SimConfig:
     R: Optional[int] = None  # design concurrency (None = auto rule)
     backoff_max: float = 60.0
     client: int = 0
+    # multi-client auto-generated traces: draw the issuing client uniformly
+    # from range(n_clients) per request (None = all from ``client``)
+    n_clients: Optional[int] = None
+    # "reference" = original per-request loop (bit-exact twin);
+    # "fast" = array-native event engine, identical rows/metrics
+    sim_mode: str = "reference"
+    # False skips per-request row dicts (fast mode's 1M-request traces):
+    # metrics are computed from preallocated arrays with the same np.mean
+    # reduction, SimResult.requests comes back empty
+    collect_rows: bool = True
 
 
 @dataclass
@@ -64,8 +95,11 @@ class SimResult:
     wait: float
     drop_rate: float
     decision_time_s: float  # algorithm running time (Table 6)
-    placement: Placement = None
+    placement: Optional[Placement] = None
     requests: List[Dict] = field(default_factory=list)
+    sim_mode: str = "reference"
+    # fast mode only: contention-free vs re-decided arrivals etc.
+    fast_stats: Optional[Dict[str, int]] = None
 
 
 class _Timeline:
@@ -75,11 +109,22 @@ class _Timeline:
     ``usage_max`` — the inner loop of every ``fits()`` probe — is a fully
     vectorized sweep: clip the overlapping intervals to the window, lexsort
     the ±k events by (time, delta) exactly like the old per-tuple sort, and
-    take the max of the running ``cumsum``.  The old implementation built
-    and re-sorted a Python event list per call, which made admission
-    quadratic in the number of committed sessions — this keeps the
-    "light-weight CPU-only simulator for large deployments" claim honest at
-    thousands of requests (``BENCH_engine.json`` ``sim.tput``).
+    take the max of the running ``cumsum``.
+
+    Two event-engine refinements keep probes O(live intervals) instead of
+    O(trace) on long runs:
+
+    * **Buffered commits** — ``commit`` appends to per-server Python lists
+      and probes flush them into the numpy arrays in bulk, so the fast
+      loop's contention-free arrivals never pay per-element numpy writes.
+    * **Frontier pruning** — the driver advances ``frontier`` to the
+      current arrival time; once every future probe window starts at or
+      after the frontier (arrivals nondecreasing — the fast loop checks),
+      intervals with ``end <= frontier`` can never overlap a probe window,
+      appear among ``earliest_start`` candidates, or survive a
+      ``states_at`` view, so ``_flush`` compacts them away instead of
+      growing.  With ``frontier = -inf`` (reference mode) nothing is ever
+      pruned and behavior is the original amortized doubling.
     """
 
     def __init__(self, problem: Problem, placement: Placement):
@@ -94,10 +139,46 @@ class _Timeline:
         self._end = [np.empty(8) for _ in range(n)]
         self._k = [np.empty(8, np.int64) for _ in range(n)]
         self._n = [0] * n
+        self._pend: List[List[Tuple[float, float, int]]] = \
+            [[] for _ in range(n)]
+        self.frontier = -np.inf
+        self.compactions = 0
+
+    def _flush(self, j: int):
+        pend = self._pend[j]
+        if not pend:
+            return
+        nj = self._n[j]
+        p = len(pend)
+        if nj + p > len(self._start[j]):
+            live = self._end[j][:nj] > self.frontier
+            nl = int(live.sum())
+            if nl < nj:  # compact dead intervals behind the frontier
+                self._start[j][:nl] = self._start[j][:nj][live]
+                self._end[j][:nl] = self._end[j][:nj][live]
+                self._k[j][:nl] = self._k[j][:nj][live]
+                nj = nl
+                self.compactions += 1
+            if nj + p > len(self._start[j]):  # amortized growth
+                new_cap = max(8, len(self._start[j]))
+                while new_cap < nj + p:
+                    new_cap *= 2
+                for arrs in (self._start, self._end, self._k):
+                    new = np.empty(new_cap, arrs[j].dtype)
+                    new[:nj] = arrs[j][:nj]
+                    arrs[j] = new
+        cols = np.array(pend)  # (p, 3); k column is exact small ints
+        self._start[j][nj:nj + p] = cols[:, 0]
+        self._end[j][nj:nj + p] = cols[:, 1]
+        self._k[j][nj:nj + p] = cols[:, 2]
+        self._n[j] = nj + p
+        pend.clear()
 
     @property
     def commits(self) -> List[List[Tuple[float, float, int]]]:
         """Per-server [(start, end, k_blocks)] view of the event arrays."""
+        for j in range(self.problem.n_servers):
+            self._flush(j)
         return [list(zip(self._start[j][: self._n[j]].tolist(),
                          self._end[j][: self._n[j]].tolist(),
                          self._k[j][: self._n[j]].tolist()))
@@ -105,6 +186,7 @@ class _Timeline:
 
     def usage_max(self, j: int, t0: float, t1: float) -> int:
         """Max concurrent slot usage on server j over [t0, t1)."""
+        self._flush(j)
         n = self._n[j]
         if n == 0:
             return 0
@@ -128,6 +210,7 @@ class _Timeline:
     def earliest_start(self, route: Route, t: float, dur: float) -> float:
         cands = {t}
         for j in route.servers:
+            self._flush(j)
             n = self._n[j]
             s, e = self._start[j][:n], self._end[j][:n]
             cands.update(e[e > t].tolist())
@@ -138,24 +221,15 @@ class _Timeline:
         return np.inf
 
     def commit(self, route: Route, start: float, dur: float):
+        end = start + dur
         for j, k in zip(route.servers, route.blocks):
-            n = self._n[j]
-            if n == len(self._start[j]):  # amortized growth
-                self._start[j] = np.concatenate(
-                    [self._start[j], np.empty_like(self._start[j])])
-                self._end[j] = np.concatenate(
-                    [self._end[j], np.empty_like(self._end[j])])
-                self._k[j] = np.concatenate(
-                    [self._k[j], np.empty_like(self._k[j])])
-            self._start[j][n] = start
-            self._end[j][n] = start + dur
-            self._k[j][n] = k
-            self._n[j] = n + 1
+            self._pend[j].append((start, end, k))
 
     def states_at(self, t: float) -> Dict[int, ServerState]:
         """eq (20) view: active-or-committed sessions as (remaining, k)."""
         states: Dict[int, ServerState] = {}
         for j in range(self.problem.n_servers):
+            self._flush(j)
             n = self._n[j]
             live = self._end[j][:n] > t
             if live.any():
@@ -163,6 +237,21 @@ class _Timeline:
                     (self._end[j][:n][live] - t).tolist(),
                     self._k[j][:n][live].tolist())
         return states
+
+    def states_arrays_at(self, t: float) -> ServerStateArrays:
+        """``states_at`` in SoA form — same live sessions, same float
+        remainings, consumed by the vectorized ``edge_waiting_times``."""
+        out = ServerStateArrays(self.problem.n_servers)
+        for j in range(self.problem.n_servers):
+            self._flush(j)
+            n = self._n[j]
+            if n == 0:
+                continue
+            ends = self._end[j][:n]
+            live = ends > t
+            if live.any():
+                out.set(j, ends[live] - t, self._k[j][:n][live])
+        return out
 
 
 def _backoff_attempts(t: float, horizon: float, cap: float):
@@ -176,7 +265,7 @@ def _backoff_attempts(t: float, horizon: float, cap: float):
 
 
 def _make_placement(problem: Problem, cfg: SimConfig, join_order
-                    ) -> Tuple[Placement, int]:
+                    ) -> Tuple[Placement, int, float]:
     import time as _time
 
     t0 = _time.perf_counter()
@@ -202,24 +291,16 @@ def _make_placement(problem: Problem, cfg: SimConfig, join_order
     return placement, R, dt
 
 
-def simulate(problem: Problem, cfg: SimConfig,
-             requests: Optional[List[Request]] = None) -> SimResult:
+def _reference_loop(problem: Problem, cfg: SimConfig, placement: Placement,
+                    requests: Trace, tl: _Timeline,
+                    route_cache: RouteCostCache) -> Tuple[List[Dict], float]:
+    """The original per-request admission loop, verbatim — the bit-exact
+    twin every fast-path decision is tested against."""
     import time as _time
 
-    rng = np.random.default_rng(cfg.seed + 1)
-    join_order = rng.permutation(problem.n_servers)  # random join (§4.1)
-    placement, R, place_time = _make_placement(problem, cfg, join_order)
-    if requests is None:
-        requests = poisson_requests(cfg.n_requests, cfg.rate,
-                                    client=cfg.client, seed=cfg.seed)
-    tl = _Timeline(problem, placement)
-    rows = []
-    decision_time = place_time
+    rows: List[Dict] = []
+    decision_time = 0.0
     lw = problem.workload
-    # placement is fixed for the whole trace: memoize the routing graph /
-    # edge costs / slot capacities across arrivals (same cache the online
-    # controller uses)
-    route_cache = RouteCostCache(problem, placement)
     for req in requests:
         t = req.arrival
         t0 = _time.perf_counter()
@@ -268,44 +349,390 @@ def simulate(problem: Problem, cfg: SimConfig,
             per_token_rest=per_tok, total=wait + dur,
             per_token_all=(wait + dur) / lw.l_out,
             hops=len(route.servers)))
+    return rows, decision_time
 
-    ok = [r for r in rows if not r.get("drop")]
-    drop_rate = 1.0 - len(ok) / max(1, len(rows))
-    mean = lambda k: float(np.mean([r[k] for r in ok])) if ok else np.inf
+
+def _fast_loop(problem: Problem, cfg: SimConfig, placement: Placement,
+               requests: Trace, tl: _Timeline, route_cache: RouteCostCache):
+    """Array-native event engine.  Exactness argument, hop by hop:
+
+    * **Retirement heap + usage counters.**  ``used[j]`` tracks the summed
+      blocks of committed sessions with ``end > t`` (lazy retirement off a
+      global ``(end, j, k)`` heap) — exactly the sessions ``states_at(t)``
+      reports, including not-yet-started commitments.
+
+    * **Contention-free routing.**  ``free_j >= zero_wait_kthr[j]`` on
+      every server makes the full eq. (20) wait matrix equal the
+      empty-system matrix elementwise (``RouteCostCache.zero_wait_kthr``),
+      so the reference's per-arrival WS-RR DP (or online MILP) would
+      receive numerically identical inputs — its decision is the memoized
+      per-client base decision.  Any tight server drops to the slow path,
+      which runs the decision on ``states_arrays_at(t)`` (bit-identical
+      wait matrices vs the dict view).
+
+    * **Admission.**  ``used[j] + k <= cap[j]`` on every hop implies the
+      reference's ``usage_max(j, t, t+dur) + k <= cap[j]`` (usage over any
+      window is at most the live total), and since ``t`` is the first
+      ``earliest_start`` candidate, ``earliest = t`` and backoff's first
+      attempt ``u = t`` succeeds — ``start = t`` on both paths.  Otherwise
+      the exact (pruned) ``earliest_start``/``fits`` probes run.
+
+    Requires nondecreasing arrivals (needed for frontier pruning and lazy
+    retirement); returns None to fall back to the reference loop if the
+    trace is unsorted.
+    """
+    import time as _time
+
+    if isinstance(requests, RequestBatch):
+        arr_t, arr_c = requests.arrival, requests.client
+    else:
+        arr_t = np.asarray([r.arrival for r in requests], float)
+        arr_c = np.asarray([r.client for r in requests], np.int64)
+    N = int(len(arr_t))
+    if N and bool(np.any(np.diff(arr_t) < 0)):
+        return None
+
+    t_loop = _time.perf_counter()
+    alg = cfg.algorithm
+    l_out = problem.workload.l_out
+    l_out_m1 = l_out - 1
+    n = problem.n_servers
+    cap = tl.cap.tolist()
+    slots = route_cache.total_slots.tolist()
+    kthr = route_cache.zero_wait_kthr.tolist()
+    # state-oblivious algorithms never re-decide under contention
+    state_free = alg not in ("proposed", "optimized_rr")
+    used = [0] * n
+    tight = [False] * n
+    n_tight = 0
+    heap: List[Tuple[float, int, int]] = []
+    heappush, heappop = heapq.heappush, heapq.heappop
+    inf = np.inf
+    isfinite = np.isfinite
+
+    # memoized per-client base decisions and per-(client, route) timings;
+    # False marks a memoized drop (no feasible route)
+    base_dec: Dict[int, object] = {}
+    route_info: Dict[Tuple[int, Tuple[int, ...]], tuple] = {}
+
+    def _route_info(c: int, route: Route):
+        key = (c, route.servers)
+        info = route_info.get(key)
+        if info is None:
+            prefill, per_tok = route_cache.route_times(c, route)
+            dur = prefill + l_out_m1 * per_tok
+            info = (route, list(zip(route.servers, route.blocks)),
+                    prefill, per_tok, dur, len(route.servers))
+            route_info[key] = info
+        return info
+
+    def _base_decision(c: int):
+        info = base_dec.get(c)
+        if info is None:
+            if alg == "proposed":
+                route, _ = route_cache.base_ws_rr(c)
+            elif alg == "optimized_rr":
+                route, _ = solve_online_routing(
+                    problem, placement, c, route_cache.empty_waiting())
+                if route is None:
+                    route = route_cache.petals(c)
+            else:
+                route = route_cache.petals(c)
+            info = _route_info(c, route) if route is not None else False
+            base_dec[c] = info
+        return info
+
+    collect = cfg.collect_rows
+    rows: Optional[List[Dict]] = [] if collect else None
+    if not collect:
+        m_wait = np.empty(N)
+        m_ft = np.empty(N)
+        m_ptr = np.empty(N)
+        m_pta = np.empty(N)
+    n_ok = 0
+    n_fast = 0
+    n_slow = 0
+    n_drop = 0
+
+    ts = arr_t.tolist()
+    cs = arr_c.tolist()
+    for i in range(N):
+        t = ts[i]
+        c = cs[i]
+        tl.frontier = t
+        while heap and heap[0][0] <= t:
+            _, j, k = heappop(heap)
+            u = used[j] - k
+            used[j] = u
+            if tight[j] and slots[j] - u >= kthr[j]:
+                tight[j] = False
+                n_tight -= 1
+        if state_free or n_tight == 0:
+            info = _base_decision(c)
+            n_fast += 1
+        else:
+            n_slow += 1
+            if alg == "proposed":
+                route, _, _ = ws_rr(problem, placement, c,
+                                    tl.states_arrays_at(t), cache=route_cache)
+            else:  # optimized_rr
+                waiting = edge_waiting_times(
+                    problem, placement, tl.states_arrays_at(t),
+                    cache=route_cache)
+                route, _ = solve_online_routing(problem, placement, c,
+                                                waiting)
+                if route is None:
+                    route = route_cache.petals(c)
+            info = _route_info(c, route) if route is not None else False
+        if info is False:
+            n_drop += 1
+            if collect:
+                rows.append(dict(drop=True))
+            continue
+        route, hops, prefill, per_tok, dur, n_hops = info
+        fits_now = True
+        for j, k in hops:
+            if used[j] + k > cap[j]:
+                fits_now = False
+                break
+        if fits_now:
+            start = t
+        else:
+            earliest = tl.earliest_start(route, t, dur)
+            if not isfinite(earliest):
+                n_drop += 1
+                if collect:
+                    rows.append(dict(drop=True))
+                continue
+            if alg == "proposed":
+                start = earliest
+            else:
+                start = inf
+                for u in _backoff_attempts(t, horizon=earliest - t + 130.0,
+                                           cap=cfg.backoff_max):
+                    if u >= earliest and tl.fits(route, u, dur):
+                        start = u
+                        break
+                if not isfinite(start):
+                    start = earliest
+        end = start + dur
+        tl.commit(route, start, dur)
+        for j, k in hops:
+            u = used[j] + k
+            used[j] = u
+            if not tight[j] and slots[j] - u < kthr[j]:
+                tight[j] = True
+                n_tight += 1
+            heappush(heap, (end, j, k))
+        wait = start - t
+        if collect:
+            rows.append(dict(
+                drop=False, wait=wait, first_token=wait + prefill,
+                per_token_rest=per_tok, total=wait + dur,
+                per_token_all=(wait + dur) / l_out,
+                hops=n_hops))
+        else:
+            m_wait[n_ok] = wait
+            m_ft[n_ok] = wait + prefill
+            m_ptr[n_ok] = per_tok
+            m_pta[n_ok] = (wait + dur) / l_out
+        n_ok += 1
+
+    decision_time = _time.perf_counter() - t_loop
+    stats = dict(fast_routes=n_fast, slow_routes=n_slow, drops=n_drop,
+                 compactions=tl.compactions)
+    if collect:
+        return rows, None, decision_time, stats
+    arrays = (n_ok, N, m_wait, m_ft, m_ptr, m_pta)
+    return None, arrays, decision_time, stats
+
+
+def simulate(problem: Problem, cfg: SimConfig,
+             requests: Optional[Trace] = None) -> SimResult:
+    if cfg.sim_mode not in SIM_MODES:
+        raise ValueError(f"sim_mode must be one of {SIM_MODES}, "
+                         f"got {cfg.sim_mode!r}")
+    rng = np.random.default_rng(cfg.seed + 1)
+    join_order = rng.permutation(problem.n_servers)  # random join (§4.1)
+    placement, R, place_time = _make_placement(problem, cfg, join_order)
+    if requests is None:
+        requests = poisson_requests(cfg.n_requests, cfg.rate,
+                                    client=cfg.client, seed=cfg.seed,
+                                    n_clients=cfg.n_clients)
+    tl = _Timeline(problem, placement)
+    # placement is fixed for the whole trace: memoize the routing graph /
+    # edge costs / slot capacities across arrivals (same cache the online
+    # controller uses)
+    route_cache = RouteCostCache(problem, placement)
+
+    out = None
+    if cfg.sim_mode == "fast":
+        out = _fast_loop(problem, cfg, placement, requests, tl, route_cache)
+    fast_stats = None
+    arrays = None
+    if out is None:  # reference mode, or fast fell back (unsorted trace)
+        rows, decision_time = _reference_loop(problem, cfg, placement,
+                                              requests, tl, route_cache)
+    else:
+        rows, arrays, decision_time, fast_stats = out
+    decision_time += place_time
+
+    if rows is not None:
+        ok = [r for r in rows if not r.get("drop")]
+        drop_rate = 1.0 - len(ok) / max(1, len(rows))
+        mean = lambda k: float(np.mean([r[k] for r in ok])) if ok else np.inf
+        per_token_all = mean("per_token_all")
+        first_token = mean("first_token")
+        per_token_rest = mean("per_token_rest")
+        wait = mean("wait")
+    else:
+        n_ok, n_total, m_wait, m_ft, m_ptr, m_pta = arrays
+        drop_rate = 1.0 - n_ok / max(1, n_total)
+        # identical reduction to the rows path: np.mean over the same
+        # float sequence (pairwise summation depends only on the values)
+        mean = lambda a: float(np.mean(a[:n_ok])) if n_ok else np.inf
+        per_token_all = mean(m_pta)
+        first_token = mean(m_ft)
+        per_token_rest = mean(m_ptr)
+        wait = mean(m_wait)
+        rows = []
     return SimResult(
         algorithm=cfg.algorithm,
-        per_token_all=mean("per_token_all"),
-        first_token=mean("first_token"),
-        per_token_rest=mean("per_token_rest"),
-        wait=mean("wait"),
+        per_token_all=per_token_all,
+        first_token=first_token,
+        per_token_rest=per_token_rest,
+        wait=wait,
         drop_rate=drop_rate,
         decision_time_s=decision_time / max(1, len(requests)),
         placement=placement,
         requests=rows,
+        # the EXECUTED mode: "reference" when fast fell back (unsorted)
+        sim_mode="fast" if out is not None else "reference",
+        fast_stats=fast_stats,
     )
 
 
 def run_comparison(problem: Problem, algorithms=("petals", "proposed"),
                    n_requests: int = 100, rate: float = 0.1,
-                   seeds=(0, 1, 2, 3, 4), R: Optional[int] = None
+                   seeds=(0, 1, 2, 3, 4), R: Optional[int] = None,
+                   n_clients: Optional[int] = None,
+                   sim_mode: str = "reference"
                    ) -> Dict[str, Dict[str, float]]:
-    """Monte-Carlo comparison (paper: 5 experiment / 20 sim runs)."""
+    """Monte-Carlo comparison (paper: 5 experiment / 20 sim runs).
+
+    Every metric column comes with a ``<metric>_std`` companion — the
+    across-seed standard deviation matching the paper's reported
+    Monte-Carlo spreads.  ``n_clients`` draws each request's issuing
+    client uniformly (multi-client traces in one call); ``sim_mode``
+    selects the event engine (results are identical, see ``SimConfig``).
+    """
     out = {}
+    metric_names = ("per_token_all", "first_token", "per_token_rest",
+                    "wait", "decision_time_s", "drop_rate")
     for alg in algorithms:
         metrics = []
         for seed in seeds:
             res = simulate(problem, SimConfig(
                 algorithm=alg, n_requests=n_requests, rate=rate, seed=seed,
-                R=R))
+                R=R, n_clients=n_clients, sim_mode=sim_mode))
             metrics.append(res)
-        out[alg] = {
-            "per_token_all": float(np.mean([m.per_token_all for m in metrics])),
-            "first_token": float(np.mean([m.first_token for m in metrics])),
-            "per_token_rest": float(np.mean([m.per_token_rest
-                                             for m in metrics])),
-            "wait": float(np.mean([m.wait for m in metrics])),
-            "decision_time_s": float(np.mean([m.decision_time_s
-                                              for m in metrics])),
-            "drop_rate": float(np.mean([m.drop_rate for m in metrics])),
-        }
+        row: Dict[str, float] = {}
+        for name in metric_names:
+            vals = [getattr(m, name) for m in metrics]
+            row[name] = float(np.mean(vals))
+            row[name + "_std"] = float(np.std(vals))
+        out[alg] = row
     return out
+
+
+# ---------------------------------------------------------------------------
+# Churn studies: join/leave storms through the online controller
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ChurnResult:
+    """Outcome of :func:`simulate_churn` — fleet-health metrics for the
+    join/leave-storm studies (``sim.churn`` in BENCH_engine.json)."""
+
+    n_requests: int
+    n_storms: int
+    n_replacements: int  # CG-BP re-runs == RouteCostCache invalidations
+    drop_rate: float
+    wait: float
+    per_token_all: float
+    alive_min: int  # smallest fleet the controller placed over
+
+
+def _problem_with_dead(problem: Problem, dead) -> Problem:
+    """Model departed servers as 0-memory hosts: CG-BP then places no
+    blocks on them (the same modeling tests/test_routing_online.py uses
+    for elastic replacement)."""
+    import dataclasses
+
+    servers = [dataclasses.replace(s, mem_bytes=0.0) if j in dead else s
+               for j, s in enumerate(problem.servers)]
+    return Problem(problem.llm, servers, problem.n_clients,
+                   problem.rtt_token, problem.rtt_prefill, problem.workload)
+
+
+def simulate_churn(problem: Problem, requests: Trace,
+                   schedule: Sequence[ChurnEvent], R: Optional[int] = None,
+                   reopt_min_interval: float = 0.0) -> ChurnResult:
+    """Drive :class:`repro.core.OnlineBPRR` through a request trace while
+    ``schedule``'s join/leave storms mutate the fleet.
+
+    Each storm marks the fleet dirty; at the next arrival at least
+    ``reopt_min_interval`` after the previous re-optimization, the
+    controller re-runs CG-BP over the surviving servers via
+    ``replace_servers`` — which REPLACES its ``RouteCostCache``, the
+    cache-invalidation path this study exists to exercise (storms landing
+    within the cadence window coalesce into one re-placement).  Requests
+    the WS-RR DP cannot route on the current placement are drops.
+    """
+    from repro.core.online import OnlineBPRR
+
+    ctl = OnlineBPRR(problem, R=R)
+    events = sorted(schedule, key=lambda ev: ev.time)
+    l_out = problem.workload.l_out
+    dead: set = set()
+    ei = 0
+    dirty = False
+    last_reopt = -np.inf
+    n_repl = 0
+    alive_min = problem.n_servers
+    n_total = 0
+    n_ok = 0
+    sum_wait = 0.0
+    sum_pta = 0.0
+    for req in requests:
+        t = req.arrival
+        n_total += 1
+        while ei < len(events) and events[ei].time <= t:
+            ev = events[ei]
+            ei += 1
+            dead.difference_update(ev.join)
+            dead.update(ev.leave)
+            dirty = True
+        if dirty and t - last_reopt >= reopt_min_interval:
+            ctl.replace_servers(_problem_with_dead(problem, dead))
+            n_repl += 1
+            last_reopt = t
+            dirty = False
+            alive_min = min(alive_min, problem.n_servers - len(dead))
+        ctl.gc(t)
+        route, start, end, _ = ctl.admit(req.client, t)
+        if route is None or not np.isfinite(start):
+            continue
+        n_ok += 1
+        sum_wait += start - t
+        sum_pta += (end - t) / l_out
+    return ChurnResult(
+        n_requests=n_total,
+        n_storms=ei,
+        n_replacements=n_repl,
+        drop_rate=1.0 - n_ok / max(1, n_total),
+        wait=sum_wait / n_ok if n_ok else np.inf,
+        per_token_all=sum_pta / n_ok if n_ok else np.inf,
+        alive_min=alive_min,
+    )

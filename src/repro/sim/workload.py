@@ -10,7 +10,7 @@ processes on the two paths.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -20,6 +20,47 @@ class Request:
     rid: int
     client: int
     arrival: float
+
+
+@dataclass(frozen=True)
+class RequestBatch:
+    """Array-backed request trace — the SoA twin of ``List[Request]``.
+
+    The fast simulator loop (``SimConfig(sim_mode="fast")``) reads the
+    ``arrival``/``client`` arrays directly; iterating a batch yields plain
+    :class:`Request` objects with the identical float arrivals, so the
+    reference loop (and the serving engine's trace replay) consumes the
+    same batch unchanged — one trace object, two execution paths."""
+
+    arrival: np.ndarray
+    client: np.ndarray
+    rid: np.ndarray
+
+    def __post_init__(self):
+        object.__setattr__(self, "arrival", np.asarray(self.arrival, float))
+        object.__setattr__(self, "client", np.asarray(self.client, np.int64))
+        object.__setattr__(self, "rid", np.asarray(self.rid, np.int64))
+        if not (self.arrival.shape == self.client.shape == self.rid.shape
+                and self.arrival.ndim == 1):
+            raise ValueError("RequestBatch arrays must be 1-D of equal length")
+
+    def __len__(self) -> int:
+        return int(self.arrival.shape[0])
+
+    def __iter__(self):
+        for rid, c, t in zip(self.rid.tolist(), self.client.tolist(),
+                             self.arrival.tolist()):
+            yield Request(rid=rid, client=c, arrival=t)
+
+    def to_requests(self) -> List[Request]:
+        return list(self)
+
+    @staticmethod
+    def from_requests(requests: Sequence[Request]) -> "RequestBatch":
+        return RequestBatch(
+            arrival=np.asarray([r.arrival for r in requests], float),
+            client=np.asarray([r.client for r in requests], np.int64),
+            rid=np.asarray([r.rid for r in requests], np.int64))
 
 
 def poisson_requests(n_requests: int, rate: float, client: int = 0,
@@ -65,6 +106,85 @@ def bursty_requests(n_bursts: int, burst_size: int, spacing: float,
             out.append(Request(rid=rid, client=client, arrival=t))
             rid += 1
     return out
+
+
+def diurnal_rate(t, base_rate: float, peak_rate: float,
+                 period: float, t0: float = 0.0):
+    """λ(t) of the diurnal arrival process: a sinusoidal day curve with
+    valley ``base_rate`` at ``t0`` and peak ``peak_rate`` half a period
+    later (the planet-scale load shape: overnight trough, midday rush)."""
+    x = 2.0 * np.pi * (np.asarray(t, float) - t0) / period
+    return base_rate + (peak_rate - base_rate) * 0.5 * (1.0 - np.cos(x))
+
+
+def diurnal_requests(n_requests: int, base_rate: float, peak_rate: float,
+                     period: float = 86400.0, client: int = 0, seed: int = 0,
+                     n_clients: Optional[int] = None,
+                     t0: float = 0.0) -> RequestBatch:
+    """Nonhomogeneous Poisson arrivals with the :func:`diurnal_rate` curve,
+    sampled by thinning (Lewis–Shedler): candidate arrivals from a
+    homogeneous process at ``peak_rate`` are kept with probability
+    λ(t)/peak_rate.  Generated fully vectorized in chunks, so 1M-request
+    traces are cheap; returns a :class:`RequestBatch`."""
+    if not (0.0 <= base_rate <= peak_rate) or peak_rate <= 0.0:
+        raise ValueError("need 0 <= base_rate <= peak_rate, peak_rate > 0")
+    rng = np.random.default_rng(seed)
+    lam_max = float(peak_rate)
+    chunk = int(min(max(1024, 2 * n_requests), 1 << 20))
+    kept: List[np.ndarray] = []
+    total = 0
+    t_cur = float(t0)
+    while total < n_requests:
+        ts = t_cur + np.cumsum(rng.exponential(1.0 / lam_max, size=chunk))
+        t_cur = float(ts[-1])
+        accept = (rng.uniform(size=chunk) * lam_max
+                  < diurnal_rate(ts, base_rate, peak_rate, period, t0))
+        keep = ts[accept]
+        kept.append(keep)
+        total += len(keep)
+    times = np.concatenate(kept)[:n_requests]
+    if n_clients is not None:
+        clients = rng.integers(0, n_clients, size=n_requests)
+    else:
+        clients = np.full(n_requests, client)
+    return RequestBatch(arrival=times, client=clients,
+                        rid=np.arange(n_requests))
+
+
+@dataclass(frozen=True)
+class ChurnEvent:
+    """One churn storm: at ``time``, servers in ``join`` come back online
+    and servers in ``leave`` drop out (applied join-first, so a server may
+    rejoin and immediately leave again in the same storm)."""
+
+    time: float
+    leave: Tuple[int, ...] = ()
+    join: Tuple[int, ...] = ()
+
+
+def churn_schedule(n_servers: int, n_storms: int, storm_size: int,
+                   first: float = 60.0, spacing: float = 60.0, seed: int = 0,
+                   protect: Sequence[int] = ()) -> List[ChurnEvent]:
+    """Timed join/leave storms for elastic-fleet studies: each storm
+    revives the previous storm's victims and knocks out ``storm_size``
+    fresh random servers (never those in ``protect``), keeping the fleet
+    size roughly constant between storms.  Feed the schedule to
+    ``repro.sim.simulate_churn``, which maps each storm onto
+    ``OnlineBPRR.replace_servers`` (the ``RouteCostCache`` invalidation
+    path)."""
+    rng = np.random.default_rng(seed)
+    pool = np.asarray([j for j in range(n_servers) if j not in set(protect)])
+    if storm_size > len(pool):
+        raise ValueError("storm_size exceeds the non-protected fleet")
+    events: List[ChurnEvent] = []
+    down: Tuple[int, ...] = ()
+    for s in range(n_storms):
+        leave = tuple(sorted(int(j) for j in
+                             rng.choice(pool, size=storm_size, replace=False)))
+        events.append(ChurnEvent(time=first + s * spacing,
+                                 leave=leave, join=down))
+        down = leave
+    return events
 
 
 def prompts_for(requests: Sequence[Request], l_in: int, vocab_size: int,

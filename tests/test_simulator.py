@@ -1,13 +1,23 @@
-"""Simulator invariants: determinism, memory-cap safety, and the paper's
-headline claims (proposed beats PETALS; first-token dominated)."""
+"""Simulator invariants: determinism, memory-cap safety, the paper's
+headline claims (proposed beats PETALS; first-token dominated), and the
+fast-vs-reference exactness contract of the array-native event engine."""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import capacity
-from repro.sim import SimConfig, clustered_scenario, simulate
+from repro.core import (LLMSpec, Problem, ServerSpec, ServerState,
+                        ServerStateArrays, Workload, capacity, cg_bp,
+                        edge_waiting_times, petals_route)
+from repro.sim import (ALGORITHMS, SimConfig, clustered_scenario,
+                       run_comparison, simulate, simulate_churn)
 from repro.sim.simulator import _Timeline
 from repro.sim.topologies import TOPOLOGY_SPECS, make_topology
+from repro.sim.workload import (ChurnEvent, Request, RequestBatch,
+                                bursty_requests, churn_schedule,
+                                diurnal_rate, diurnal_requests,
+                                poisson_requests)
+
+SETTINGS = settings(max_examples=20, deadline=None)
 
 
 def test_deterministic():
@@ -67,3 +77,309 @@ def test_topologies_match_specs():
         lo, hi = spec["delay_ms"]
         assert delays.min() >= lo - 1e-6 and delays.max() <= hi + 1e-6
         assert np.isfinite(topo.rtt).all(), "topology must be connected"
+
+# ----------------------------------------------------------------------
+# fast-vs-reference exactness: the array-native event engine must be a
+# bit-exact twin of the per-request reference loop — same routes, same
+# starts, same drops, same metrics, on every algorithm and trace shape
+# ----------------------------------------------------------------------
+
+def _sim_problem(n_clients=1):
+    """The bench cross-validation topology (2 fast + 3 slow servers),
+    optionally with extra clients at slightly different RTTs."""
+    llm = LLMSpec("simx", 8, block_bytes=50.0, cache_bytes_per_token=0.5)
+    servers = [
+        ServerSpec(0, 500.0, 0.004, tau_prefill_base=0.002,
+                   tau_prefill_per_token=0.0005),
+        ServerSpec(1, 500.0, 0.004, tau_prefill_base=0.002,
+                   tau_prefill_per_token=0.0005),
+        ServerSpec(2, 260.0, 0.020, tau_prefill_base=0.004,
+                   tau_prefill_per_token=0.001),
+        ServerSpec(3, 260.0, 0.020, tau_prefill_base=0.004,
+                   tau_prefill_per_token=0.001),
+        ServerSpec(4, 260.0, 0.020, tau_prefill_base=0.004,
+                   tau_prefill_per_token=0.001),
+    ]
+    base = np.array([0.01, 0.01, 0.03, 0.03, 0.03])
+    rtt = np.stack([base * (1.0 + 0.2 * c) for c in range(n_clients)])
+    return Problem(llm, servers, n_clients, rtt, 3 * rtt,
+                   workload=Workload(8, 12))
+
+
+def _clustered(n_clients=1):
+    """Table-2 clustered deployment, optionally widened to several
+    clients at scaled RTTs (every algorithm finds real routes here)."""
+    prob, _ = clustered_scenario()
+    if n_clients == 1:
+        return prob
+    rtt_t = np.concatenate([prob.rtt_token * (1.0 + 0.2 * c)
+                            for c in range(n_clients)])
+    rtt_p = np.concatenate([prob.rtt_prefill * (1.0 + 0.2 * c)
+                            for c in range(n_clients)])
+    return Problem(prob.llm, prob.servers, n_clients, rtt_t, rtt_p,
+                   prob.workload)
+
+
+def _trace(kind):
+    if kind == "poisson":
+        return _clustered(), poisson_requests(40, 0.5, seed=1)
+    if kind == "bursty":
+        return _clustered(), bursty_requests(n_bursts=10, burst_size=4,
+                                             spacing=10.0)
+    if kind == "multi_client":
+        return (_clustered(n_clients=3),
+                poisson_requests(40, 0.5, seed=2, n_clients=3))
+    assert kind == "diurnal"
+    return _clustered(), diurnal_requests(60, 0.1, 1.5, period=60.0,
+                                          seed=3)
+
+
+def _run_mode(prob, alg, requests, mode, **kw):
+    return simulate(prob, SimConfig(algorithm=alg, n_requests=len(requests),
+                                    rate=1.0, seed=0, sim_mode=mode, **kw),
+                    requests=requests)
+
+
+METRICS = ("drop_rate", "wait", "first_token", "per_token_rest",
+           "per_token_all")
+
+
+@pytest.mark.parametrize("alg", ALGORITHMS)
+@pytest.mark.parametrize("kind", ["poisson", "bursty", "multi_client",
+                                  "diurnal"])
+def test_fast_matches_reference(kind, alg):
+    prob, requests = _trace(kind)
+    ref = _run_mode(prob, alg, requests, "reference")
+    fast = _run_mode(prob, alg, requests, "fast")
+    assert ref.sim_mode == "reference" and fast.sim_mode == "fast"
+    assert ref.drop_rate < 1.0  # the cell actually serves traffic
+    # exact per-request row equality: route hops, waits, every timing
+    assert ref.requests == fast.requests
+    for f in METRICS:
+        assert getattr(ref, f) == getattr(fast, f), f
+
+
+@pytest.mark.parametrize("alg", ["proposed", "optimized_number"])
+def test_fast_matches_reference_contended(alg):
+    """The bench cross-validation topology under load: waits are nonzero,
+    so the slow exact path (incremental eq. (20) state) is what must
+    agree, not just the memoized zero-wait decision."""
+    prob = _sim_problem()
+    requests = poisson_requests(40, 2.0, seed=1)
+    ref = _run_mode(prob, alg, requests, "reference", R=8)
+    fast = _run_mode(prob, alg, requests, "fast", R=8)
+    assert ref.drop_rate < 1.0
+    assert ref.requests == fast.requests
+    for f in METRICS:
+        assert getattr(ref, f) == getattr(fast, f), f
+
+
+def test_fast_matches_reference_all_dropped():
+    """Route-infeasible placements must drop identically in both modes
+    (the memoized base decision caches the drop too)."""
+    prob = _sim_problem()
+    requests = poisson_requests(10, 2.0, seed=1)
+    ref = _run_mode(prob, "petals", requests, "reference", R=8)
+    fast = _run_mode(prob, "petals", requests, "fast", R=8)
+    assert ref.drop_rate == fast.drop_rate == 1.0
+    assert ref.requests == fast.requests
+
+
+def test_fast_exercises_both_paths():
+    """The contended trace must hit the memoized zero-wait path AND the
+    exact slow path — otherwise the parity matrix proves less than it
+    claims."""
+    prob = _sim_problem()
+    requests = poisson_requests(40, 2.0, seed=1)
+    fast = _run_mode(prob, "proposed", requests, "fast", R=8)
+    st_ = fast.fast_stats
+    assert st_ is not None
+    assert st_["fast_routes"] > 0 and st_["slow_routes"] > 0, st_
+    assert st_["fast_routes"] + st_["slow_routes"] + st_["drops"] \
+        == len(requests)
+
+
+def test_fast_collect_rows_off_matches_metrics():
+    prob = _sim_problem()
+    requests = poisson_requests(40, 2.0, seed=1)
+    ref = _run_mode(prob, "proposed", requests, "reference", R=8)
+    fast = simulate(prob, SimConfig(algorithm="proposed",
+                                    n_requests=len(requests), rate=1.0,
+                                    seed=0, R=8, sim_mode="fast",
+                                    collect_rows=False),
+                    requests=requests)
+    assert fast.requests == []  # rows skipped, metrics array-backed
+    for f in METRICS:
+        assert getattr(ref, f) == getattr(fast, f), f
+
+
+def test_fast_falls_back_on_unsorted_trace():
+    """Nondecreasing arrivals are the frontier-pruning precondition; an
+    unsorted trace must transparently run the reference loop."""
+    prob, _ = _trace("poisson")
+    reqs = [Request(0, 0, 5.0), Request(1, 0, 1.0), Request(2, 0, 3.0)]
+    res = _run_mode(prob, "proposed", reqs, "fast")
+    assert res.sim_mode == "reference"
+    assert res.requests == _run_mode(prob, "proposed", reqs,
+                                     "reference").requests
+
+
+def test_simulate_rejects_unknown_mode():
+    prob, requests = _trace("poisson")
+    with pytest.raises(ValueError):
+        simulate(prob, SimConfig(algorithm="proposed", n_requests=5,
+                                 rate=1.0, seed=0, R=8, sim_mode="turbo"),
+                 requests=requests[:5])
+
+
+# ----------------------------------------------------------------------
+# incremental eq. (20) state: array twins and frontier pruning
+# ----------------------------------------------------------------------
+
+@SETTINGS
+@given(st.integers(0, 10_000))
+def test_edge_waiting_dict_vs_arrays(seed):
+    """edge_waiting_times must produce bit-identical matrices from the
+    classic dict-of-ServerState and the SoA ServerStateArrays."""
+    rng = np.random.default_rng(seed)
+    prob = _sim_problem()
+    pl, info = cg_bp(prob, 8)
+    assert info.feasible
+    states = {}
+    for j in range(prob.n_servers):
+        if rng.random() < 0.7:
+            m = int(rng.integers(1, 5))
+            states[j] = ServerState(
+                remaining=[float(x) for x in rng.exponential(1.0, m)],
+                blocks=[int(b) for b in rng.integers(1, 9, m)])
+    w_dict = edge_waiting_times(prob, pl, states)
+    arrays = ServerStateArrays.from_states(states, prob.n_servers)
+    w_arr = edge_waiting_times(prob, pl, arrays)
+    np.testing.assert_array_equal(w_dict, w_arr)
+    # and the round-trip preserves the states exactly
+    back = arrays.to_states()
+    assert set(back) == set(states)
+    for j in states:
+        assert back[j].remaining == [max(r, 0.0)
+                                     for r in states[j].remaining]
+        assert back[j].blocks == list(states[j].blocks)
+
+
+@SETTINGS
+@given(st.integers(0, 10_000))
+def test_timeline_pruned_matches_unpruned(seed):
+    """Frontier pruning + buffered commits must be probe-invisible: a
+    timeline with the frontier advanced (and compaction forced) answers
+    every probe at t >= frontier exactly like an untouched twin."""
+    rng = np.random.default_rng(seed)
+    prob = _sim_problem()
+    pl, info = cg_bp(prob, 8)
+    route = petals_route(prob, pl, 0)
+    assert route is not None
+    tl = _Timeline(prob, pl)
+    twin = _Timeline(prob, pl)
+    t = 0.0
+    for _ in range(60):
+        t += float(rng.exponential(0.3))
+        dur = float(0.1 + rng.exponential(1.0))
+        tl.frontier = t  # the fast loop's per-arrival advance
+        tl.commit(route, t, dur)
+        twin.commit(route, t, dur)
+    for j in range(prob.n_servers):
+        tl._flush(j)  # force compaction opportunities
+    probes = sorted(float(t * rng.uniform(0.0, 1.2)) for _ in range(8))
+    for u in probes:
+        if u < tl.frontier:
+            continue
+        for j in route.servers:
+            assert tl.usage_max(j, u, u + 0.5) == twin.usage_max(
+                j, u, u + 0.5)
+        assert tl.earliest_start(route, u, 0.5) == twin.earliest_start(
+            route, u, 0.5)
+        s_a, s_b = tl.states_at(u), twin.states_at(u)
+        assert set(s_a) == set(s_b)
+        for j in s_a:
+            assert sorted(zip(s_a[j].remaining, s_a[j].blocks)) \
+                == sorted(zip(s_b[j].remaining, s_b[j].blocks))
+        arr = tl.states_arrays_at(u).to_states()
+        assert set(arr) == set(s_a)
+        for j in arr:
+            assert arr[j].remaining == s_a[j].remaining
+            assert arr[j].blocks == s_a[j].blocks
+
+
+# ----------------------------------------------------------------------
+# array-backed traces and churn schedules
+# ----------------------------------------------------------------------
+
+@SETTINGS
+@given(st.integers(0, 10_000))
+def test_request_batch_round_trip(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 50))
+    reqs = poisson_requests(n, rate=2.0, seed=seed, n_clients=3)
+    batch = RequestBatch.from_requests(reqs)
+    assert len(batch) == n
+    assert batch.to_requests() == reqs  # exact floats, exact ids
+
+
+def test_diurnal_requests_shape():
+    batch = diurnal_requests(500, 1.0, 10.0, period=60.0, n_clients=4,
+                             seed=0)
+    assert len(batch) == 500
+    assert np.all(np.diff(batch.arrival) >= 0.0)
+    assert batch.client.min() >= 0 and batch.client.max() < 4
+    # valley rate ~base at t0, peak half a period later
+    assert diurnal_rate(0.0, 1.0, 10.0, 60.0) == pytest.approx(1.0)
+    assert diurnal_rate(30.0, 1.0, 10.0, 60.0) == pytest.approx(10.0)
+    with pytest.raises(ValueError):
+        diurnal_requests(10, 5.0, 1.0)  # base > peak
+
+
+def test_churn_schedule_invariants():
+    events = churn_schedule(20, n_storms=5, storm_size=3, first=10.0,
+                            spacing=5.0, seed=2, protect=(0, 1))
+    assert len(events) == 5
+    down = ()
+    for i, ev in enumerate(events):
+        assert ev.time == pytest.approx(10.0 + 5.0 * i)
+        assert len(ev.leave) == 3
+        assert not set(ev.leave) & {0, 1}  # protected servers never leave
+        assert ev.join == down  # previous victims revived first
+        down = ev.leave
+    with pytest.raises(ValueError):
+        churn_schedule(4, n_storms=1, storm_size=4, protect=(0,))
+
+
+def test_simulate_churn_smoke():
+    prob = _sim_problem(n_clients=2)
+    reqs = poisson_requests(60, rate=2.0, seed=5, n_clients=2)
+    sched = churn_schedule(prob.n_servers, n_storms=2, storm_size=1,
+                           first=8.0, spacing=8.0, seed=0, protect=(0, 1))
+    res = simulate_churn(prob, reqs, sched, R=8)
+    assert res.n_requests == 60
+    assert res.n_replacements >= 1  # storms actually re-placed
+    assert res.alive_min >= prob.n_servers - 1
+    assert 0.0 <= res.drop_rate <= 1.0
+
+
+# ----------------------------------------------------------------------
+# run_comparison: std-dev columns and multi-client threading
+# ----------------------------------------------------------------------
+
+def test_run_comparison_std_and_clients():
+    prob = _clustered(n_clients=3)
+    rows = run_comparison(prob, algorithms=("petals", "proposed"),
+                          n_requests=20, rate=0.5, seeds=(0, 1, 2),
+                          n_clients=3)
+    assert set(rows) == {"petals", "proposed"}
+    for row in rows.values():
+        for name in ("per_token_all", "first_token", "wait", "drop_rate"):
+            assert name in row and name + "_std" in row
+            assert row[name + "_std"] >= 0.0
+    # multi-client traffic really reached the simulator: a fresh
+    # single-client run differs from the n_clients=3 one
+    solo = run_comparison(prob, algorithms=("proposed",), n_requests=20,
+                          rate=0.5, seeds=(0, 1, 2))
+    assert solo["proposed"]["per_token_all"] \
+        != rows["proposed"]["per_token_all"]
