@@ -370,7 +370,7 @@ def shard_decode_throughput(n_sessions: int = 8, n_rounds: int = 4,
                for _ in range(n_sessions)]
 
     mesh = compat_make_mesh(mesh_shape, ("data", "model"))
-    out, toks, tau_cal = {}, {}, float("nan")
+    out, toks, tau_cal, group_chips = {}, {}, float("nan"), []
     for tag, m in (("twin", None), ("sharded", mesh)):
         system = GeoServingSystem(cfg, params, problem,
                                   algorithm="proposed", R=n_sessions,
@@ -393,12 +393,168 @@ def shard_decode_throughput(n_sessions: int = 8, n_rounds: int = 4,
         toks[tag] = [list(system.sessions[s].tokens) for s in sids]
         if tag == "sharded":
             tau_cal = float(min(system.calibrate_taus().values()))
+            group_chips = [system.servers[j].n_chips
+                           for j in sorted(system.servers)]
     assert toks["sharded"] == toks["twin"], \
         "device-group decode must emit the twin's token stream"
     return {"sharded_tok_s": out["sharded"], "twin_tok_s": out["twin"],
             "ratio": out["sharded"] / out["twin"], "token_parity": 1,
             "tau_calibrated_s": tau_cal,
-            "mesh_devices": int(np.prod(mesh_shape))}
+            "mesh_devices": int(np.prod(mesh_shape)),
+            "group_chips": group_chips}
+
+
+def hetero_validation(n_sessions: int = 6, n_rounds: int = 4,
+                      warm: int = 2):
+    """Heterogeneous device-group fleet {solo, (1,2) mesh, (2,2) mesh}
+    served against the all-solo twin — token AND virtual-clock parity
+    asserted at measure time — plus the calibrated-vs-uniform τ placement
+    gap (``optgap.hetero``).  Needs 8 host devices, so ``run()`` invokes
+    this through the ``--hetero-child`` subprocess (a fresh interpreter
+    with ``--xla_force_host_platform_device_count=8``).
+
+    Returns two rows:
+
+    * ``hetero.decode.tput`` — hetero vs twin tokens/s, per-group chip
+      counts, the per-server calibrated τ vector and its max/min spread
+      (> 1 proves ``calibrate_taus`` is genuinely per-group).
+    * ``optgap.hetero`` — CG-BP placements computed under the calibrated
+      (normalised to the spec'd τ scale) and under a uniform τ vector on
+      the SAME topology; memory caps each server at 6 of 8 blocks so the
+      split is placement-sensitive, and the client's RTT favours the SLOW
+      solo server so only the calibrated vector pulls blocks onto the big
+      mesh groups.  Asserts the placements differ and that the calibrated
+      placement costs no more when both are priced under calibrated τ.
+    """
+    import time
+
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.core import (LLMSpec, Problem, ServerSpec, Workload, cg_bp,
+                            shortest_path_route, with_server_taus)
+    from repro.launch.mesh import group_meshes
+    from repro.models import init_params
+    from repro.serving import GeoServingSystem
+
+    assert len(jax.devices()) >= 8, \
+        "hetero_validation needs 8 host devices (run via --hetero-child)"
+    L = 8
+    lw = Workload(4, warm + n_rounds + 2)
+    llm = LLMSpec("hetero", L, block_bytes=50.0, cache_bytes_per_token=0.5)
+    servers = [ServerSpec(j, 2000.0, 0.01 * (j + 1), tau_prefill_base=0.002,
+                          tau_prefill_per_token=0.0005) for j in range(3)]
+    rtt = np.full((1, 3), 0.01)
+    problem = Problem(llm, servers, 1, rtt, 3 * rtt, workload=lw)
+    cfg = get_reduced_config("llama3_2_1b").replace(n_layers=L)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, size=lw.l_in)
+               for _ in range(n_sessions)]
+
+    shapes = {0: None, 1: (1, 2), 2: (2, 2)}
+    out, toks, vts, taus, chips = {}, {}, {}, {}, []
+    for tag, groups in (("twin", None), ("hetero", group_meshes(shapes))):
+        system = GeoServingSystem(cfg, params, problem,
+                                  algorithm="proposed", R=3,
+                                  max_new_tokens=lw.l_out,
+                                  max_sessions=n_sessions,
+                                  device_groups=groups)
+        sids = []
+        for p in prompts:
+            route, _ = shortest_path_route(problem,
+                                           system.alive_placement(), 0)
+            sids.append(system.create_session(p, 0, route, lw.l_out))
+        assert len(system.try_admit_sessions(sids)) == n_sessions
+        system.drain_prefill()
+        for _ in range(warm):
+            system.decode_round(sids)
+        t0 = time.perf_counter()
+        for _ in range(n_rounds):
+            system.decode_round(sids)
+        dt = time.perf_counter() - t0
+        out[tag] = n_sessions * n_rounds / dt
+        toks[tag] = [list(system.sessions[s].tokens) for s in sids]
+        vts[tag] = [float(system.sessions[s].virtual_time) for s in sids]
+        if tag == "hetero":
+            taus = system.calibrate_taus()
+            chips = [system.servers[j].n_chips
+                     for j in sorted(system.servers)]
+    assert toks["hetero"] == toks["twin"], \
+        "hetero device groups must emit the all-solo twin's token stream"
+    assert vts["hetero"] == vts["twin"], \
+        "hetero device groups must keep the twin's virtual clocks"
+    assert chips == [1, 2, 4], chips
+    tau_vec = [taus[j] for j in sorted(taus)]
+    tau_spread = max(tau_vec) / min(tau_vec)
+    het_row = {"hetero_tok_s": out["hetero"], "twin_tok_s": out["twin"],
+               "ratio": out["hetero"] / out["twin"], "token_parity": 1,
+               "n_groups": len(chips), "group_chips": chips,
+               "taus_s": tau_vec, "tau_spread": tau_spread}
+
+    # --- optgap.hetero: the same 3-group fleet with placement-TIGHT
+    # memories (5/3/6 of the 8 blocks) and client RTT favouring the slow
+    # solo server.  The calibrated vector is normalised to the spec'd τ
+    # scale (mean 0.01 s) so heterogeneity — not the raw-roofline-vs-RTT
+    # unit gap — is the only difference from the uniform baseline.
+    # CG-BP's m_j is memory-only; τ moves the SPAN assignment, so the gap
+    # shows up in (a, m) and in the route cost: under uniform τ the big
+    # (2,2) group lands on the tail span and every route must open on the
+    # slow solo server; calibrated τ pulls it to the head span.
+    tau_ref = 0.01
+    mean_tau = sum(tau_vec) / len(tau_vec)
+    scaled = {j: tau_ref * taus[j] / mean_tau for j in taus}
+    opt_lw = Workload(4, 8)
+    mems = (290.0, 180.0, 350.0)
+    tight = [ServerSpec(j, mems[j], tau_ref, tau_prefill_base=0.002,
+                        tau_prefill_per_token=0.0005) for j in range(3)]
+    rtt_skew = np.array([[0.002, 0.004, 0.006]])
+    base = Problem(llm, tight, 1, rtt_skew, 3 * rtt_skew, workload=opt_lw)
+    cal_prob = with_server_taus(base, scaled)
+    pl_cal, info_cal = cg_bp(cal_prob, 1)
+    pl_uni, info_uni = cg_bp(base, 1)
+    assert info_cal.feasible and info_uni.feasible
+    _, cost_cal = shortest_path_route(cal_prob, pl_cal, 0)
+    _, cost_uni = shortest_path_route(cal_prob, pl_uni, 0)
+    differs = int(not (np.array_equal(pl_cal.m, pl_uni.m)
+                       and np.array_equal(pl_cal.a, pl_uni.a)))
+    assert differs, (list(pl_cal.a), list(pl_uni.a))
+    assert cost_cal <= cost_uni * (1 + 1e-9), (cost_cal, cost_uni)
+    og_row = {"cost_calibrated_s": float(cost_cal),
+              "cost_uniform_s": float(cost_uni),
+              "optgap_frac": float((cost_uni - cost_cal) / cost_uni),
+              "placement_differs": differs,
+              "m_calibrated": [int(v) for v in pl_cal.m],
+              "a_calibrated": [int(v) for v in pl_cal.a],
+              "m_uniform": [int(v) for v in pl_uni.m],
+              "a_uniform": [int(v) for v in pl_uni.a],
+              "tau_scaled_s": [scaled[j] for j in sorted(scaled)]}
+    return {"hetero.decode.tput": het_row, "optgap.hetero": og_row}
+
+
+def _hetero_rows(smoke: bool = False):
+    """Parent-side driver for :func:`hetero_validation`: spawn a fresh
+    interpreter with 8 forced host CPU devices (this process's jax device
+    count is frozen at first import) and parse the child's JSON rows."""
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root,
+                    env.get("PYTHONPATH", "")) if p)
+    cmd = [sys.executable, os.path.abspath(__file__), "--hetero-child"]
+    if smoke:
+        cmd.append("--smoke")
+    proc = subprocess.run(cmd, env=env, cwd=root, capture_output=True,
+                          text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(f"--hetero-child failed:\n{proc.stderr}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
 def _one_server_problem(slab_cap: int, l_out: int = 60):
@@ -791,6 +947,26 @@ def run(full: bool = False, smoke: bool = False):
          f"({row['mesh_devices']} device(s))")
     _record("shard.decode.tput", **row)
 
+    # heterogeneous device groups: a {solo, (1,2), (2,2)} fleet vs the
+    # all-solo twin (token + virtual-clock parity asserted when measured)
+    # and the calibrated-vs-uniform τ CG-BP placement gap.  Runs in a
+    # fresh interpreter because this process's jax device count is frozen
+    # at first import and the matrix needs 8 forced host devices.
+    rows, us = timed(_hetero_rows, smoke=smoke)
+    het, og = rows["hetero.decode.tput"], rows["optgap.hetero"]
+    emit("hetero.decode.tput", us,
+         f"hetero={het['hetero_tok_s']:.0f} tok/s "
+         f"twin={het['twin_tok_s']:.0f} tok/s ratio={het['ratio']:.2f}x "
+         f"chips={het['group_chips']} "
+         f"tau_spread={het['tau_spread']:.2f}x")
+    _record("hetero.decode.tput", **het)
+    emit("optgap.hetero", 0.0,
+         f"calibrated={og['cost_calibrated_s']*1e3:.1f}ms "
+         f"uniform={og['cost_uniform_s']*1e3:.1f}ms "
+         f"gap={og['optgap_frac']*100:.0f}% "
+         f"placement_differs={og['placement_differs']}")
+    _record("optgap.hetero", **og)
+
     # paged cache pools: co-residency headline (the same topology's
     # worst-case budget caps slab at 1/4 of the cohort) + the
     # oversubscription-with-preemption scenario
@@ -884,6 +1060,10 @@ _REQUIRED_ROWS = {
     "decode.tput.R32": ("serial_tok_s", "fused_tok_s", "speedup"),
     "shard.decode.tput": ("sharded_tok_s", "twin_tok_s", "ratio",
                           "token_parity", "tau_calibrated_s"),
+    "hetero.decode.tput": ("hetero_tok_s", "twin_tok_s", "ratio",
+                           "token_parity", "tau_spread", "n_groups"),
+    "optgap.hetero": ("cost_calibrated_s", "cost_uniform_s",
+                      "optgap_frac", "placement_differs"),
     "decode.tput.R128": ("paged_tok_s", "slab_coresident",
                          "paged_coresident", "coresidency_ratio"),
     "oversub": ("n_sessions", "slab_admitted", "paged_admitted",
@@ -927,6 +1107,18 @@ def check_json(path: str) -> int:
     shard = data["shard.decode.tput"]
     assert shard["token_parity"] == 1, shard
     assert shard["tau_calibrated_s"] > 0 and shard["ratio"] > 0, shard
+    # heterogeneous device groups: parity is pass/fail, the calibrated τ
+    # vector must be genuinely per-group (spread > 1), and the CG-BP
+    # placement under calibrated τ must differ from — and, priced under
+    # calibrated τ, cost no more than — the uniform-τ placement
+    het = data["hetero.decode.tput"]
+    assert het["token_parity"] == 1 and het["ratio"] > 0, het
+    assert het["tau_spread"] > 1.0 and het["n_groups"] >= 3, het
+    og = data["optgap.hetero"]
+    assert og["placement_differs"] == 1, og
+    assert og["cost_calibrated_s"] > 0, og
+    assert og["optgap_frac"] >= 0.0, og
+    assert og["cost_calibrated_s"] <= og["cost_uniform_s"] * (1 + 1e-9), og
     ov = data["oversub"]
     assert ov["slab_admitted"] < ov["n_sessions"], ov
     assert ov["completed"] == ov["n_sessions"] == ov["paged_admitted"], ov
@@ -969,6 +1161,11 @@ if __name__ == "__main__":
     ap.add_argument("--check-only", action="store_true",
                     help="validate the committed --json file's structure "
                          "and ratio floors without re-timing anything")
+    ap.add_argument("--hetero-child", action="store_true",
+                    help="run ONLY the heterogeneous device-group scenarios "
+                         "and print their JSON rows to stdout (needs 8 host "
+                         "devices; run() spawns this with "
+                         "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--sim-scale", action="store_true",
                     help="bounded planet-scale smoke: a 50k-request "
                          "diurnal fast trace must finish under a fixed "
@@ -977,7 +1174,10 @@ if __name__ == "__main__":
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_engine.json"), help="output path for the JSON metrics")
     args = ap.parse_args()
-    if args.sim_scale:
+    if args.hetero_child:
+        print(json.dumps(hetero_validation(
+            n_rounds=2 if args.smoke else 4)))
+    elif args.sim_scale:
         row = sim_scale_smoke()
         print(f"sim-scale OK: {row['n_requests']} requests in "
               f"{row['wall_s']:.1f}s ({row['requests_per_s']:.0f} req/s, "

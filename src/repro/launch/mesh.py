@@ -13,15 +13,32 @@ in this repo (and the tests) goes through this helper.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
 
-def compat_make_mesh(shape, axis_names):
+def compat_make_mesh(shape, axis_names, devices=None):
     """Version-compatible ``jax.make_mesh`` with Auto axis types when the
-    running jax supports them."""
+    running jax supports them.
+
+    ``devices``: optional explicit device list (``prod(shape)`` of them) —
+    the heterogeneous-group path: ``jax.make_mesh`` insists on covering
+    ALL local devices, but a per-server :class:`DeviceGroup` mesh spans a
+    SUBSET, so those are built directly over the given slice (in the given
+    order, keeping device partitions disjoint and deterministic)."""
     axis_type = getattr(jax.sharding, "AxisType", None)
+    if devices is not None:
+        arr = np.asarray(list(devices), dtype=object).reshape(tuple(shape))
+        if axis_type is not None:
+            try:
+                return jax.sharding.Mesh(
+                    arr, tuple(axis_names),
+                    axis_types=(axis_type.Auto,) * len(axis_names))
+            except TypeError:
+                pass
+        return jax.sharding.Mesh(arr, tuple(axis_names))
     if axis_type is not None:
         try:
             return jax.make_mesh(
@@ -30,6 +47,33 @@ def compat_make_mesh(shape, axis_names):
         except TypeError:  # AxisType exists but make_mesh predates the kwarg
             pass
     return jax.make_mesh(tuple(shape), tuple(axis_names))
+
+
+def group_meshes(group_shapes: Dict, axis_names=("data", "model"),
+                 devices: Optional[Sequence] = None) -> Dict:
+    """Carve the host's devices into disjoint per-server meshes.
+
+    ``group_shapes`` maps server id -> mesh shape tuple or None (solo
+    twin).  Servers are assigned consecutive device slices in sorted-key
+    order; ``None`` takes no devices (the solo twin computes on the
+    default device).  Returns {server_id: Mesh | None} — feed it through
+    ``DeviceGroup``/``GeoServingSystem(device_groups=...)``.  Raises when
+    the shapes ask for more devices than the host exposes."""
+    devs = list(devices if devices is not None else jax.devices())
+    out, off = {}, 0
+    for j in sorted(group_shapes):
+        shape = group_shapes[j]
+        if shape is None:
+            out[j] = None
+            continue
+        n = int(np.prod(shape))
+        if off + n > len(devs):
+            raise ValueError(
+                f"device groups need {off + n} devices, host has "
+                f"{len(devs)} (shapes {group_shapes})")
+        out[j] = compat_make_mesh(shape, axis_names, devs[off:off + n])
+        off += n
+    return out
 
 
 def make_production_mesh(*, multi_pod: bool = False):

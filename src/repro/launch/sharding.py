@@ -22,6 +22,8 @@ Key decisions (rationale in DESIGN.md §6):
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -267,6 +269,74 @@ def param_shardings(cfg: ModelConfig, sh: ShardingCtx, axes_tree):
 # drops (replicates) any axis whose mesh extent does not divide the leaf
 # dimension, so pool rows, page counts, and round widths chosen by the
 # engine can never produce an invalid sharding.
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceGroup:
+    """One server's TP/EP device group: a mesh, its frozen serving rules,
+    and (implicitly) the devices the mesh spans.
+
+    ``GeoServingSystem(device_groups={sid: DeviceGroup | None, ...})``
+    assigns one group per server — a 2-device TP server and a 4-device EP
+    server coexist because every rules/step cache downstream is keyed on
+    the group's ``(mesh, rules)`` pair, never on global state.  ``None``
+    (either the field or the dict entry) is the byte-identical solo-device
+    twin.  ``rules=None`` derives :func:`serving_rules` per server from its
+    actual (n_rows, max_len) shapes; a dict or frozen tuple overrides them
+    (see :func:`freeze_rules`).  Instances are hashable — they ride in the
+    pooled-step ``lru_cache`` keys as ``(mesh, rules)``.
+    """
+
+    mesh: object = None
+    rules: object = None
+
+    def __post_init__(self):
+        if self.rules is not None and not isinstance(self.rules, tuple):
+            object.__setattr__(self, "rules", freeze_rules(dict(self.rules)))
+
+    @property
+    def devices(self) -> tuple:
+        """The group's device list (empty for the solo twin)."""
+        if self.mesh is None:
+            return ()
+        return tuple(self.mesh.devices.reshape(-1))
+
+    @property
+    def n_chips(self) -> int:
+        """Device count the τ roofline divides by (1 for the solo twin)."""
+        return int(self.mesh.devices.size) if self.mesh is not None else 1
+
+    def frozen_rules_for(self, cfg: ModelConfig, n_rows: int, max_len: int):
+        """This group's frozen serving rules: the explicit override when
+        given, else the cached per-(cfg, mesh, shape) derivation."""
+        if self.mesh is None:
+            return None
+        if self.rules is not None:
+            return self.rules
+        return frozen_serving_rules(cfg, self.mesh, int(n_rows),
+                                    int(max_len))
+
+
+def as_device_group(group) -> DeviceGroup:
+    """Normalize ``None`` | ``Mesh`` | :class:`DeviceGroup` to a
+    DeviceGroup — the single entry point the engine funnels both the
+    legacy global ``mesh=`` sugar and per-server ``device_groups`` values
+    through."""
+    if group is None:
+        return DeviceGroup()
+    if isinstance(group, DeviceGroup):
+        return group
+    return DeviceGroup(mesh=group)
+
+
+@functools.lru_cache(maxsize=None)
+def frozen_serving_rules(cfg: ModelConfig, mesh, n_rows: int, max_len: int):
+    """Frozen :func:`serving_rules`, cached per (cfg, mesh, n_rows,
+    max_len) — the per-GROUP rules cache.  Heterogeneous deployments hit
+    this once per distinct group geometry: a 2-device TP server and a
+    4-device EP server each keep their own entry (the mesh is part of the
+    key), so neither rederives nor clobbers the other's rules."""
+    return freeze_rules(serving_rules(cfg, mesh, n_rows, max_len))
 
 
 def serving_rules(cfg: ModelConfig, mesh, n_rows: int,

@@ -141,9 +141,12 @@ def decoder_block_full(params, cfg: ModelConfig, sh: ShardingCtx, h, positions,
     return h, cache, aux
 
 
-def decoder_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, cache,
-                         pos, layer_idx=0, backend: str = "xla"):
-    """Single-token decoder block.  h (B,1,d).  Returns (h, cache)."""
+def decoder_block_attn_decode(params, cfg: ModelConfig, sh: ShardingCtx, h,
+                              cache, pos, layer_idx=0, backend: str = "xla"):
+    """Attention half of :func:`decoder_block_decode`: ln1 -> attention ->
+    residual (+ sandwich post-norm).  Returns (h, cache) with the FFN half
+    still to run — the pooled decode step uses the split to batch the MoE
+    FFN over its rows (the pure-EP all-to-all path)."""
     win = window_for_layer(cfg, layer_idx)
     x = apply_norm(params["ln1"], cfg, h)
     if cfg.attn_kind == "mla":
@@ -158,7 +161,14 @@ def decoder_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, cache,
         cache = {"k": ck, "v": cv}
     if cfg.sandwich_norm:
         a = apply_norm(params["post_ln1"], cfg, a)
-    h = h + a
+    return h + a, cache
+
+
+def decoder_block_ffn(params, cfg: ModelConfig, sh: ShardingCtx, h):
+    """FFN half of :func:`decoder_block_decode`: ln2 -> MoE/MLP ->
+    residual.  Token-wise (position-free), so callers may regroup a
+    (rows, 1, d) decode grid into any (B, S, d) factorization first —
+    the EP decode path reshapes rows onto the (data, model) grid."""
     x = apply_norm(params["ln2"], cfg, h)
     if cfg.is_moe:
         m, _ = moe_mod.apply_moe(params["ffn"], cfg, sh, x)
@@ -166,7 +176,15 @@ def decoder_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, cache,
         m = apply_mlp(params["ffn"], cfg, sh, x)
     if cfg.sandwich_norm:
         m = apply_norm(params["post_ln2"], cfg, m)
-    return h + m, cache
+    return h + m
+
+
+def decoder_block_decode(params, cfg: ModelConfig, sh: ShardingCtx, h, cache,
+                         pos, layer_idx=0, backend: str = "xla"):
+    """Single-token decoder block.  h (B,1,d).  Returns (h, cache)."""
+    h, cache = decoder_block_attn_decode(params, cfg, sh, h, cache, pos,
+                                         layer_idx, backend=backend)
+    return decoder_block_ffn(params, cfg, sh, h), cache
 
 
 # ---------------------------------------------------------------------------

@@ -7,6 +7,7 @@ paged cache layouts (``cache_layout="paged"``: PagePool free-list
 allocation, page-granular eq. (5)/(20) accounting, preemption/resume),
 per-session sampling policies, the event-loop scheduler, and the
 session/request record types."""
+from repro.launch.sharding import DeviceGroup, as_device_group
 from repro.serving.engine import (BlockServer, EngineSession,
                                   GeoServingSystem, generate)
 from repro.serving.kv_cache import (SUPPORTED_KINDS, CachePool, PagePool,
@@ -28,9 +29,10 @@ from repro.serving.scheduler import (AdmissionScheduler,
                                      ServedRequest)
 
 __all__ = ["AdmissionScheduler", "BlockServer", "CachePool",
-           "ContinuousBatchingScheduler", "EngineSession", "GeoServingSystem",
-           "PagePool", "SUPPORTED_KINDS", "SamplingSpec", "ServedRequest",
-           "StateSpec", "bucket_for", "default_prefill_buckets", "generate",
+           "ContinuousBatchingScheduler", "DeviceGroup", "EngineSession",
+           "GeoServingSystem", "PagePool", "SUPPORTED_KINDS", "SamplingSpec",
+           "ServedRequest", "StateSpec", "as_device_group", "bucket_for",
+           "default_prefill_buckets", "generate",
            "kind_runs", "make_paged_decode_step", "make_paged_prefill_step",
            "make_paged_round_step", "make_pool_decode_step",
            "make_pool_prefill_step", "make_pool_round_step",

@@ -160,7 +160,8 @@ class BlockServer:
                  *, n_rows: int, max_len: int, cap_slots: int,
                  enc_len: int = 0, slowdown: float = 1.0,
                  backend: str = "xla", cache_layout: str = "slab",
-                 page_size: int = 0, mesh=None, mesh_rules=None):
+                 page_size: int = 0, mesh=None, mesh_rules=None,
+                 group=None):
         self.sid = sid
         self.backend = backend
         self.cfg = cfg
@@ -182,20 +183,31 @@ class BlockServer:
         self.alive = True
         self.slowdown = slowdown
         # Optional TP/EP device group: this server's params + pool live
-        # sharded over `mesh` per the logical-axis rules, and its pooled
-        # steps constrain every operand accordingly (docs/serving.md
-        # "Device-group servers").  mesh=None is the single-device twin.
-        self.mesh = mesh
+        # sharded over the group's mesh per the logical-axis rules, and its
+        # pooled steps constrain every operand accordingly (docs/serving.md
+        # "Device-group servers").  A solo group (mesh=None) is the
+        # single-device twin.  `group` is the DeviceGroup descriptor (or a
+        # bare Mesh / None); `mesh`/`mesh_rules` remain as sugar for a
+        # single-group server.
+        from repro.launch.sharding import DeviceGroup, as_device_group
+
+        if group is None:
+            group = as_device_group(mesh)
+            if mesh_rules is not None and group.rules is None:
+                group = DeviceGroup(mesh=group.mesh, rules=mesh_rules)
+        else:
+            group = as_device_group(group)
+        self.group = group
+        self.mesh = mesh = group.mesh
+        self.n_chips = group.n_chips
         if mesh is not None:
             from repro.launch.sharding import (
-                block_param_shardings, freeze_rules, pool_tree_shardings,
-                serving_rules, thaw_rules)
+                block_param_shardings, pool_tree_shardings, thaw_rules)
             from repro.models.model import block_param_axes
 
-            rules = (thaw_rules(mesh_rules) if mesh_rules is not None
-                     else serving_rules(cfg, mesh, n_rows, max_len))
+            frozen = group.frozen_rules_for(cfg, n_rows, max_len)
+            rules = thaw_rules(frozen)
             self.mesh_rules = rules
-            frozen = freeze_rules(rules)
             self.run_params = tuple(
                 jax.device_put(p, block_param_shardings(
                     mesh, rules, block_param_axes(cfg, kind), p))
@@ -494,7 +506,7 @@ class GeoServingSystem:
                  backend: str = "xla",
                  cache_layout: str = "slab",
                  page_size: Optional[int] = None,
-                 mesh=None, mesh_rules=None):
+                 mesh=None, mesh_rules=None, device_groups=None):
         from repro.kernels.runtime import resolve_backend
 
         assert problem.L == cfg.n_layers
@@ -505,16 +517,37 @@ class GeoServingSystem:
         self.cfg = cfg
         self.params = params
         self.problem = problem
-        # Optional device-group serving: every BlockServer becomes one
-        # TP/EP group over `mesh` (placement then allocates device groups,
-        # not devices).  `mesh_rules` overrides the derived logical-axis
-        # rules (see launch.sharding.serving_rules); accepted as a dict or
-        # a frozen tuple-of-pairs.
+        # Optional device-group serving.  Two spellings:
+        #   * `device_groups={server_id: DeviceGroup | Mesh | None}` — the
+        #     heterogeneous form: every BlockServer shards over ITS OWN
+        #     group (missing / None entries are the solo-device twin), so a
+        #     2-device TP server and a 4-device EP server coexist and
+        #     calibrate_taus() yields a genuinely per-server τ vector;
+        #   * the legacy `mesh=` (+ optional `mesh_rules=`) kwarg — sugar
+        #     that broadcasts ONE group to all servers, byte-identical to
+        #     the old global-mesh behavior.
+        # `mesh_rules` overrides the derived logical-axis rules (see
+        # launch.sharding.serving_rules); accepted as a dict or a frozen
+        # tuple-of-pairs.
+        from repro.launch.sharding import DeviceGroup, as_device_group
+
+        if device_groups is not None and mesh is not None:
+            raise ValueError(
+                "pass either device_groups= or the global mesh= sugar, "
+                "not both")
         self.mesh = mesh
         if mesh_rules is not None and not isinstance(mesh_rules, tuple):
             from repro.launch.sharding import freeze_rules
             mesh_rules = freeze_rules(dict(mesh_rules))
         self.mesh_rules = mesh_rules
+        if device_groups is not None:
+            self.device_groups = {int(j): as_device_group(g)
+                                  for j, g in device_groups.items()}
+        elif mesh is not None:
+            g = DeviceGroup(mesh=mesh, rules=mesh_rules)
+            self.device_groups = {j: g for j in range(problem.n_servers)}
+        else:
+            self.device_groups = {}
         self.algorithm = algorithm
         self.max_new_tokens = max_new_tokens
         self.max_sessions = int(max_sessions)
@@ -613,8 +646,8 @@ class GeoServingSystem:
                 max_len=self.max_seq_len, cap_slots=cap,
                 enc_len=self.max_enc_len if self._is_enc_dec else 0,
                 backend=self.backend, cache_layout=self.cache_layout,
-                page_size=self.page_size, mesh=self.mesh,
-                mesh_rules=self.mesh_rules)
+                page_size=self.page_size,
+                group=self.device_groups.get(j))
 
     def alive_placement(self) -> Placement:
         a = np.array(self.placement.a)
@@ -633,17 +666,18 @@ class GeoServingSystem:
         """Per-server τ (per-block per-token decode seconds, eq. (1))
         derived from each server's ACTUAL pooled decode step: AOT
         lowering + compile, ``launch.costs`` roofline over the per-device
-        cost analysis.  With a mesh, the step is the SPMD-partitioned
-        device-group program, so TP/EP speedups (and their collective
-        costs) flow straight into the perf model the placement and the
-        virtual clock consume."""
+        cost analysis.  With device groups, each server's step is ITS OWN
+        SPMD-partitioned program over its own ``srv.n_chips`` devices, so
+        a heterogeneous deployment (solo next to 2-device TP next to
+        4-device EP) yields a genuinely non-constant τ vector — that
+        heterogeneity flows straight into the perf model the placement
+        (MILP/CG-BP), eq. (20) routing, and the simulator consume."""
         from repro.launch import costs as C
 
-        n_chips = int(self.mesh.devices.size) if self.mesh is not None else 1
         taus = {}
         for j, srv in self.servers.items():
             cost = srv.decode_step_cost()
-            taus[j] = C.tau_from_step_cost(cost, n_chips, srv.m,
+            taus[j] = C.tau_from_step_cost(cost, srv.n_chips, srv.m,
                                            srv.pool.n_rows)
         return taus
 

@@ -999,8 +999,44 @@ def make_prefill_block(cfg: ModelConfig, kind: str, backend: str = "xla"):
         + ", ".join(SUPPORTED_KINDS))
 
 
+def _ep_row_grid(cfg: ModelConfig, mesh, frozen_rules, p_stack,
+                 n_rows: int) -> Optional[Tuple[int, int]]:
+    """(B, S) factorization of the decode row grid that routes a decoder
+    run's MoE FFN through the pure-EP shard_map path, or None to keep the
+    per-row reference trace.
+
+    The gate mirrors ``moe._ep_eligible`` exactly — mesh present, PADDED
+    expert weights, the (data, model) extents divide the regrouped
+    ``(n_data, n_rows / n_data)`` token grid, batch rule mapped — plus the
+    no-drop bound ``n_rows <= 8 * n_ep``: with at most 8 local tokens per
+    EP shard no expert can exceed the minimum dispatch capacity, so the
+    batched all-to-all path emits exactly the per-row reference mixture
+    and the engine's token-parity contract survives.  Unpadded reduced
+    configs always return None (byte-identical trace to today)."""
+    if mesh is None or not cfg.is_moe:
+        return None
+    ffn = p_stack.get("ffn") if isinstance(p_stack, dict) else None
+    if not isinstance(ffn, dict) or "wg" not in ffn:
+        return None
+    E_alloc = int(ffn["wg"].shape[1])  # (run_layers, E_alloc, d, f)
+    if E_alloc == cfg.n_experts:
+        return None
+    from repro.launch.sharding import thaw_rules
+
+    if thaw_rules(frozen_rules).get("batch") is None:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes.get("model", 1)
+    n_data = int(np.prod([sizes[a] for a in ("pod", "data") if a in sizes]))
+    n_ep = n_data * model
+    if (n_rows % n_data or (n_rows // n_data) % model or E_alloc % n_ep
+            or n_rows > 8 * n_ep):
+        return None
+    return n_data, n_rows // n_data
+
+
 def _decode_step_body(cfg: ModelConfig, kinds: Tuple[str, ...],
-                      backend: str):
+                      backend: str, mesh=None, rules=None):
     """The UNJITTED pooled decode-step body shared by
     :func:`make_pool_decode_step` (row-buffer entry point) and
     :func:`make_pool_round_step` (the fused round-resident entry point).
@@ -1034,6 +1070,13 @@ def _decode_step_body(cfg: ModelConfig, kinds: Tuple[str, ...],
     resolve_backend(backend)
     runs = kind_runs(kinds)
 
+    ep_sh = None
+    if mesh is not None:
+        from repro.launch.sharding import thaw_rules
+        from repro.models.layers import ShardingCtx
+
+        ep_sh = ShardingCtx(mesh, thaw_rules(rules))
+
     def step(run_params, shared_params, pool_trees, h, pos, emb0, enc_len,
              layer_active, layer_ids):
         new_trees = list(pool_trees)
@@ -1044,19 +1087,48 @@ def _decode_step_body(cfg: ModelConfig, kinds: Tuple[str, ...],
             act, lids = layer_active[lo:hi], layer_ids[lo:hi]
 
             if kind == "decoder":
-                def body(hc, xs):
-                    p, cache, active, lid = xs
+                grid = _ep_row_grid(cfg, mesh, rules, p_stack, h.shape[0])
 
-                    def one(hr, cr, pr):
-                        hh, cc = B.decoder_block_decode(
-                            p, cfg, NULL_SH, hr[None],
-                            jax.tree.map(lambda x: x[None], cr), pr, lid,
-                            backend=backend)
-                        return hh[0], jax.tree.map(lambda x: x[0], cc)
+                if grid is None:
+                    def body(hc, xs):
+                        p, cache, active, lid = xs
 
-                    h2, c2 = jax.vmap(one)(hc, cache, pos)
-                    return (jnp.where(active[:, None, None], h2, hc),
-                            _mask_tree(c2, cache, active))
+                        def one(hr, cr, pr):
+                            hh, cc = B.decoder_block_decode(
+                                p, cfg, NULL_SH, hr[None],
+                                jax.tree.map(lambda x: x[None], cr), pr, lid,
+                                backend=backend)
+                            return hh[0], jax.tree.map(lambda x: x[0], cc)
+
+                        h2, c2 = jax.vmap(one)(hc, cache, pos)
+                        return (jnp.where(active[:, None, None], h2, hc),
+                                _mask_tree(c2, cache, active))
+                else:
+                    # Padded-MoE EP route: attention stays the per-row
+                    # reference trace, the position-free FFN half regroups
+                    # the rows into a (n_data, rows/n_data) token grid so
+                    # apply_moe takes the pure-EP all-to-all inside the
+                    # pooled step.  _ep_row_grid's no-drop bound makes this
+                    # emit the reference mixture exactly (token parity).
+                    n_data, rows_per = grid
+
+                    def body(hc, xs):
+                        p, cache, active, lid = xs
+
+                        def one(hr, cr, pr):
+                            hh, cc = B.decoder_block_attn_decode(
+                                p, cfg, NULL_SH, hr[None],
+                                jax.tree.map(lambda x: x[None], cr), pr, lid,
+                                backend=backend)
+                            return hh[0], jax.tree.map(lambda x: x[0], cc)
+
+                        h2, c2 = jax.vmap(one)(hc, cache, pos)
+                        hf = B.decoder_block_ffn(
+                            p, cfg, ep_sh,
+                            h2.reshape(n_data, rows_per, h2.shape[-1]))
+                        h2 = hf.reshape(h2.shape)
+                        return (jnp.where(active[:, None, None], h2, hc),
+                                _mask_tree(c2, cache, active))
             elif kind in ("rwkv", "mamba"):
                 blk = (B.rwkv_block_decode if kind == "rwkv"
                        else B.mamba_block_decode)
@@ -1139,7 +1211,7 @@ def make_pool_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...],
     if mesh is None:
         return jax.jit(_decode_step_body(cfg, kinds, backend),
                        donate_argnums=(2,))
-    body = _decode_step_body(cfg, kinds, backend)
+    body = _decode_step_body(cfg, kinds, backend, mesh, rules)
     pools, rows, repl = _mesh_constraints(mesh, rules)
 
     def step(run_params, shared_params, pool_trees, h, pos, emb0, enc_len,
@@ -1196,7 +1268,7 @@ def make_pool_round_step(cfg: ModelConfig, kinds: Tuple[str, ...],
     rules — the resharding between the two layouts is XLA's, still ONE
     dispatch per (hop, server).
     """
-    body = _decode_step_body(cfg, kinds, backend)
+    body = _decode_step_body(cfg, kinds, backend, mesh, rules)
     cons = None if mesh is None else _mesh_constraints(mesh, rules)
 
     def hop(run_params, shared_params, pool_trees, h_round, pos_round,
@@ -1311,7 +1383,7 @@ def make_paged_decode_step(cfg: ModelConfig, kinds: Tuple[str, ...],
     trees.  The pool trees (arg 2) are donated — same aliasing contract.
     ``mesh``/``rules``: optional device-group sharding (page table pinned
     replicated; physical page arrays follow the cache rules)."""
-    body = _decode_step_body(cfg, kinds, backend)
+    body = _decode_step_body(cfg, kinds, backend, mesh, rules)
     runs = kind_runs(kinds)
     cons = None if mesh is None else _mesh_constraints(mesh, rules)
 
@@ -1377,7 +1449,7 @@ def make_paged_round_step(cfg: ModelConfig, kinds: Tuple[str, ...],
     arbitrary but the page it selects belongs to the row — a no-op write,
     or the trash page when unassigned).  ``mesh``/``rules``: optional
     device-group sharding (round buffers + page table replicated)."""
-    body = _decode_step_body(cfg, kinds, backend)
+    body = _decode_step_body(cfg, kinds, backend, mesh, rules)
     runs = kind_runs(kinds)
     cons = None if mesh is None else _mesh_constraints(mesh, rules)
 

@@ -163,3 +163,53 @@ def test_replace_servers_invalidates_route_cache():
                                           fresh.cost(c, avg))
     # and the stale memo really is stale: doubled τ moved the edge costs
     assert not np.array_equal(old_cache.cost(0), fresh.cost(0))
+
+
+def test_calibrated_problem_gets_fresh_route_cache():
+    """Regression guard (PR 9): an ``OnlineBPRR`` built from the engine's
+    ``calibrated_problem()`` — and one whose τ vector is swapped in via
+    ``replace_servers`` — must serve edge costs computed from the
+    CALIBRATED τ, not a memo warmed on the spec'd uniform τ.  The
+    calibrated vector is what makes heterogeneous device groups matter to
+    placement/routing, so a stale cache here silently reverts the system
+    to uniform-τ decisions."""
+    import jax
+
+    from repro.core import RouteCostCache, with_server_taus
+    from repro.configs import get_reduced_config
+    from repro.models import init_params
+    from repro.serving import GeoServingSystem
+
+    cfg = get_reduced_config("llama3_2_1b")
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    llm = LLMSpec("toy", cfg.n_layers, block_bytes=100.0,
+                  cache_bytes_per_token=1.0)
+    servers = [ServerSpec(j, mem_bytes=1000.0, tau=0.01 * (j + 1),
+                          tau_prefill_base=0.002,
+                          tau_prefill_per_token=0.0005) for j in range(2)]
+    rtt = np.full((1, 2), 0.02)
+    prob = Problem(llm, servers, 1, rtt, rtt * 3, workload=Workload(4, 4))
+    system = GeoServingSystem(cfg, params, prob, R=2, max_new_tokens=4,
+                              max_sessions=4)
+    cal = system.calibrated_problem()
+    assert not np.array_equal(cal.tau(), prob.tau())
+
+    # fresh controller on the calibrated problem: memo belongs to cal
+    ctl = OnlineBPRR(cal, R=2)
+    fresh = RouteCostCache(ctl.problem, ctl.placement)
+    np.testing.assert_array_equal(ctl._route_cache.cost(0), fresh.cost(0))
+    assert not np.array_equal(ctl._route_cache.cost(0),
+                              RouteCostCache(prob, ctl.placement).cost(0))
+
+    # τ swap through replace_servers: the warmed uniform-τ memo must die
+    ctl2 = OnlineBPRR(prob, R=2)
+    stale = ctl2._route_cache
+    stale.cost(0)
+    stale.cost(0, True)  # warm both memo keys
+    ctl2.replace_servers(cal)
+    assert ctl2._route_cache is not stale, "stale cache survived τ swap"
+    fresh2 = RouteCostCache(ctl2.problem, ctl2.placement)
+    for avg in (False, True):
+        np.testing.assert_array_equal(ctl2._route_cache.cost(0, avg),
+                                      fresh2.cost(0, avg))
+    assert not np.array_equal(stale.cost(0), fresh2.cost(0))

@@ -294,6 +294,203 @@ def test_ep_shard_map_on_real_mesh():
 
 
 # ---------------------------------------------------------------------------
+# Heterogeneous device groups: per-server meshes (the tentpole)
+# ---------------------------------------------------------------------------
+
+HETERO_SHAPES = {0: None, 1: (1, 2), 2: (2, 2)}  # solo, 2-dev TP, 4-dev
+
+
+def _build_hetero(arch, groups, *, decode_mode="fused", cache_layout="slab",
+                  page_size=None, max_new=4):
+    """3-server deployment at R=3 (every server hosts every block, so every
+    group's sharded step actually runs) with per-server device groups."""
+    cfg = get_reduced_config(arch)
+    system = GeoServingSystem(cfg, _params_for(cfg),
+                              _problem(cfg, 3, max_new), algorithm="proposed",
+                              R=3, max_new_tokens=max_new, max_sessions=4,
+                              decode_mode=decode_mode,
+                              cache_layout=cache_layout, page_size=page_size,
+                              device_groups=groups)
+    assert len(system.servers) == 3  # R=3: every server hosts every block
+    return cfg, system
+
+
+def test_all_solo_device_groups_are_byte_identical():
+    """device_groups with every entry None (or missing) IS the unsharded
+    engine: same jit twin from the factory cache, bit-identical serving."""
+    cfg, ref = _build_hetero("llama3_2_1b", None)
+    jobs = _jobs_for(cfg, (4, 6))
+    want = _serve(ref, jobs)
+
+    cfg, system = _build_hetero("llama3_2_1b", {0: None, 2: None})
+    for srv in system.servers.values():
+        assert srv.mesh is None and srv.n_chips == 1
+    got = _serve(system, jobs)
+    assert got[0] == want[0] and got[1] == want[1]
+    for hg, hw in zip(got[2], want[2]):
+        for a, b in zip(hg, hw):
+            np.testing.assert_array_equal(a, b)  # bit-for-bit
+
+
+@needs8
+@pytest.mark.parametrize("layout,page_size", [("slab", None), ("paged", 2)])
+@pytest.mark.parametrize("mode", ["fused", "serial"])
+def test_hetero_groups_match_all_solo_twin(mode, layout, page_size):
+    """The hetero acceptance matrix: mixed {solo, 2-device, 4-device}
+    groups on one host — token streams and the virtual clock EXACTLY equal
+    to the all-solo twin across fused/serial x slab/paged."""
+    from repro.launch.mesh import group_meshes
+
+    cfg, ref = _build_hetero("llama3_2_1b", None, decode_mode=mode,
+                             cache_layout=layout, page_size=page_size)
+    jobs = _jobs_for(cfg, (4, 6, 5))
+    want = _serve(ref, jobs)
+
+    groups = group_meshes(HETERO_SHAPES)
+    cfg, system = _build_hetero("llama3_2_1b", groups, decode_mode=mode,
+                                cache_layout=layout, page_size=page_size)
+    assert [system.servers[j].n_chips for j in sorted(system.servers)] \
+        == [1, 2, 4]
+    got = _serve(system, jobs)
+    assert got[0] == want[0], f"hetero/{mode}/{layout}: tokens diverge"
+    assert got[1] == want[1], f"hetero/{mode}/{layout}: vclock diverges"
+    for hg, hw in zip(got[2], want[2]):
+        for a, b in zip(hg, hw):
+            np.testing.assert_allclose(a, b, **LOGIT_TOL)
+
+
+@needs8
+def test_hetero_groups_disjoint_devices_and_own_rules():
+    """Each server's params/pool live on ITS OWN device slice; per-group
+    rule derivation is independent (frozen_serving_rules cache keys on the
+    group's mesh)."""
+    from repro.launch.mesh import group_meshes
+    from repro.launch.sharding import serving_rules
+
+    groups = group_meshes(HETERO_SHAPES)
+    cfg, system = _build_hetero("llama3_2_1b", groups)
+    seen = set()
+    for j, srv in system.servers.items():
+        devs = set(srv.group.devices)
+        assert not (devs & seen), f"server {j} shares devices"
+        seen |= devs
+        if srv.mesh is not None:
+            assert srv.mesh_rules == serving_rules(
+                cfg, srv.mesh, srv.pool.n_rows, srv.pool.max_len)
+            for leaf in jax.tree.leaves(srv.run_params):
+                assert set(leaf.sharding.device_set) == devs
+
+
+@needs8
+def test_hetero_calibrated_taus_are_non_constant():
+    """The acceptance criterion: on a heterogeneous deployment (identical
+    spec'd servers, different device groups) calibrate_taus() yields a
+    NON-constant vector — bigger groups get smaller per-device roofline
+    bounds — and calibrated_problem() carries it while the live problem
+    keeps its spec'd τ."""
+    from repro.launch.mesh import group_meshes
+
+    groups = group_meshes(HETERO_SHAPES)
+    cfg, system = _build_hetero("llama3_2_1b", groups)
+    taus = system.calibrate_taus()
+    assert set(taus) == {0, 1, 2}
+    assert all(np.isfinite(t) and t > 0 for t in taus.values())
+    assert len({round(t, 15) for t in taus.values()}) > 1, taus
+    # more devices -> per-device step cost can only shrink
+    assert taus[2] <= taus[0] * (1 + 1e-9), taus
+    cal = system.calibrated_problem()
+    np.testing.assert_allclose(cal.tau(), [taus[0], taus[1], taus[2]])
+    assert system.problem.tau().tolist() == [0.01, 0.02, 0.03]
+
+
+def test_device_groups_and_global_mesh_are_exclusive():
+    cfg = get_reduced_config("llama3_2_1b")
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="not both"):
+        GeoServingSystem(cfg, _params_for(cfg), _problem(cfg), R=2,
+                         max_new_tokens=4, max_sessions=4, mesh=mesh,
+                         device_groups={0: mesh})
+
+
+# ---------------------------------------------------------------------------
+# Padded MoE EP through the pooled decode step (satellite of PR 9)
+# ---------------------------------------------------------------------------
+
+
+def _pad_model_experts(params, E, E_alloc):
+    """Zero-pad the stacked per-layer expert weights (L, E, ...) ->
+    (L, E_alloc, ...): the global path slices ``[:E]`` so the pad is inert
+    on the solo twin, while a mesh makes the pooled decode step take the
+    pure-EP all-to-all (kv_cache._ep_row_grid)."""
+    out = jax.tree.map(lambda x: x, params)  # fresh containers, shared leaves
+    ffn = out["segments"]["blocks"]["ffn"]
+    for k in ("wg", "wu", "wo"):
+        w = ffn[k]
+        pad = jnp.zeros((w.shape[0], E_alloc - E) + w.shape[2:], w.dtype)
+        ffn[k] = jnp.concatenate([w, pad], axis=1)
+    return out
+
+
+@needs8
+def test_padded_ep_through_pooled_decode_step():
+    """ROADMAP closure: the padded `_apply_moe_ep` all-to-all path runs
+    THROUGH a pooled decode step on a real (2,2) mesh — not just
+    standalone.  The decoder body regroups the pool's rows into a
+    (n_data, rows/n_data) grid for the position-free FFN half; tokens and
+    the virtual clock stay EXACTLY equal to the solo twin on the same
+    padded params (which the global path slices back to E)."""
+    import repro.serving.kv_cache as KV
+    from repro.launch.sharding import freeze_rules
+
+    cfg = get_reduced_config("llama4_scout_17b_a16e")
+    E = cfg.n_experts
+    params = _pad_model_experts(_params_for(cfg), E, 2 * E)
+
+    def build(mesh):
+        return GeoServingSystem(cfg, params, _problem(cfg, 2, 4),
+                                algorithm="proposed", R=2, max_new_tokens=4,
+                                max_sessions=4, mesh=mesh)
+
+    ref = build(None)
+    jobs = _jobs_for(cfg, (4, 6, 5))
+    want = _serve(ref, jobs)
+
+    mesh = compat_make_mesh((2, 2), ("data", "model"))
+    system = build(mesh)
+    srv = next(iter(system.servers.values()))
+    frozen = freeze_rules(srv.mesh_rules)
+    grid = KV._ep_row_grid(cfg, mesh, frozen, srv.run_params[0],
+                           srv.pool.n_rows)
+    assert grid == (2, srv.pool.n_rows // 2), \
+        "pooled decode step did not engage the EP row grid"
+    got = _serve(system, jobs)
+    assert got[0] == want[0], "EP-through-decode: tokens diverge"
+    assert got[1] == want[1], "EP-through-decode: vclock diverges"
+    for hg, hw in zip(got[2], want[2]):
+        for a, b in zip(hg, hw):
+            np.testing.assert_allclose(a, b, atol=2e-5, rtol=1e-4)
+
+
+@needs8
+def test_unpadded_moe_keeps_reference_decode_trace():
+    """Reduced (unpadded) MoE configs must NOT take the EP decode branch:
+    the gate keys on padded expert weights, so existing sharded parity
+    stays byte-identical."""
+    import repro.serving.kv_cache as KV
+    from repro.launch.sharding import freeze_rules
+
+    cfg = get_reduced_config("llama4_scout_17b_a16e")
+    mesh = compat_make_mesh((2, 2), ("data", "model"))
+    system = GeoServingSystem(cfg, _params_for(cfg), _problem(cfg, 2, 4),
+                              R=2, max_new_tokens=4, max_sessions=4,
+                              mesh=mesh)
+    srv = next(iter(system.servers.values()))
+    frozen = freeze_rules(srv.mesh_rules)
+    assert KV._ep_row_grid(cfg, mesh, frozen, srv.run_params[0],
+                           srv.pool.n_rows) is None
+
+
+# ---------------------------------------------------------------------------
 # Subprocess acceptance: force 8 devices regardless of the parent process
 # ---------------------------------------------------------------------------
 

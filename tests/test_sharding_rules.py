@@ -205,6 +205,95 @@ def test_pool_tree_shardings_structure(arch, layout):
         assert len(tuple(s.spec)) <= leaf.ndim
 
 
+# ---------------------------------------------------------------------------
+# Mixed mesh extents: per-group rule derivation (heterogeneous device groups)
+# ---------------------------------------------------------------------------
+
+GROUP_EXTENTS = [(1, 1), (1, 2), (2, 1), (2, 2), (2, 4), (4, 2), (1, 8)]
+
+
+class _HashableMesh:
+    """Like ``_mesh`` but hashable by identity (no ``__eq__``), so it can
+    key the ``frozen_serving_rules`` lru_cache like a real Mesh does."""
+
+    def __init__(self, data, model):
+        self.axis_names = ("data", "model")
+        self.devices = np.zeros((data, model), np.int8)
+
+
+@SETTINGS
+@given(st.sampled_from(FAMILIES), st.sampled_from([1, 2, 3, 4, 6, 8]),
+       st.sampled_from([8, 16, 32]))
+def test_rules_hold_independently_per_group(arch, n_rows, max_len):
+    """One heterogeneous deployment, many groups: rules derived for
+    DIFFERENT mesh extents must each satisfy the divisibility / no-reuse /
+    replication invariants against THEIR OWN mesh — a 2-device group's
+    rules never leak into a 4-device group's specs (the per-server
+    DeviceGroup contract)."""
+    cfg, pool = _pool(arch)
+    for data, model in GROUP_EXTENTS:
+        mesh = _mesh(data, model)
+        rules = serving_rules(cfg, mesh, n_rows=n_rows, max_len=max_len)
+        # batch maps to the data axis only when THIS group's extent divides
+        if rules["batch"] is not None:
+            assert n_rows % data == 0, (arch, n_rows, data)
+        scratch = dict(rules)
+
+        def one(path, leaf, mesh=mesh, scratch=scratch, sizes={"data": data,
+                                                               "model": model}):
+            name = next((p.key for p in reversed(path)
+                         if hasattr(p, "key")), None)
+            axes = cache_axes_for(name, leaf.ndim, scratch)
+            spec = guarded_spec(axes, leaf.shape, scratch, mesh)
+            _check_spec(spec, leaf.shape, sizes)
+            return None
+
+        jax.tree_util.tree_map_with_path(one, pool.tree)
+
+
+def test_frozen_serving_rules_cache_keys_per_group():
+    """``frozen_serving_rules`` memoizes per (cfg, mesh, rows, len): the
+    same group hits the cache (identical object), different groups get
+    independent derivations that thaw back to ``serving_rules``."""
+    from repro.launch.sharding import frozen_serving_rules
+
+    cfg = get_reduced_config("llama3_2_1b")
+    m1, m2 = _HashableMesh(1, 2), _HashableMesh(2, 2)
+    f1 = frozen_serving_rules(cfg, m1, 4, 8)
+    assert frozen_serving_rules(cfg, m1, 4, 8) is f1  # cache hit
+    f2 = frozen_serving_rules(cfg, m2, 4, 8)
+    assert thaw_rules(f1) == serving_rules(cfg, m1, 4, 8)
+    assert thaw_rules(f2) == serving_rules(cfg, m2, 4, 8)
+    # per-group keying: a different n_rows is a different cache entry
+    assert frozen_serving_rules(cfg, m1, 3, 8) is not f1
+
+
+def test_device_group_descriptor():
+    """DeviceGroup: solo twin (mesh=None) owns no devices and derives no
+    rules; a mesh group derives (and freezes) its own rules; dict overrides
+    are frozen at construction; as_device_group normalizes."""
+    from repro.launch.sharding import (DeviceGroup, as_device_group,
+                                       frozen_serving_rules)
+
+    solo = as_device_group(None)
+    assert solo.mesh is None and solo.n_chips == 1 and solo.devices == ()
+    cfg = get_reduced_config("llama3_2_1b")
+    assert solo.frozen_rules_for(cfg, 4, 8) is None
+
+    mesh = _HashableMesh(2, 2)
+    g = as_device_group(mesh)
+    assert g.mesh is mesh and g.n_chips == 4 and len(g.devices) == 4
+    assert g.frozen_rules_for(cfg, 4, 8) == frozen_serving_rules(
+        cfg, mesh, 4, 8)
+    assert as_device_group(g) is g  # idempotent
+
+    override = DeviceGroup(mesh=mesh,
+                           rules={"batch": None, "mlp": "model"})
+    assert isinstance(override.rules, tuple)  # frozen at construction
+    assert override.frozen_rules_for(cfg, 4, 8) == override.rules
+    assert thaw_rules(override.rules)["batch"] is None
+
+
 def test_serving_rules_disable_sequence_sharding():
     """Pooled steps vmap one token per row — serving rules must never
     sequence-shard activations, whatever make_rules would pick."""
