@@ -797,6 +797,128 @@ def sim_churn_study(n_servers: int = 120, n_requests: int = 2000,
             "requests_per_s": n_requests / wall, "wall_s": wall}
 
 
+def chaos_recovery_study(n_sessions: int = 6, n_new: int = 12,
+                         kill_round: int = 3, victim: int = 5):
+    """Crash-recovery latency + goodput, engine-vs-simulator
+    cross-validated.
+
+    An 8-server toy fleet serves ``n_sessions`` single-hop sessions; a
+    :class:`FaultPlan` crashes ``victim``'s server silently after
+    ``kill_round`` decode rounds.  The ENGINE discovers the loss by
+    missed deadline, bills detection + backoff + failover replay on the
+    virtual clock, and finishes every stream.  The SIMULATOR side prices
+    the same recovery analytically from the shared components —
+    ``FailureDetector.detect_time``/``backoff_time``, the
+    ``subchain_route`` splice, and ``recovery_replay_cost`` with the
+    known replay token count — and the two totals must agree to float
+    precision (``recovery_parity``).  Goodput is tokens over the fleet
+    makespan, reported against the fault-free twin; the default victim
+    is the slowest host (the makespan holder), so the billed recovery
+    visibly dents fleet goodput."""
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.core import LLMSpec, Problem, Route, ServerSpec, Workload
+    from repro.models import init_params
+    from repro.serving import (FailureDetector, FaultEvent, FaultPlan,
+                               GeoServingSystem)
+    from repro.serving.faults import recovery_replay_cost
+    from repro.sim import subchain_route
+
+    cfg = get_reduced_config("llama3_2_1b")
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    n_servers, l_in = 8, 4
+    detector = FailureDetector(timeout_factor=3.0, backoff_base=0.01,
+                               backoff_cap=0.04)
+
+    def build(plan=None):
+        llm = LLMSpec("toy", cfg.n_layers, block_bytes=50.0,
+                      cache_bytes_per_token=1.0)
+        servers = [ServerSpec(j, mem_bytes=900.0, tau=0.01 * (j + 1),
+                              tau_prefill_base=0.002,
+                              tau_prefill_per_token=0.0005)
+                   for j in range(n_servers)]
+        rtt = np.full((1, n_servers), 0.02)
+        prob = Problem(llm, servers, 1, rtt, rtt * 3,
+                       workload=Workload(l_in, n_new))
+        system = GeoServingSystem(cfg, params, prob, R=4,
+                                  max_new_tokens=n_new,
+                                  max_sessions=n_sessions + 2,
+                                  fault_plan=plan, detector=detector)
+        rng = np.random.RandomState(0)
+        sids = []
+        for j in range(n_sessions):
+            a, m = int(system.placement.a[j]), int(system.placement.m[j])
+            assert a == 0 and m == prob.L, "toy placement must replicate"
+            sids.append(system.create_session(
+                rng.randint(2, cfg.vocab_size, l_in), 0,
+                Route(servers=(j,), blocks=(m,)), n_new))
+        assert system.try_admit_sessions(sids) == sids
+        system.drain_prefill()
+        return prob, system, sids
+
+    def drive(system, sids):
+        done = {}
+        while len(done) < len(sids):
+            for sid in sids:
+                sess = system.sessions.get(sid)
+                if sid not in done and (sess.state == "failed"
+                                        or sess.n_generated >= n_new):
+                    done[sid] = system.retire_session(sid)
+            if len(done) < len(sids):
+                system.decode_round()
+        return done
+
+    # fault-free twin: baseline makespan/goodput + the crash's clock time
+    prob, twin_sys, twin_sids = build()
+    clocks = {s: twin_sys.sessions[s].virtual_time for s in twin_sids}
+    ptok = {s: twin_sys.sessions[s].per_token_time for s in twin_sids}
+    twin = drive(twin_sys, twin_sids)
+    # deliver the crash just before the min member clock crosses into
+    # round kill_round+1, so exactly kill_round decoded tokens replay
+    t_kill = min(clocks[s] + kill_round * ptok[s] for s in twin_sids) - 1e-9
+    makespan0 = max(s.start + s.virtual_time for s in twin.values())
+    goodput0 = n_sessions * n_new / makespan0
+
+    plan = FaultPlan([FaultEvent(time=t_kill, kind="crash", server=victim)])
+    prob, system, sids = build(plan)
+    done = drive(system, sids)
+    vic = done[sids[victim]]
+    makespan1 = max(s.start + s.virtual_time for s in done.values())
+    goodput1 = n_sessions * n_new / makespan1
+
+    # simulator-side analytic prediction from the SHARED pricing pieces
+    expected_hop = float(prob.rtt_token[0, victim]
+                         + prob.llm.tau_weight(0, prob.L)
+                         * prob.servers[victim].tau)
+    spliced = subchain_route(prob, twin_sys.placement, {victim},
+                             0, prob.L, 0)
+    repl, e = [], 0
+    for j, k in zip(spliced.servers, spliced.blocks):
+        repl.append((j, e, e + k))
+        e += k
+    predicted = (detector.detect_time(expected_hop)
+                 + detector.backoff_time()
+                 + recovery_replay_cost(prob, 0, repl, kill_round,
+                                        l_in=l_in))
+    err = abs(vic.recovery_time - predicted) / predicted
+    assert vic.route.servers == spliced.servers, (vic.route, spliced)
+    served = sum(1 for s in done.values() if s.state != "failed")
+    return {"n_sessions": n_sessions, "served": served,
+            "n_detections": int(vic.n_detections),
+            "n_replays": int(vic.n_replays),
+            "recovery_s": float(vic.recovery_time),
+            "detect_s": float(vic.detect_time),
+            "backoff_s": float(vic.backoff_time),
+            "replay_s": float(vic.replay_time),
+            "predicted_recovery_s": float(predicted),
+            "recovery_err": float(err),
+            "recovery_parity": int(err < 1e-6),
+            "goodput_tok_s": float(goodput1),
+            "goodput_fault_free_tok_s": float(goodput0),
+            "goodput_frac": float(goodput1 / goodput0)}
+
+
 def sim_scale_smoke(n_requests: int = 50_000, budget_s: float = 60.0):
     """Bounded CI scale check (the ``--sim-scale`` job): a 50k-request
     diurnal trace through the fast engine must finish under the wall
@@ -1010,6 +1132,18 @@ def run(full: bool = False, smoke: bool = False):
          f"drop_rate={st['drop_rate']:.3f})")
     _record("sim.tput.1M", **st)
 
+    # chaos recovery: silent crash of the makespan-critical server,
+    # timeout-detected and billed by the engine, priced analytically by
+    # the simulator side from the shared detector/splice/replay pieces
+    cr, us = timed(chaos_recovery_study)
+    emit("chaos.recovery", us,
+         f"recovery={cr['recovery_s']:.3f}s "
+         f"(predicted {cr['predicted_recovery_s']:.3f}s, "
+         f"err={cr['recovery_err']:.1e}), served "
+         f"{cr['served']}/{cr['n_sessions']}, "
+         f"goodput_frac={cr['goodput_frac']:.2f}")
+    _record("chaos.recovery", **cr)
+
     # elastic-fleet churn: 120 servers, timed join/leave storms, each one
     # a full CG-BP re-placement through OnlineBPRR.replace_servers
     ch, us = timed(sim_churn_study,
@@ -1074,6 +1208,9 @@ _REQUIRED_ROWS = {
                     "parity_spot_check", "fast_frac"),
     "sim.churn": ("n_servers", "n_requests", "n_replacements",
                   "drop_rate", "alive_min"),
+    "chaos.recovery": ("recovery_s", "predicted_recovery_s",
+                       "recovery_parity", "goodput_frac", "served",
+                       "n_sessions"),
 }
 
 
@@ -1139,6 +1276,14 @@ def check_json(path: str) -> int:
     assert ch["n_servers"] >= 100 and ch["n_replacements"] >= 1, ch
     assert 0.0 <= ch["drop_rate"] <= 0.5, ch
     assert 0 < ch["alive_min"] <= ch["n_servers"], ch
+    # chaos recovery: engine-vs-simulator recovery pricing must agree
+    # (shared detector/splice/replay pieces — pass/fail, not a tolerance),
+    # every session survives the crash, and the billed recovery costs
+    # real goodput without collapsing it
+    cr = data["chaos.recovery"]
+    assert cr["recovery_parity"] == 1 and cr["recovery_s"] > 0.0, cr
+    assert cr["served"] == cr["n_sessions"], cr
+    assert 0.3 <= cr["goodput_frac"] <= 1.0, cr
     print(f"OK: {len(data)} scenarios, all {len(_REQUIRED_ROWS)} required "
           f"rows present; decode R32 speedup "
           f"{data['decode.tput.R32']['speedup']:.2f}x, paged co-residency "

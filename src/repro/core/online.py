@@ -63,10 +63,15 @@ class OnlineBPRR:
         self.placement, self.info = cg_bp(problem, self.R)
         self.sessions: Dict[int, Session] = {}
         self._next_sid = itertools.count()
+        # flap avoidance: {server: additive per-token cost penalty} for
+        # servers the serving layer has seen fail by timeout — survives
+        # replace_servers (a rejoined server stays penalized until cleared)
+        self._suspicion: Dict[int, float] = {}
         # placement-derived routing inputs (graph, edge costs, slot caps)
         # are arrival-invariant: memoize them across admits and invalidate
         # only when the placement / server set changes (replace_servers)
-        self._route_cache = RouteCostCache(self.problem, self.placement)
+        self._route_cache = RouteCostCache(self.problem, self.placement,
+                                           suspicion=self._suspicion)
 
     def _cache_scaled(self, problem: Problem) -> Problem:
         if self.slot_scale == 1.0:
@@ -148,7 +153,24 @@ class OnlineBPRR:
             self.R = int(R)
         self.placement, self.info = cg_bp(self.problem, self.R)
         # capacities / RTTs / placement changed: drop every memoized input
-        self._route_cache = RouteCostCache(self.problem, self.placement)
+        # (the suspicion map persists — flap avoidance across rejoins)
+        self._route_cache = RouteCostCache(self.problem, self.placement,
+                                           suspicion=self._suspicion)
+
+    def set_suspicion(self, j: int, penalty: float):
+        """Penalize edges into server ``j`` by ``penalty`` seconds/token
+        in every routing decision (timeout-detected failure — see
+        ``FailureDetector.suspicion_penalty``).  Rebuilds the memoized
+        route cache so the next admit sees it."""
+        self._suspicion[int(j)] = float(penalty)
+        self._route_cache = RouteCostCache(self.problem, self.placement,
+                                           suspicion=self._suspicion)
+
+    def clear_suspicion(self, j: int):
+        """Forgive server ``j`` (it has proven itself after a rejoin)."""
+        if self._suspicion.pop(int(j), None) is not None:
+            self._route_cache = RouteCostCache(self.problem, self.placement,
+                                               suspicion=self._suspicion)
 
     def guarantee(self) -> float:
         """Completion-time guarantee (22) while concurrency <= R."""

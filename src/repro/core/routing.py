@@ -64,11 +64,20 @@ class RouteCostCache:
     cache whenever the placement, the RTT matrices, server capacities or
     τ values change (``OnlineBPRR.replace_servers`` does exactly that);
     per-arrival state (waiting times) is never cached here.
+
+    ``suspicion``: optional ``{server: penalty_seconds}`` map — every edge
+    INTO a suspected server carries the additive per-token penalty, so
+    WS-RR (and the memoized base decisions) steer routes away from
+    flapping servers without forbidding them outright.  The penalty
+    biases route SELECTION only; ``route_times`` (the billed eq. (1)
+    clock of whatever route is chosen) never includes it.
     """
 
-    def __init__(self, problem: Problem, placement: Placement):
+    def __init__(self, problem: Problem, placement: Placement,
+                 suspicion: Optional[Dict[int, float]] = None):
         self.problem = problem
         self.placement = placement
+        self.suspicion = dict(suspicion) if suspicion else {}
         self.graph = RoutingGraph.build(placement, problem.L)
         # eq. (20) inputs reused by edge_waiting_times on every arrival
         m = placement.m
@@ -85,8 +94,12 @@ class RouteCostCache:
     def cost(self, client: int, avg_over_tokens: bool = False) -> np.ndarray:
         key = (int(client), bool(avg_over_tokens))
         if key not in self._cost:
-            self._cost[key] = edge_cost_matrix(
+            c = edge_cost_matrix(
                 self.problem, self.placement, client, avg_over_tokens)
+            for j, pen in self.suspicion.items():
+                if 0 <= int(j) < c.shape[1]:
+                    c[:, int(j)] += float(pen)
+            self._cost[key] = c
         return self._cost[key]
 
     def route_times(self, client: int, route: Route) -> Tuple[float, float]:

@@ -10,6 +10,8 @@ session/request record types."""
 from repro.launch.sharding import DeviceGroup, as_device_group
 from repro.serving.engine import (BlockServer, EngineSession,
                                   GeoServingSystem, generate)
+from repro.serving.faults import (FailureDetector, FaultEvent, FaultPlan,
+                                  NoCapacityError, recovery_replay_cost)
 from repro.serving.kv_cache import (SUPPORTED_KINDS, CachePool, PagePool,
                                     StateSpec, bucket_for,
                                     default_prefill_buckets, kind_runs,
@@ -30,9 +32,11 @@ from repro.serving.scheduler import (AdmissionScheduler,
 
 __all__ = ["AdmissionScheduler", "BlockServer", "CachePool",
            "ContinuousBatchingScheduler", "DeviceGroup", "EngineSession",
-           "GeoServingSystem", "PagePool", "SUPPORTED_KINDS", "SamplingSpec",
+           "FailureDetector", "FaultEvent", "FaultPlan",
+           "GeoServingSystem", "NoCapacityError", "PagePool",
+           "SUPPORTED_KINDS", "SamplingSpec",
            "ServedRequest", "StateSpec", "as_device_group", "bucket_for",
-           "default_prefill_buckets", "generate",
+           "default_prefill_buckets", "generate", "recovery_replay_cost",
            "kind_runs", "make_paged_decode_step", "make_paged_prefill_step",
            "make_paged_round_step", "make_pool_decode_step",
            "make_pool_prefill_step", "make_pool_round_step",

@@ -65,6 +65,8 @@ from repro.core.placement import petals_bp
 from repro.core.routing import petals_route, shortest_path_route
 from repro.models.layers import NULL_SH, embed_frames, embed_tokens, lm_head
 from repro.models.model import block_param_range
+from repro.serving.faults import (FailureDetector, FaultPlan,
+                                  NoCapacityError, recovery_replay_cost)
 from repro.serving.kv_cache import (CachePool, bucket_for,
                                     default_prefill_buckets, kind_runs,
                                     make_paged_decode_step,
@@ -101,10 +103,23 @@ class EngineSession:
     tokens: List[int] = field(default_factory=list)  # prompt + generated
     n_generated: int = 0
     # admitted | prefilling | active | preempted | failed | done —
-    # "preempted" (paged layout only): evicted from every route server
-    # under page pressure, resumable via the failover-replay machinery
+    # "preempted": evicted from every route server (page pressure, or a
+    # capacity-starved failover deferral), resumable via the
+    # failover-replay machinery
     state: str = "admitted"
+    # machine-readable reason when state == "failed" (e.g. "no_route",
+    # "no_capacity", "server_lost_mid_prefill")
+    fail_reason: Optional[str] = None
     n_preemptions: int = 0  # times this session was swapped out
+    # failure-recovery accounting (timeout detection -> backoff -> billed
+    # replay; see docs/concurrency.md "Failure model")
+    n_detections: int = 0  # timeout-detected server losses on this route
+    n_retries: int = 0  # backoff probes sent while confirming a suspect
+    n_replays: int = 0  # cache rebuilds billed (failover or resume)
+    detect_time: float = 0.0  # deadline waits (virtual seconds)
+    backoff_time: float = 0.0  # probe backoff sleeps (virtual seconds)
+    replay_time: float = 0.0  # replay compute + input RTTs (virtual s)
+    n_defer_resumes: int = 0  # capacity-deferral resume attempts
     # per-hop input history (the PETALS fault-tolerance cache); entry 0 is
     # the prompt-phase record — a plain array for single-phase stacks, a
     # {"enc": ..., "dec": ...} dict for enc-dec — followed by one record per
@@ -142,6 +157,12 @@ class EngineSession:
     @last_logits.setter
     def last_logits(self, value):
         self._logits_box = value
+
+    @property
+    def recovery_time(self) -> float:
+        """Total virtual-clock time this session spent recovering from
+        failures: detection waits + backoff sleeps + billed replay."""
+        return self.detect_time + self.backoff_time + self.replay_time
 
 
 class BlockServer:
@@ -181,6 +202,13 @@ class BlockServer:
                               enc_len=enc_len, layout=cache_layout,
                               page_size=page_size)
         self.alive = True
+        # crashed: the server stopped responding but no client has noticed
+        # yet — dispatches to it miss their deadline and the engine bills
+        # timeout detection before flipping ``alive`` (FaultPlan path).
+        # suspected: it was once declared dead by timeout; routing keeps an
+        # additive cost penalty against it even after a rejoin.
+        self.crashed = False
+        self.suspected = False
         self.slowdown = slowdown
         # Optional TP/EP device group: this server's params + pool live
         # sharded over the group's mesh per the logical-axis rules, and its
@@ -489,10 +517,15 @@ class GeoServingSystem:
     the prompt's pages, sessions grow page-by-page during decode, and
     under page pressure the engine PREEMPTS a victim session (its pages
     are freed; its client-side hop histories remain) and later resumes it
-    through the failover-replay machinery — token streams and the virtual
-    clock are bit-identical to the slab layout and to an unpreempted run.
+    through the failover-replay machinery — token streams are bit-identical
+    to the slab layout and to an unpreempted run, and the virtual clock
+    differs from them by EXACTLY the billed resume-replay cost (zero when
+    nothing was preempted).
     ``page_size``: tokens per page; must divide ``max_seq_len`` (defaults
     to the largest divisor ≤ 16).
+    ``fault_plan`` / ``detector``: deterministic fault injection on the
+    virtual clock and the timeout/backoff policy that prices failure
+    detection — see docs/concurrency.md "Failure model".
     """
 
     def __init__(self, cfg: ModelConfig, params, problem: Problem,
@@ -506,7 +539,9 @@ class GeoServingSystem:
                  backend: str = "xla",
                  cache_layout: str = "slab",
                  page_size: Optional[int] = None,
-                 mesh=None, mesh_rules=None, device_groups=None):
+                 mesh=None, mesh_rules=None, device_groups=None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 detector: Optional[FailureDetector] = None):
         from repro.kernels.runtime import resolve_backend
 
         assert problem.L == cfg.n_layers
@@ -614,7 +649,24 @@ class GeoServingSystem:
         # host sync — tests/test_round_fusion.py asserts against this)
         self.round_stats = {"rounds": 0, "embed_dispatches": 0,
                             "tail_dispatches": 0, "hop_dispatches": 0,
-                            "preemptions": 0, "resumes": 0}
+                            "preemptions": 0, "resumes": 0,
+                            "detections": 0, "retries": 0, "replays": 0,
+                            "rejoins": 0, "dispatch_errors": 0,
+                            "detect_s": 0.0, "backoff_s": 0.0,
+                            "replay_s": 0.0}
+        # fault injection: a seedable FaultPlan drives crashes / rejoins /
+        # stragglers / dispatch errors on the virtual clock via
+        # ``apply_faults(now)``; the detector prices timeout detection +
+        # backoff (docs/concurrency.md "Failure model")
+        self.fault_plan = fault_plan
+        self.detector = detector if detector is not None else \
+            FailureDetector()
+        self._fault_cursor = 0
+        # servers with a pending one-shot admission-dispatch fault
+        self._dispatch_faults: set = set()
+        # calibration-time taus: set_slowdown() factors are ABSOLUTE
+        # multipliers over these, so straggler intervals restore cleanly
+        self._base_taus = [float(s.tau) for s in problem.servers]
 
     # ------------------------------------------------------------------
     def _cap_slots(self, j: int, m: int) -> int:
@@ -788,6 +840,16 @@ class GeoServingSystem:
         failed_clients: set = set()
         for sid in sids:
             sess = self.sessions[sid]
+            # one-shot admission-dispatch fault (FaultPlan kind
+            # "dispatch_error"): the admit RPC through a faulted server
+            # fails once; the caller defers and retries like a full pool
+            faulted = [j for j in sess.route.servers
+                       if j in self._dispatch_faults]
+            if faulted:
+                self._dispatch_faults.difference_update(faulted)
+                self.round_stats["dispatch_errors"] += 1
+                failed_clients.add(sess.client)
+                continue
             if sess.client in failed_clients or not self.fits_session(sid):
                 failed_clients.add(sess.client)
                 continue
@@ -840,7 +902,8 @@ class GeoServingSystem:
         still: List[_PrefillGroup] = []
         for g in self._prefill_groups:
             done.extend(self._prefill_group_round(g))
-            if any(s.prompt_len > g.offset for s in g.members):
+            if any(s.state == "prefilling" and s.prompt_len > g.offset
+                   for s in g.members):
                 still.append(g)
         self._prefill_groups = still
         return done
@@ -905,8 +968,35 @@ class GeoServingSystem:
     def _prefill_group_round(self, g: _PrefillGroup) -> List[int]:
         """One chunk round for one bucket group: embed the (padded) token
         chunk of every member, run the pooled prefill step per hop, account
-        the virtual clock, and finalize members whose prompt completed."""
-        active = [s for s in g.members if s.prompt_len > g.offset]
+        the virtual clock, and finalize members whose prompt completed.
+
+        A route server lost mid-prefill (dead, crashed, or wiped by a
+        rejoin) fails the group's in-flight members with a machine-readable
+        reason: the per-hop input histories that failover replay needs are
+        only complete at prompt completion, so there is nothing to splice
+        from yet.  Crashed-but-undetected servers bill timeout detection on
+        the members first (their dispatch is what discovers the loss);
+        sessions in other groups and already-active sessions are untouched
+        and keep their bit-exact streams."""
+        active = [s for s in g.members
+                  if s.state == "prefilling" and s.prompt_len > g.offset]
+        if not active:
+            return []
+        lost = [j for j in g.route.servers
+                if j not in self.servers or not self.servers[j].alive
+                or self.servers[j].crashed
+                or any(s.sid not in self.servers[j].pool.rows
+                       for s in active)]
+        if lost:
+            for j in lost:
+                srv = self.servers.get(j)
+                if srv is not None and srv.alive and srv.crashed:
+                    self._detect_crash(j, [
+                        (s, self._expected_hop_prefill(s, j))
+                        for s in active])
+            for s in active:
+                self._abort_session(s, reason="server_lost_mid_prefill")
+            return []
         # this round's padded width comes from the SAME plan failover replay
         # uses (any active member's plan has an entry at g.offset, and t_pad
         # is session-independent by construction) — one source of truth for
@@ -1099,6 +1189,63 @@ class GeoServingSystem:
             e += k
         return t
 
+    # ------------------------------------------------------------------
+    # Timeout-based failure detection (docs/concurrency.md "Failure model")
+    # ------------------------------------------------------------------
+    def _expected_hop_decode(self, sess: EngineSession, hop: int) -> float:
+        """Eq. (1) expected decode hop time — the client's dispatch
+        deadline is ``detector.timeout_factor`` times this."""
+        j = sess.route.servers[hop]
+        e_lo, e_hi = self._hop_span(sess, hop)
+        return (self.problem.rtt_token[sess.client, j]
+                + self.problem.llm.tau_weight(e_lo, e_hi)
+                * self.problem.servers[j].tau * self.servers[j].slowdown)
+
+    def _expected_hop_prefill(self, sess: EngineSession, j: int) -> float:
+        """Expected prefill hop time for route server ``j`` (deadline
+        basis when the loss is discovered mid-prefill)."""
+        e = 0
+        for jj, k in zip(sess.route.servers, sess.route.blocks):
+            if jj == j:
+                return (self.problem.rtt_prefill[sess.client, j]
+                        + self.problem.llm.tau_weight(e, e + k)
+                        * self.problem.servers[j].tau_prefill(
+                            self.problem.workload.l_in)
+                        * self.servers[j].slowdown)
+            e += k
+        return float(self.problem.rtt_prefill[sess.client, j])
+
+    def _detect_crash(self, j: int, affected):
+        """Declare crashed server ``j`` dead by timeout: every session in
+        ``affected`` — ``(session, expected_hop_time)`` pairs, all of them
+        concurrently blocked on the same silent server — bills the missed
+        deadline plus ``max_probes`` backoff probes on its virtual clock,
+        then the server is marked dead + suspected (routing penalty)."""
+        srv = self.servers[j]
+        backoff = self.detector.backoff_time()
+        for sess, expected in affected:
+            detect = self.detector.detect_time(expected)
+            sess.detect_time += detect
+            sess.backoff_time += backoff
+            sess.virtual_time += detect + backoff
+            sess.n_detections += 1
+            sess.n_retries += self.detector.max_probes
+            self.round_stats["detections"] += 1
+            self.round_stats["retries"] += self.detector.max_probes
+            self.round_stats["detect_s"] += detect
+            self.round_stats["backoff_s"] += backoff
+        srv.alive = False
+        srv.suspected = True
+
+    def _hop_needs_failover(self, sess: EngineSession, hop: int) -> bool:
+        """A hop must be spliced when its server is gone (dead / removed)
+        or no longer holds the session's cache row (it rejoined with an
+        empty pool, or a resume skipped it while dead)."""
+        j = sess.route.servers[hop]
+        srv = self.servers.get(j)
+        return (srv is None or not srv.alive
+                or sess.sid not in srv.pool.rows)
+
     def decode_round(self, sids: Optional[List[int]] = None) -> Dict[int, int]:
         """One continuous-batching round: every listed active session (all
         unfinished active sessions when ``sids`` is None) advances one token
@@ -1112,37 +1259,48 @@ class GeoServingSystem:
         the pre-refactor per-session reference — identical tokens, logits
         and virtual-clock accounting.
 
-        Paged layout: preempted sessions are resumed (FIFO) when their
-        pages fit again, and every session decoding this round first
-        grows its pages to cover the write position — preempting victims
-        under page pressure (see ``preempt_session``)."""
+        Preempted sessions (paged page pressure, or a capacity-starved
+        failover deferral on either layout) are resumed (FIFO) when they
+        fit again — resume replay is billed on the virtual clock.  Paged
+        layout additionally grows every decoding session's pages to cover
+        the write position, preempting victims under page pressure (see
+        ``preempt_session``)."""
+        explicit = sids is not None
+        if self.fault_plan is not None:
+            # virtual-clock fault injection: events due by the round's
+            # earliest member clock fire before the round dispatches
+            clock = [s.virtual_time + s.start
+                     for s in self.sessions.values()
+                     if s.state in ("active", "preempted")]
+            if clock:
+                self.apply_faults(min(clock))
+        self._resume_preempted()
+        if sids is None:
+            sids = [s.sid for s in self.sessions.values()
+                    if s.state == "active" and s.n_generated < s.n_new]
+        group = [self.sessions[sid] for sid in sids
+                 if self.sessions[sid].state == "active"]
         if self.cache_layout == "paged":
-            explicit = sids is not None
-            self._resume_preempted()
-            if sids is None:
-                sids = [s.sid for s in self.sessions.values()
-                        if s.state == "active" and s.n_generated < s.n_new]
-            group = [self.sessions[sid] for sid in sids
-                     if self.sessions[sid].state == "active"]
             group = self._ensure_page_capacity(group)
-            if not group and not explicit and any(
-                    s.state == "preempted" and s.n_generated < s.n_new
-                    for s in self.sessions.values()):
-                # nothing resident could decode, but swapped-out sessions
-                # still owe tokens: force-resume the queue head (evicting
-                # finished-but-unretired holdouts) so the round makes
-                # progress — admission's solo-fit bound guarantees the
-                # oldest preempted session eventually fits
-                self._resume_preempted(force=True)
-                group = self._ensure_page_capacity(
-                    [s for s in self.sessions.values()
-                     if s.state == "active" and s.n_generated < s.n_new])
-        else:
-            if sids is None:
-                sids = [s.sid for s in self.sessions.values()
-                        if s.state == "active" and s.n_generated < s.n_new]
-            group = [self.sessions[sid] for sid in sids
-                     if self.sessions[sid].state == "active"]
+        if not group and not explicit and any(
+                s.state == "preempted" and s.n_generated < s.n_new
+                for s in self.sessions.values()):
+            # nothing resident could decode, but swapped-out sessions
+            # still owe tokens: force-resume the queue head (evicting
+            # finished-but-unretired holdouts) so the round makes
+            # progress — admission's solo-fit bound guarantees the
+            # oldest preempted session eventually fits
+            self._resume_preempted(force=True)
+            group = [s for s in self.sessions.values()
+                     if s.state == "active" and s.n_generated < s.n_new]
+            if self.cache_layout == "paged":
+                group = self._ensure_page_capacity(group)
+            if not group:
+                # livelock guard: even a forced resume could not seat the
+                # queue head (e.g. its failover replacement chain is
+                # capacity-starved for good) — fail it with a reason so
+                # the caller's drive loop terminates
+                self._abort_stuck_head()
         if not group:
             return {}
         if self.decode_mode == "serial":
@@ -1178,9 +1336,10 @@ class GeoServingSystem:
         EVERY route server.  The client-side artifacts that survive — hop
         input histories, tokens, ``enc_out``, the sampling policy — are
         exactly the failover-replay cache, so ``_try_resume`` can rebuild
-        bit-identical server state later.  The virtual clock is untouched:
-        preemption models a host-memory swap, which the paper's clock
-        (eq. (1)) does not bill."""
+        bit-identical server state later.  Swapping OUT is free, but the
+        rebuild is real compute: ``_try_resume`` bills the replay (prompt
+        prefill + k·τ per regenerated token per hop, eq. (1)) on the
+        virtual clock, exactly like a failover replay."""
         sess = self.sessions[sid]
         assert sess.state == "active", sess.state
         sess.last_logits  # materialize a lazy fused-round logits box
@@ -1258,15 +1417,23 @@ class GeoServingSystem:
         replay its client-side history — each hop independently replays
         its own recorded inputs (prompt chunks through the deterministic
         chunk plan, then one pooled decode per generated token), exactly
-        the failover machinery, so the rebuilt caches are bit-identical
-        and the virtual clock needs no adjustment.  Dead route servers are
+        the failover machinery, so the rebuilt caches are bit-identical.
+        The rebuild is billed on the virtual clock (the swap carve-out is
+        gone): per replayed hop, one input round-trip + weighted prompt
+        prefill + k·τ per regenerated token.  Dead route servers are
         skipped: the next traverse splices them out via ``_failover`` once
         the session is resident again."""
-        need = pages_for(max(sess.pos, 1), self.page_size)
-        worst = self._worst_pages(sess)
-        hops = [(j, k) for j, k in zip(sess.route.servers,
-                                       sess.route.blocks)
-                if j in self.servers and self.servers[j].alive]
+        paged = self.cache_layout == "paged"
+        need = pages_for(max(sess.pos, 1), self.page_size) if paged else 0
+        worst = self._worst_pages(sess) if paged else None
+        e = 0
+        hops = []  # (hop index, server, block range) of alive hops
+        for hop, (j, k) in enumerate(zip(sess.route.servers,
+                                         sess.route.blocks)):
+            lo, hi = e, e + k
+            e += k
+            if j in self.servers and self.servers[j].alive:
+                hops.append((hop, j, lo, hi))
         if not hops:
             # the whole route died while swapped out: resume holding
             # nothing — the next traverse's ``_failover`` splices a full
@@ -1275,8 +1442,8 @@ class GeoServingSystem:
             sess.state = "active"
             self.round_stats["resumes"] += 1
             return True
-        for j, k in hops:
-            while not self.servers[j].fits(sess.sid, k, need, worst):
+        for _, j, lo, hi in hops:
+            while not self.servers[j].fits(sess.sid, hi - lo, need, worst):
                 if not evict_finished:
                     return False
                 victim = self._pick_victim(j, protect={sess.sid},
@@ -1284,9 +1451,26 @@ class GeoServingSystem:
                 if victim is None:
                     return False
                 self.preempt_session(victim)
-        for j, k in hops:
-            self.servers[j].admit(sess.sid, k, n_pages=need)
+        for _, j, lo, hi in hops:
+            self.servers[j].admit(sess.sid, hi - lo, n_pages=need)
         self._replay_session(sess)
+        # bill the rebuild: each replayed hop re-ran its prompt prefill
+        # plus one decode step per recorded token (eq. (1) terms)
+        cost = 0.0
+        for hop, j, lo, hi in hops:
+            n_tok = max(len(sess.hop_inputs[hop]) - 1, 0) \
+                if max(lo, self._n_enc) < hi else 0
+            cost += recovery_replay_cost(
+                self.problem, sess.client, [(j, lo, hi)], n_tok,
+                slowdown_of=lambda jj: self.servers[jj].slowdown)
+        sess.replay_time += cost
+        sess.virtual_time += cost
+        sess.n_replays += 1
+        sess.end = (sess.start + sess.virtual_time
+                    + max(sess.n_new - sess.n_generated, 0)
+                    * sess.per_token_time)
+        self.round_stats["replays"] += 1
+        self.round_stats["replay_s"] += cost
         sess.state = "active"
         self.round_stats["resumes"] += 1
         return True
@@ -1440,19 +1624,45 @@ class GeoServingSystem:
                        and progress[s.sid] < len(s.route.servers)]
             if not pending:
                 return
-            # failover first: splice routes of sessions facing a dead server
+            # timeout detection first: a crashed-but-undetected server is
+            # discovered by the dispatches that miss their deadline THIS
+            # round — every session concurrently waiting on it bills the
+            # detection wait + backoff probes, then the server is declared
+            # dead (suspected) and the failovers below splice it out
+            crashed_now = sorted({
+                s.route.servers[progress[s.sid]] for s in pending
+                if (srv := self.servers.get(
+                    s.route.servers[progress[s.sid]])) is not None
+                and srv.alive and srv.crashed})
+            for j in crashed_now:
+                self._detect_crash(j, [
+                    (s, self._expected_hop_decode(s, progress[s.sid]))
+                    for s in pending
+                    if s.route.servers[progress[s.sid]] == j])
+            # failover: splice routes of sessions facing a dead server or
+            # one that lost their cache row (rejoined with an empty pool,
+            # or a resume that skipped then-dead hops)
             for s in pending:
                 hop = progress[s.sid]
-                while not self.servers[s.route.servers[hop]].alive:
+                while self._hop_needs_failover(s, hop):
                     try:
                         self._failover(s, hop)
+                    except NoCapacityError:
+                        # transient: capacity frees as co-residents retire.
+                        # Park the session in the resume queue instead of
+                        # failing it; a lone legacy-decode session still
+                        # propagates (its caller owns the retry).
+                        if len(group) == 1:
+                            raise
+                        self._defer_session(s)
+                        break
                     except RuntimeError:
-                        # no survivor has capacity for THIS session: fail it
+                        # no surviving chain covers the blocks: fail it
                         # alone — co-resident sessions must keep decoding.
                         # A lone session propagates (legacy decode semantics).
                         if len(group) == 1:
                             raise
-                        self._abort_session(s)
+                        self._abort_session(s, reason="no_route")
                         break
             pending = [s for s in pending if s.state == "active"]
             groups: Dict[int, List[EngineSession]] = {}
@@ -1552,16 +1762,61 @@ class GeoServingSystem:
         self._traverse_core(group, process_group)
         return h_round
 
-    def _abort_session(self, sess: EngineSession):
-        """Mark a session unservable (failover found no capacity) and free
-        its slots; the record stays in ``sessions`` for the scheduler to
-        report as dropped."""
+    def _abort_session(self, sess: EngineSession, reason: str = "no_route"):
+        """Mark a session unservable and free its slots; the record stays
+        in ``sessions`` for the scheduler to report as dropped, with a
+        machine-readable ``fail_reason`` ("no_route", "no_capacity",
+        "server_lost_mid_prefill", ...)."""
         sess.state = "failed"
+        if sess.fail_reason is None:
+            sess.fail_reason = reason
         sess._h = None
         sess._emb0 = None
         for j in set(sess.route.servers):
             if j in self.servers:
                 self.servers[j].evict(sess.sid)
+
+    def _defer_session(self, sess: EngineSession):
+        """Capacity-starved failover (:class:`NoCapacityError`): park the
+        session in the resume queue instead of hard-failing it — capacity
+        frees up as co-residents retire.  The in-flight round's partial
+        hop records are stripped first so every decode-capable hop keeps
+        exactly (prompt + one record per COMPLETED round) and a later
+        replay stays position-exact.  A session that keeps bouncing
+        (deferred-resumed-deferred) is failed after a bounded number of
+        attempts — the livelock guard for chains that never regain
+        capacity."""
+        if sess.n_defer_resumes >= 8:
+            self._abort_session(sess, reason="no_capacity")
+            return
+        sess.n_defer_resumes += 1
+        e = 0
+        dec_hops = []
+        for hop, k in enumerate(sess.route.blocks):
+            lo, hi = e, e + k
+            e += k
+            if max(lo, self._n_enc) < hi:
+                dec_hops.append(hop)
+        if dec_hops:
+            n = min(len(sess.hop_inputs[hop]) for hop in dec_hops)
+            for hop in dec_hops:
+                del sess.hop_inputs[hop][n:]
+        self.preempt_session(sess.sid)
+
+    def _abort_stuck_head(self):
+        """Fail the resume queue's head with ``"no_capacity"`` — called
+        when even a forced resume could not seat anything, so waiting
+        longer cannot help (nothing is left to retire)."""
+        while self._preempt_order:
+            sid = self._preempt_order[0]
+            sess = self.sessions.get(sid)
+            if (sess is None or sess.state != "preempted"
+                    or sess.n_generated >= sess.n_new):
+                self._preempt_order.pop(0)
+                continue
+            self._preempt_order.pop(0)
+            self._abort_session(sess, reason="no_capacity")
+            return
 
     def retire_session(self, sid: int) -> Optional[EngineSession]:
         """Free the session's rows/block-slots on every server; returns the
@@ -1652,8 +1907,81 @@ class GeoServingSystem:
     # Fault tolerance
     # ------------------------------------------------------------------
     def kill_server(self, j: int):
-        if j in self.servers:
-            self.servers[j].alive = False
+        """ORACLE fail-stop: flip the server dead with instant, free
+        detection (tests / back-compat).  For the realistic path — the
+        crash is only discovered when a dispatch misses its deadline, and
+        detection + backoff are billed — use :meth:`inject_crash` or a
+        :class:`FaultPlan`.  Unknown or already-dead ids raise."""
+        srv = self.servers.get(j)
+        if srv is None or not srv.alive:
+            alive = sorted(jj for jj, s in self.servers.items() if s.alive)
+            raise ValueError(
+                f"kill_server({j}): "
+                + ("server is already dead" if srv is not None
+                   else "no such server")
+                + f"; alive servers: {alive}")
+        srv.alive = False
+        srv.crashed = False
+        srv.suspected = True
+
+    def inject_crash(self, j: int):
+        """Timeout-detected crash: the server goes silent but ``alive``
+        stays True — the next dispatch that misses its deadline detects
+        the loss and bills detection + backoff (``_detect_crash``)."""
+        srv = self.servers.get(j)
+        if srv is None or not srv.alive:
+            alive = sorted(jj for jj, s in self.servers.items() if s.alive)
+            raise ValueError(
+                f"inject_crash({j}): unknown or already-dead server; "
+                f"alive servers: {alive}")
+        srv.crashed = True
+
+    def rejoin_server(self, j: int):
+        """A crashed server returns — with an EMPTY pool (its RAM-resident
+        caches died with it), whether or not anyone detected the outage.
+        Sessions that still route through it lose their rows here and are
+        spliced by the next traverse's residency failover (billed replay,
+        no detection wait: the server answers promptly, just emptily).
+        The ``suspected`` flag survives the rejoin so routing keeps its
+        flap-avoidance penalty until the controller clears it."""
+        srv = self.servers.get(j)
+        if srv is None:
+            raise ValueError(f"rejoin_server({j}): no such server; known "
+                             f"servers: {sorted(self.servers)}")
+        for sid in list(srv.pool.rows):
+            srv.evict(sid)
+        srv.alive = True
+        srv.crashed = False
+        self.round_stats["rejoins"] += 1
+
+    def suspected_servers(self) -> List[int]:
+        """Servers once declared dead by timeout (flap-avoidance input
+        for the controller's suspicion-aware routing)."""
+        return sorted(j for j, srv in self.servers.items() if srv.suspected)
+
+    def apply_faults(self, now: float) -> List:
+        """Apply every :class:`FaultPlan` event due by virtual time
+        ``now`` (idempotent — a cursor tracks what already fired).
+        Returns the events applied this call."""
+        if self.fault_plan is None:
+            return []
+        due, self._fault_cursor = self.fault_plan.due(self._fault_cursor,
+                                                      now)
+        for ev in due:
+            srv = self.servers.get(ev.server)
+            if ev.kind == "crash":
+                if srv is not None and srv.alive and not srv.crashed:
+                    srv.crashed = True
+            elif ev.kind == "rejoin":
+                if srv is not None:
+                    self.rejoin_server(ev.server)
+            elif ev.kind == "straggler_start":
+                self.set_slowdown(ev.server, ev.factor)
+            elif ev.kind == "straggler_end":
+                self.set_slowdown(ev.server, 1.0)
+            elif ev.kind == "dispatch_error":
+                self._dispatch_faults.add(ev.server)
+        return due
 
     def join_server(self, spec, rtt_token_col, rtt_prefill_col):
         """Elastic scale-out: add a server and re-run placement (Alg. 2)."""
@@ -1668,6 +1996,7 @@ class GeoServingSystem:
         self.problem = Problem(self.problem.llm, servers,
                                self.problem.n_clients, rtt_t, rtt_p,
                                self.problem.workload)
+        self._base_taus.append(float(spec.tau))
         if self.algorithm == "proposed":
             from repro.core.placement import cg_bp
             self.placement, _ = cg_bp(self.problem, self.R)
@@ -1681,9 +2010,11 @@ class GeoServingSystem:
                   ) -> Optional[Tuple[int, ...]]:
         """Min-cost chain of ALIVE servers covering exactly blocks [lo, hi)."""
         alive = self.alive_placement()
-        # clip hosted ranges into [lo, hi) and run the same DAG DP
-        a = np.maximum(alive.a, lo)
-        end = np.minimum(alive.a + alive.m, hi)
+        # clip hosted ranges into [lo, hi] and run the same DAG DP (both
+        # ends clipped: a host starting past ``hi`` must not index the
+        # subproblem's weight table out of range)
+        a = np.clip(alive.a, lo, hi)
+        end = np.clip(alive.a + alive.m, lo, hi)
         m = np.maximum(end - a, 0)
         m[alive.m <= 0] = 0
         sub = Placement(a=a - lo, m=m)
@@ -1800,8 +2131,14 @@ class GeoServingSystem:
         return rec
 
     def _failover(self, sess: EngineSession, hop: int):
-        """Replace the dead server at ``hop`` by a chain of alive servers and
-        replay the client-side cached inputs to rebuild their caches."""
+        """Replace the lost server at ``hop`` by a chain of alive servers
+        and replay the client-side cached inputs to rebuild their caches.
+        "Lost" covers dead servers AND alive ones that no longer hold the
+        session's row (rejoined with an empty pool) — the latter may
+        re-enter the replacement chain and simply get re-prefilled.  The
+        replay is billed on the virtual clock (``recovery_replay_cost``):
+        per replacement hop, one input round-trip + weighted prompt
+        prefill + k·τ per replayed token."""
         dead_j = sess.route.servers[hop]
         e_lo = sum(sess.route.blocks[:hop])
         e_hi = e_lo + sess.route.blocks[hop]
@@ -1832,7 +2169,7 @@ class GeoServingSystem:
         for j, lo, hi2 in repl_routes:
             if not self.servers[j].fits(sess.sid, hi2 - lo,
                                         n_pages or 0, worst):
-                raise RuntimeError(
+                raise NoCapacityError(
                     f"failover target {j} has no free cache slots")
         for j, lo, hi2 in repl_routes:
             self.servers[j].admit(sess.sid, hi2 - lo,
@@ -1880,8 +2217,22 @@ class GeoServingSystem:
         sess.hop_inputs[hop: hop + 1] = new_histories
         sess.route = Route(servers=tuple(new_servers),
                            blocks=tuple(new_blocks))
-        if dead_j in self.servers:
+        # a rejoined server may sit in its own replacement chain — don't
+        # evict the row the replay just rebuilt
+        if dead_j in self.servers and \
+                dead_j not in {j for j, _, _ in repl_routes}:
             self.servers[dead_j].evict(sess.sid)
+        # bill the rebuild (eq. (1) terms): per replacement hop, one input
+        # round-trip + weighted prompt prefill + k·τ per replayed token
+        n_replay_tok = len(inputs) - 1
+        cost = recovery_replay_cost(
+            self.problem, sess.client, repl_routes, n_replay_tok,
+            slowdown_of=lambda jj: self.servers[jj].slowdown)
+        sess.replay_time += cost
+        sess.virtual_time += cost
+        sess.n_replays += 1
+        self.round_stats["replays"] += 1
+        self.round_stats["replay_s"] += cost
         # remaining tokens are billed at the NEW route's cost; the virtual
         # retirement time shifts accordingly
         sess.per_token_time = self._route_per_token(sess)
@@ -1891,15 +2242,26 @@ class GeoServingSystem:
 
     # ------------------------------------------------------------------
     def set_slowdown(self, j: int, factor: float):
-        """Straggler injection: server j runs `factor`x slower; routing costs
-        of FUTURE sessions see the degraded tau."""
-        if j in self.servers:
-            self.servers[j].slowdown = factor
+        """Straggler injection: server j runs ``factor``x its calibrated
+        speed.  ``factor`` is ABSOLUTE over the construction-time tau (not
+        cumulative), so ``set_slowdown(j, 1.0)`` ends a straggler interval
+        cleanly.  The degraded tau lands in ``self.problem`` — routing of
+        future sessions, the eq. (1) clock of new routes, and detection
+        deadlines all see it."""
         servers = list(self.problem.servers)
         servers[j] = dataclasses.replace(servers[j],
-                                         tau=servers[j].tau * factor)
+                                         tau=self._base_taus[j] * factor)
         self.problem = dataclasses.replace(self.problem)
         self.problem.servers = servers
+        # in-flight sessions routed through j decode at the degraded rate
+        # from now on (and recover when the straggler interval ends)
+        for sess in self.sessions.values():
+            if (sess.state in ("active", "preempted")
+                    and j in sess.route.servers):
+                sess.per_token_time = self._route_per_token(sess)
+                sess.end = (sess.start + sess.virtual_time
+                            + max(sess.n_new - sess.n_generated, 0)
+                            * sess.per_token_time)
 
 
 def generate(system: GeoServingSystem, tokens: np.ndarray, n_new: int,

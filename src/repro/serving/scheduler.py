@@ -62,10 +62,26 @@ class ServedRequest:
     wait: float = 0.0
     per_token_rest: float = 0.0  # decode-phase per-token time
     dropped: bool = False
+    # machine-readable reason when dropped ("no_route", "no_capacity",
+    # "server_lost_mid_prefill", "admission_rejected", ...); None otherwise
+    fail_reason: Optional[str] = None
     n_deferrals: int = 0
     # paged cache layout: times the session was swapped out under page
     # pressure mid-generation (0 on the slab layout / without pressure)
     n_preemptions: int = 0
+    # failure-recovery accounting mirrored off the engine session (see
+    # docs/concurrency.md "Failure model"): timeout detections, backoff
+    # probes, billed cache replays, and their virtual-clock costs
+    n_detections: int = 0
+    n_retries: int = 0
+    n_replays: int = 0
+    detect_time: float = 0.0
+    backoff_time: float = 0.0
+    replay_time: float = 0.0
+
+    @property
+    def recovery_time(self) -> float:
+        return self.detect_time + self.backoff_time + self.replay_time
 
 
 @dataclass
@@ -119,6 +135,10 @@ class ContinuousBatchingScheduler:
         self.controller = OnlineBPRR(system.problem, R=R,
                                      arrival_rate=arrival_rate,
                                      slot_scale=_slot_scale(system))
+        # fault sync state: servers the controller already knows are dead /
+        # suspected (diffed against the engine at every event)
+        self._known_dead: frozenset = frozenset()
+        self._known_suspected: frozenset = frozenset()
         self._events: List[Tuple[float, int, int, int]] = []  # (t,prio,seq,i)
         self._seq = itertools.count()
         self._requests: List[_Pending] = []
@@ -155,6 +175,7 @@ class ContinuousBatchingScheduler:
         Returns ServedRequests in rid order."""
         while self._events:
             t, prio, _, idx = heapq.heappop(self._events)
+            self._sync_faults(t)
             if prio == self._ARRIVAL:
                 self._on_arrival(t, idx)
             elif prio == self._START:
@@ -171,27 +192,66 @@ class ContinuousBatchingScheduler:
         # re-admitted — surface them as drops instead of vanishing
         for didx in self._deferred:
             req = self._requests[didx]
-            self.system.retire_session(req.sid)
+            sess = self.system.retire_session(req.sid)
             self.controller.finish(req.sid_ctl)
-            self._drop(req)
+            self._drop(req, reason="no_capacity", sess=sess)
         self._deferred = []
         return [self.results[r.rid] for r in
                 sorted(self._requests, key=lambda r: r.rid)
                 if r.rid in self.results]
 
-    def _drop(self, req: _Pending):
-        self.results[req.rid] = ServedRequest(
+    def _sync_faults(self, t: float):
+        """Mirror the engine's fault state into the controller: apply
+        FaultPlan events due by the event clock, re-place over the
+        surviving fleet when the dead set changes (``replace_servers``
+        with 0-memory dead hosts — a rejoined server re-enters with an
+        empty pool engine-side), and keep suspicion penalties on every
+        server ever declared dead by timeout (flap-avoidance routing)."""
+        system = self.system
+        if (system.fault_plan is None and not self._known_dead
+                and not self._known_suspected):
+            return  # fault-free run: keep the hot path free of diffing
+        system.apply_faults(t)
+        dead = frozenset(j for j, srv in system.servers.items()
+                         if not srv.alive)
+        suspected = frozenset(system.suspected_servers())
+        for j in suspected - self._known_suspected:
+            self.controller.set_suspicion(
+                j, system.detector.suspicion_penalty)
+        if dead != self._known_dead:
+            from repro.sim.simulator import _problem_with_dead
+            self.controller.replace_servers(
+                _problem_with_dead(system.problem, dead))
+        self._known_dead = dead
+        self._known_suspected = suspected
+
+    def _drop(self, req: _Pending, reason: Optional[str] = None,
+              sess=None):
+        rec = ServedRequest(
             rid=req.rid, arrival=req.arrival, start=np.inf,
             first_token=np.inf, per_token=np.inf, total=np.inf,
             tokens=np.asarray(req.tokens), wait=np.inf, dropped=True,
-            n_deferrals=req.deferrals)
+            fail_reason=reason, n_deferrals=req.deferrals)
+        if sess is not None:
+            self._copy_failure_counters(rec, sess)
+        self.results[req.rid] = rec
+
+    @staticmethod
+    def _copy_failure_counters(rec: ServedRequest, sess):
+        rec.n_preemptions = sess.n_preemptions
+        rec.n_detections = sess.n_detections
+        rec.n_retries = sess.n_retries
+        rec.n_replays = sess.n_replays
+        rec.detect_time = sess.detect_time
+        rec.backoff_time = sess.backoff_time
+        rec.replay_time = sess.replay_time
 
     # ------------------------------------------------------------------
     def _on_arrival(self, t: float, idx: int):
         req = self._requests[idx]
         route, start, _end, sid_ctl = self.controller.admit(req.client, t)
         if route is None:
-            self._drop(req)
+            self._drop(req, reason="no_route")
             return
         # FIFO within client: never overtake an earlier same-client start
         start = max(start, self._last_start.get(req.client, -np.inf))
@@ -260,23 +320,27 @@ class ContinuousBatchingScheduler:
             self.system.decode_round()
         done = self.system.retire_session(req.sid)
         self.controller.finish(req.sid_ctl)
+        self._sync_faults(t)  # rounds above may have detected crashes
         if done.state == "failed":  # unservable failover mid-generation
-            self._drop(req)
+            self._drop(req, reason=done.fail_reason or "no_route",
+                       sess=done)
         else:
             wait = done.start - req.arrival
             # virtual_time is the accumulated TRUE service time — equals
-            # prefill + (n_new-1)*per_token on a stable route, and stays
+            # prefill + (n_new-1)*per_token on a stable route plus any
+            # billed recovery (detection + backoff + replay), and stays
             # correct when failover mid-generation changes the route cost
             service = done.virtual_time
-            self.results[req.rid] = ServedRequest(
+            rec = ServedRequest(
                 rid=req.rid, arrival=req.arrival, start=done.start,
                 first_token=wait + done.prefill_time,
                 per_token=(wait + service) / max(1, done.n_new),
                 total=wait + service,
                 tokens=np.asarray(done.tokens), wait=wait,
                 per_token_rest=done.per_token_time,
-                n_deferrals=req.deferrals,
-                n_preemptions=done.n_preemptions)
+                n_deferrals=req.deferrals)
+            self._copy_failure_counters(rec, done)
+            self.results[req.rid] = rec
         # re-admission: retry deferred sessions in FIFO order; a client whose
         # head-of-line request stays deferred keeps its later ones queued.
         # Admission goes one session at a time (exact FIFO semantics), but

@@ -1,21 +1,24 @@
 from repro.sim.cluster import (A100, MIG, clustered_scenario,
                                scattered_scenario)
 from repro.sim.simulator import (ALGORITHMS, SIM_MODES, ChurnResult,
-                                 SimConfig, SimResult, run_comparison,
-                                 simulate, simulate_churn)
+                                 FaultSimResult, SimConfig, SimResult,
+                                 run_comparison, simulate, simulate_churn,
+                                 simulate_faults, subchain_route)
 from repro.sim.topologies import (TOPOLOGY_SPECS, Topology, make_topology,
                                   place_servers)
 from repro.sim.workload import (ChurnEvent, Request, RequestBatch,
                                 burst_requests, bursty_requests,
                                 churn_schedule, diurnal_rate,
-                                diurnal_requests, poisson_requests,
-                                prompts_for)
+                                diurnal_requests, fault_schedule,
+                                poisson_requests, prompts_for)
 
 __all__ = [
-    "A100", "ALGORITHMS", "MIG", "ChurnEvent", "ChurnResult", "Request",
-    "RequestBatch", "SIM_MODES", "SimConfig", "SimResult", "TOPOLOGY_SPECS",
-    "Topology", "burst_requests", "bursty_requests", "churn_schedule",
-    "clustered_scenario", "diurnal_rate", "diurnal_requests",
-    "make_topology", "place_servers", "poisson_requests", "prompts_for",
-    "run_comparison", "scattered_scenario", "simulate", "simulate_churn",
+    "A100", "ALGORITHMS", "MIG", "ChurnEvent", "ChurnResult",
+    "FaultSimResult", "Request", "RequestBatch", "SIM_MODES", "SimConfig",
+    "SimResult", "TOPOLOGY_SPECS", "Topology", "burst_requests",
+    "bursty_requests", "churn_schedule", "clustered_scenario",
+    "diurnal_rate", "diurnal_requests", "fault_schedule", "make_topology",
+    "place_servers", "poisson_requests", "prompts_for", "run_comparison",
+    "scattered_scenario", "simulate", "simulate_churn", "simulate_faults",
+    "subchain_route",
 ]

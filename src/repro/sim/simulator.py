@@ -662,6 +662,12 @@ class ChurnResult:
     wait: float
     per_token_all: float
     alive_min: int  # smallest fleet the controller placed over
+    # per-storm recovery metrics (index-aligned with the sorted schedule):
+    # time from the storm to the first successfully routed admission after
+    # it (inf when the trace ends first), and the controller's in-flight
+    # session count at the instant the storm lands
+    time_to_reroute: Tuple[float, ...] = ()
+    in_flight_at_kill: Tuple[int, ...] = ()
 
 
 def _problem_with_dead(problem: Problem, dead) -> Problem:
@@ -705,6 +711,10 @@ def simulate_churn(problem: Problem, requests: Trace,
     n_ok = 0
     sum_wait = 0.0
     sum_pta = 0.0
+    storm_t: List[float] = []
+    storm_inflight: List[int] = []
+    reroute: List[float] = []
+    rerouted = 0  # storms whose first post-storm success has been seen
     for req in requests:
         t = req.arrival
         n_total += 1
@@ -714,6 +724,10 @@ def simulate_churn(problem: Problem, requests: Trace,
             dead.difference_update(ev.join)
             dead.update(ev.leave)
             dirty = True
+            ctl.gc(ev.time)
+            storm_t.append(ev.time)
+            storm_inflight.append(ctl.concurrency())
+            reroute.append(np.inf)
         if dirty and t - last_reopt >= reopt_min_interval:
             ctl.replace_servers(_problem_with_dead(problem, dead))
             n_repl += 1
@@ -727,6 +741,9 @@ def simulate_churn(problem: Problem, requests: Trace,
         n_ok += 1
         sum_wait += start - t
         sum_pta += (end - t) / l_out
+        while rerouted < len(storm_t):
+            reroute[rerouted] = t - storm_t[rerouted]
+            rerouted += 1
     return ChurnResult(
         n_requests=n_total,
         n_storms=ei,
@@ -735,4 +752,249 @@ def simulate_churn(problem: Problem, requests: Trace,
         wait=sum_wait / n_ok if n_ok else np.inf,
         per_token_all=sum_pta / n_ok if n_ok else np.inf,
         alive_min=alive_min,
+        time_to_reroute=tuple(reroute),
+        in_flight_at_kill=tuple(storm_inflight),
     )
+
+
+# ---------------------------------------------------------------------------
+# Chaos studies: fault plans through the analytic reference loop
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FaultSimResult:
+    """Outcome of :func:`simulate_faults` — the analytic twin of the
+    engine's chaos accounting (``chaos.recovery`` in BENCH_engine.json)."""
+
+    n_requests: int
+    n_served: int
+    n_failed: int
+    n_detections: int
+    n_replays: int
+    detect_time: float
+    backoff_time: float
+    replay_time: float
+    fail_reasons: Dict[str, int]
+    wait: float
+    per_token_all: float
+
+    @property
+    def recovery_time(self) -> float:
+        """Total billed recovery: detection + backoff + replay."""
+        return self.detect_time + self.backoff_time + self.replay_time
+
+    @property
+    def goodput(self) -> float:
+        return self.n_served / max(1, self.n_requests)
+
+
+def _problem_with_faults(problem: Problem, dead, slow) -> Problem:
+    """Dead servers become 0-memory hosts; stragglers carry scaled taus —
+    the same single-carrier slowdown model as the engine's
+    ``set_slowdown`` (the problem tau is the one source of truth)."""
+    import dataclasses
+
+    servers = []
+    for j, s in enumerate(problem.servers):
+        if j in dead:
+            s = dataclasses.replace(s, mem_bytes=0.0)
+        f = slow.get(j)
+        if f is not None and f != 1.0:
+            s = dataclasses.replace(s, tau=s.tau * f)
+        servers.append(s)
+    return Problem(problem.llm, servers, problem.n_clients,
+                   problem.rtt_token, problem.rtt_prefill, problem.workload)
+
+
+def subchain_route(problem: Problem, placement: Placement, dead,
+                   lo: int, hi: int, client: int) -> Optional[Route]:
+    """Min-cost chain of alive servers covering exactly blocks
+    ``[lo, hi)`` — the simulator-side mirror of the engine's
+    ``GeoServingSystem._subchain`` splice DP (same clipped subproblem,
+    same ``shortest_path_route``), used to price failover replay."""
+    import dataclasses
+
+    a = np.clip(placement.a, lo, hi)
+    end = np.clip(placement.a + placement.m, lo, hi)
+    m = np.maximum(end - a, 0)
+    m = np.where(placement.m <= 0, 0, m)
+    if dead:
+        m = m.copy()
+        m[np.asarray(sorted(dead), int)] = 0
+    sub = Placement(a=a - lo, m=m)
+    kw = dict(n_blocks=hi - lo)
+    if problem.llm.block_tau is not None:
+        kw["block_tau"] = problem.llm.block_tau[lo:hi]
+    subproblem = dataclasses.replace(
+        problem, llm=dataclasses.replace(problem.llm, **kw))
+    route, _ = shortest_path_route(subproblem, sub, client)
+    return route
+
+
+def simulate_faults(problem: Problem, requests: Trace, plan,
+                    R: Optional[int] = None, detector=None) -> FaultSimResult:
+    """Analytic fault-aware admission loop: drive :class:`OnlineBPRR`
+    through a request trace while a :class:`repro.serving.faults.FaultPlan`
+    injects crashes, rejoins, stragglers, and dispatch errors — billing
+    recovery with the SAME shared pricing the engine uses
+    (``FailureDetector.detect_time`` / ``backoff_time`` +
+    :func:`recovery_replay_cost` over the :func:`subchain_route` splice).
+
+    Per crash, every in-flight session routed through the victim pays the
+    missed deadline (``timeout_factor x`` the eq. (1) expected hop time,
+    once per probe), the exponential-backoff sleeps, and the replay of its
+    prompt prefill plus generated-so-far tokens on the replacement chain;
+    its remaining tokens then run at the spliced route's per-token time.
+    Sessions caught mid-prefill fail with ``server_lost_mid_prefill``;
+    sessions with no alive replacement chain fail with ``no_route`` —
+    every admitted request ends served or failed-with-reason, the same
+    conservation law the chaos tests assert on the engine."""
+    from repro.core.online import OnlineBPRR
+    from repro.serving.faults import FailureDetector, recovery_replay_cost
+
+    det = detector if detector is not None else FailureDetector()
+    ctl = OnlineBPRR(problem, R=R)
+    lw = problem.workload
+    dead: set = set()
+    slow: Dict[int, float] = {}
+    dispatch_faults: set = set()
+    cursor = 0
+    live: Dict[int, dict] = {}
+    n_total = n_served = n_failed = 0
+    n_detections = n_replays = 0
+    detect_s = backoff_s = replay_s = 0.0
+    fail_reasons: Dict[str, int] = {}
+    sum_wait = sum_pta = 0.0
+
+    def _fail(rec: dict, reason: str):
+        nonlocal n_failed
+        n_failed += 1
+        fail_reasons[reason] = fail_reasons.get(reason, 0) + 1
+        live.pop(rec["sid"], None)
+        ctl.finish(rec["sid"])
+
+    def _retire(now: float):
+        nonlocal n_served, sum_wait, sum_pta
+        for sid in [sid for sid, r in live.items() if r["end"] <= now]:
+            r = live.pop(sid)
+            n_served += 1
+            sum_wait += r["wait"]
+            sum_pta += (r["end"] - r["arrival"]) / lw.l_out
+
+    def _crash(ev):
+        nonlocal n_detections, n_replays, detect_s, backoff_s, replay_s
+        j = ev.server
+        if j in dead:
+            return
+        _retire(ev.time)
+        dead.add(j)
+        cur = _problem_with_faults(problem, dead, slow)
+        backoff = det.backoff_time()
+        for rec in list(live.values()):
+            if rec["start"] > ev.time or j not in rec["route"].servers:
+                continue
+            if ev.time < rec["start"] + rec["prefill"]:
+                _fail(rec, "server_lost_mid_prefill")
+                continue
+            h = rec["route"].servers.index(j)
+            lo = int(sum(rec["route"].blocks[:h]))
+            hi = lo + int(rec["route"].blocks[h])
+            w = problem.llm.tau_weight(lo, hi)
+            expected = (problem.rtt_token[rec["client"], j]
+                        + w * problem.servers[j].tau * slow.get(j, 1.0))
+            repl = subchain_route(cur, ctl.placement, dead, lo, hi,
+                                  rec["client"])
+            if repl is None:
+                _fail(rec, "no_route")
+                continue
+            n_tok = max(0, min(
+                int((ev.time - rec["start"] - rec["prefill"])
+                    / max(rec["per_token"], 1e-12)),
+                lw.l_out - 1))
+            repl_spans = []
+            e = lo
+            for jj, k in zip(repl.servers, repl.blocks):
+                repl_spans.append((jj, e, e + int(k)))
+                e += int(k)
+            replay = recovery_replay_cost(
+                problem, rec["client"], repl_spans, n_tok,
+                slowdown_of=lambda jj: slow.get(jj, 1.0))
+            detect = det.detect_time(expected)
+            spliced = Route(
+                servers=tuple(rec["route"].servers[:h]) + tuple(repl.servers)
+                + tuple(rec["route"].servers[h + 1:]),
+                blocks=tuple(rec["route"].blocks[:h])
+                + tuple(int(k) for k in repl.blocks)
+                + tuple(rec["route"].blocks[h + 1:]))
+            per_tok = route_per_token_time(cur, spliced, rec["client"])
+            rec["route"] = spliced
+            rec["per_token"] = per_tok
+            rec["end"] = (ev.time + detect + backoff + replay
+                          + (lw.l_out - 1 - n_tok) * per_tok)
+            n_detections += 1
+            n_replays += 1
+            detect_s += detect
+            backoff_s += backoff
+            replay_s += replay
+        ctl.set_suspicion(j, det.suspicion_penalty)
+        ctl.replace_servers(cur, R=ctl.R)
+
+    def _advance(now: float):
+        nonlocal cursor
+        due, cursor = plan.due(cursor, now)
+        for ev in due:
+            if ev.kind == "crash":
+                _crash(ev)
+            elif ev.kind == "rejoin":
+                if ev.server in dead:
+                    dead.discard(ev.server)
+                    ctl.replace_servers(
+                        _problem_with_faults(problem, dead, slow), R=ctl.R)
+            elif ev.kind == "straggler_start":
+                slow[ev.server] = ev.factor
+                ctl.replace_servers(
+                    _problem_with_faults(problem, dead, slow), R=ctl.R)
+            elif ev.kind == "straggler_end":
+                if slow.pop(ev.server, None) is not None:
+                    ctl.replace_servers(
+                        _problem_with_faults(problem, dead, slow), R=ctl.R)
+            elif ev.kind == "dispatch_error":
+                dispatch_faults.add(ev.server)
+
+    for req in requests:
+        t = req.arrival
+        n_total += 1
+        _advance(t)
+        _retire(t)
+        ctl.gc(t)
+        route, start, end, sid = ctl.admit(req.client, t)
+        if route is None or not np.isfinite(start):
+            n_failed += 1
+            fail_reasons["no_route"] = fail_reasons.get("no_route", 0) + 1
+            continue
+        faulted = [j for j in route.servers if j in dispatch_faults]
+        if faulted:
+            dispatch_faults.difference_update(faulted)
+            n_failed += 1
+            fail_reasons["dispatch_error"] = (
+                fail_reasons.get("dispatch_error", 0) + 1)
+            ctl.finish(sid)
+            continue
+        cur = _problem_with_faults(problem, dead, slow)
+        prefill = route_prefill_time(cur, route, req.client)
+        per_tok = route_per_token_time(cur, route, req.client)
+        live[sid] = dict(
+            sid=sid, client=req.client, route=route, arrival=t,
+            wait=start - t, start=start, prefill=prefill,
+            per_token=per_tok,
+            end=start + prefill + (lw.l_out - 1) * per_tok)
+    _advance(np.inf)
+    _retire(np.inf)
+    return FaultSimResult(
+        n_requests=n_total, n_served=n_served, n_failed=n_failed,
+        n_detections=n_detections, n_replays=n_replays,
+        detect_time=detect_s, backoff_time=backoff_s, replay_time=replay_s,
+        fail_reasons=fail_reasons,
+        wait=sum_wait / n_served if n_served else np.inf,
+        per_token_all=sum_pta / n_served if n_served else np.inf)

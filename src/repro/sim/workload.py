@@ -187,6 +187,28 @@ def churn_schedule(n_servers: int, n_storms: int, storm_size: int,
     return events
 
 
+def fault_schedule(n_servers: int, seed: int = 0, *, horizon: float = 10.0,
+                   n_crashes: int = 1, n_transients: int = 0,
+                   n_stragglers: int = 0, n_dispatch_errors: int = 0,
+                   rejoin_after: float = 2.0, straggler_len: float = 2.0,
+                   max_factor: float = 6.0, protect: Sequence[int] = ()):
+    """Deterministic randomized fault plan for chaos studies — the fault
+    analogue of :func:`churn_schedule`.  Returns a
+    :class:`repro.serving.faults.FaultPlan` drawing fail-stop crashes,
+    crash-then-rejoin transients, straggler slowdown intervals, and
+    admission-time dispatch errors from ``seed``.  The same plan drives
+    the engine (``GeoServingSystem(fault_plan=...)``) and the analytic
+    reference (``repro.sim.simulate_faults``), so chaos tests can assert
+    engine/simulator agreement under identical fault timelines."""
+    from repro.serving.faults import FaultPlan  # lazy: keep sim jax-free
+    return FaultPlan.random(
+        n_servers, seed, horizon=horizon, n_crashes=n_crashes,
+        n_transients=n_transients, n_stragglers=n_stragglers,
+        n_dispatch_errors=n_dispatch_errors, rejoin_after=rejoin_after,
+        straggler_len=straggler_len, max_factor=max_factor,
+        protect=protect)
+
+
 def prompts_for(requests: Sequence[Request], l_in: int, vocab_size: int,
                 seed: int = 0) -> List[np.ndarray]:
     """Deterministic per-request prompt tokens (ids >= 2) of length l_in."""

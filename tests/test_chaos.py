@@ -1,0 +1,387 @@
+"""Chaos harness: deterministic fault injection through the serving engine.
+
+The properties under test (docs/concurrency.md "Failure model"):
+
+* **Fault-free-twin exactness** — greedy token streams are bit-equal to a
+  run without faults, for affected sessions (failover replay rebuilds
+  bit-identical caches) AND unaffected ones (which must also keep their
+  exact virtual clock).
+* **Session conservation** — every admitted session ends served or failed
+  with a machine-readable reason; nothing vanishes.
+* **Billed recovery** — a crash costs its victims timeout detection,
+  backoff probes, and replay compute on the virtual clock, so the faulted
+  clock is strictly greater than the twin's.
+* **Typed capacity failures** — a failover with no free slots defers (and
+  later completes) instead of hard-failing.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_reduced_config
+from repro.core import (LLMSpec, Problem, Route, RouteCostCache, ServerSpec,
+                        Workload, route_per_token_time, route_prefill_time)
+from repro.models import init_params
+from repro.serving import (FailureDetector, FaultEvent, FaultPlan,
+                           GeoServingSystem, NoCapacityError)
+from repro.serving.faults import recovery_replay_cost
+from repro.sim import fault_schedule, simulate_faults
+from repro.sim.workload import poisson_requests
+
+ARCH = "llama3_2_1b"
+
+
+def _build(n_servers=8, mem=900.0, l_in=4, l_out=10, max_new=10,
+           max_sessions=12, R=4, fault_plan=None, detector=None, **kw):
+    cfg = get_reduced_config(ARCH)
+    params, _ = init_params(jax.random.PRNGKey(0), cfg)
+    llm = LLMSpec("toy", cfg.n_layers, block_bytes=50.0,
+                  cache_bytes_per_token=1.0)
+    servers = [ServerSpec(j, mem_bytes=mem, tau=0.01 * (j + 1),
+                          tau_prefill_base=0.002,
+                          tau_prefill_per_token=0.0005)
+               for j in range(n_servers)]
+    rtt = np.full((1, n_servers), 0.02)
+    prob = Problem(llm, servers, 1, rtt, rtt * 3,
+                   workload=Workload(l_in, l_out))
+    system = GeoServingSystem(cfg, params, prob, R=R,
+                              max_new_tokens=max_new,
+                              max_sessions=max_sessions,
+                              fault_plan=fault_plan, detector=detector,
+                              **kw)
+    return cfg, prob, system
+
+
+def _single_hop_route(system, j) -> Route:
+    a, m = int(system.placement.a[j]), int(system.placement.m[j])
+    assert a == 0 and m == system.problem.L, "toy placement must replicate"
+    return Route(servers=(int(j),), blocks=(m,))
+
+
+def _admit_on(system, cfg, host_servers, n_new, seed=0):
+    """One session per entry of ``host_servers``, each on its own
+    single-hop route (so faults on server j hit exactly session j)."""
+    rng = np.random.RandomState(seed)
+    sids = []
+    for j in host_servers:
+        sids.append(system.create_session(
+            rng.randint(2, cfg.vocab_size, system.problem.workload.l_in),
+            0, _single_hop_route(system, j), n_new))
+    assert system.try_admit_sessions(sids) == sids
+    system.drain_prefill()
+    return sids
+
+
+def _drive(system, sids, n_new, max_rounds=400):
+    """Decode rounds until every session leaves (done/failed), retiring
+    finished sessions eagerly so their stalled clocks never gate
+    virtual-clock fault delivery.  Returns {sid: retired session}."""
+    out = {}
+    rounds = 0
+    while True:
+        livesids = [s for s in sids if s not in out]
+        for sid in livesids:
+            sess = system.sessions[sid]
+            if sess.state == "failed" or sess.n_generated >= n_new:
+                out[sid] = system.retire_session(sid)
+        if len(out) == len(sids):
+            return out
+        system.decode_round()
+        rounds += 1
+        assert rounds < max_rounds, "chaos run did not converge (livelock?)"
+
+
+# ---------------------------------------------------------------------------
+# The ISSUE acceptance scenario: 8 servers, >=3 crashes + rejoin + straggler
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_acceptance_8_servers():
+    cfg, prob, twin_sys = _build()
+    hosts = [0, 1, 2, 3, 4, 5]
+    n_new = 10
+
+    # fault-free twin first: its per-session clocks are the oracle
+    twin_sids = _admit_on(twin_sys, cfg, hosts, n_new)
+    twin = _drive(twin_sys, twin_sids, n_new)
+
+    # fault times on the virtual clock: after every victim has decoded a
+    # couple of rounds, before anyone finishes (analytic eq. (1) paces)
+    pre = {j: route_prefill_time(prob, Route((j,), (prob.L,)), 0)
+           for j in hosts}
+    ptok = {j: route_per_token_time(prob, Route((j,), (prob.L,)), 0)
+            for j in hosts}
+    T = max(pre[j] + 1.2 * ptok[j] for j in (1, 2, 3))
+    plan = FaultPlan((
+        FaultEvent(T, "crash", 1),
+        FaultEvent(T, "crash", 2),
+        FaultEvent(T, "crash", 3),
+        FaultEvent(T + 0.1, "rejoin", 2),
+        FaultEvent(T, "straggler_start", 4, factor=4.0),
+        FaultEvent(T + 2.0 * ptok[4], "straggler_end", 4),
+    ))
+    assert plan.count("crash") >= 3 and plan.count("rejoin") >= 1
+    assert plan.count("straggler_start") >= 1
+
+    _, _, system = _build(fault_plan=plan)
+    sids = _admit_on(system, cfg, hosts, n_new)
+    done = _drive(system, sids, n_new)
+
+    # session conservation: served, or failed with a machine-readable reason
+    for sid, sess in done.items():
+        assert sess.state in ("done", "failed")
+        if sess.state == "failed":
+            assert sess.fail_reason is not None
+    # this topology always has a surviving chain: everyone serves
+    assert all(s.state == "done" for s in done.values())
+
+    # fault-free-twin token exactness, affected sessions included (replay
+    # rebuilds bit-identical caches; greedy decoding is route-independent)
+    for ts, fs in zip(twin_sids, sids):
+        assert list(done[fs].tokens) == list(twin[ts].tokens)
+
+    # unaffected sessions (hosts 0 and 5) keep the EXACT twin clock;
+    # crash victims and the straggler's session pay strictly more
+    by_host = dict(zip(hosts, sids))
+    twin_by_host = dict(zip(hosts, twin_sids))
+    for j in (0, 5):
+        assert done[by_host[j]].virtual_time == \
+            twin[twin_by_host[j]].virtual_time
+        assert done[by_host[j]].recovery_time == 0.0
+    for j in (1, 2, 3):
+        sess = done[by_host[j]]
+        assert sess.n_detections >= 1 and sess.n_replays >= 1
+        assert sess.detect_time > 0 and sess.backoff_time > 0
+        assert sess.replay_time > 0
+        assert sess.virtual_time > twin[twin_by_host[j]].virtual_time
+        # the crashed host is out of the spliced route
+        assert j not in sess.route.servers
+    assert done[by_host[4]].virtual_time > \
+        twin[twin_by_host[4]].virtual_time  # straggled rounds cost more
+
+    # aggregate clock strictly greater than the fault-free twin's
+    assert sum(s.virtual_time for s in done.values()) > \
+        sum(s.virtual_time for s in twin.values())
+
+    # rejoin happened and left suspicion behind (flap avoidance)
+    assert system.round_stats["rejoins"] >= 1
+    assert system.servers[2].alive and not system.servers[2].crashed
+    assert set(system.suspected_servers()) >= {1, 3}
+    assert system.round_stats["detections"] >= 3
+    assert system.round_stats["replays"] >= 3
+    assert system.round_stats["detect_s"] > 0
+    assert system.round_stats["backoff_s"] > 0
+    assert system.round_stats["replay_s"] > 0
+
+    # nothing leaked
+    for used, _cap in system.slot_usage().values():
+        assert used == 0
+
+
+# ---------------------------------------------------------------------------
+# Randomized chaos (hypothesis; bounded under HYPOTHESIS_PROFILE=ci)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_randomized_fault_plans_conserve_sessions(seed):
+    """Any bounded random fault plan: streams stay bit-equal to the twin,
+    every session ends served or failed-with-reason, untouched sessions
+    keep the exact fault-free clock, and no slots leak."""
+    cfg, prob, twin_sys = _build(n_servers=4, l_out=6, max_new=6)
+    hosts = [0, 1, 2]
+    n_new = 6
+    twin_sids = _admit_on(twin_sys, cfg, hosts, n_new, seed=1)
+    twin = _drive(twin_sys, twin_sids, n_new)
+
+    plan = FaultPlan.random(4, seed, horizon=0.8, n_crashes=1,
+                            n_transients=1, n_stragglers=1,
+                            protect=(0,))
+    _, _, system = _build(n_servers=4, l_out=6, max_new=6, fault_plan=plan)
+    sids = _admit_on(system, cfg, hosts, n_new, seed=1)
+    done = _drive(system, sids, n_new)
+
+    affected = set(plan.affected_servers)
+    for (j, ts, fs) in zip(hosts, twin_sids, sids):
+        sess = done[fs]
+        assert sess.state in ("done", "failed")
+        if sess.state == "failed":
+            assert sess.fail_reason is not None
+            continue
+        assert list(sess.tokens) == list(twin[ts].tokens)
+        if j not in affected:
+            assert sess.virtual_time == twin[ts].virtual_time
+            assert sess.recovery_time == 0.0
+        else:
+            assert sess.virtual_time >= twin[ts].virtual_time
+    for used, _cap in system.slot_usage().values():
+        assert used == 0
+
+
+# ---------------------------------------------------------------------------
+# Typed failures: validation errors and capacity-starved failover deferral
+# ---------------------------------------------------------------------------
+
+
+def test_kill_server_unknown_or_dead_raises():
+    cfg, _, system = _build(n_servers=3)
+    with pytest.raises(ValueError, match="alive servers"):
+        system.kill_server(99)
+    system.kill_server(2)
+    with pytest.raises(ValueError, match="alive servers"):
+        system.kill_server(2)  # already dead
+    with pytest.raises(ValueError):
+        system.inject_crash(99)
+    with pytest.raises(ValueError):
+        system.rejoin_server(99)
+
+
+def test_failover_without_capacity_defers_then_completes():
+    """Kill the only host of session A while the sole failover target is
+    full: the NoCapacityError path parks A (deferral, not failure), and A
+    resumes + splices once a blocker retires — tokens bit-exact."""
+    n_new = 6
+    hosts = [0, 1]  # A on server 0; B leaves server 1 with 1 free slot
+    cfg, prob, ref_sys = _build(n_servers=2, mem=130.0, R=1, l_out=6,
+                                max_new=6, max_sessions=6)
+    # cap per server: floor((130 - 50*2)/10) = 3 slots; a session books
+    # k = 2 block-slots, so B (2/3) leaves no room for A's failover (2)
+    ref_sids = _admit_on(ref_sys, cfg, hosts, n_new, seed=5)
+    ref = _drive(ref_sys, ref_sids, n_new)
+
+    _, _, system = _build(n_servers=2, mem=130.0, R=1, l_out=6, max_new=6,
+                          max_sessions=6)
+    sids = _admit_on(system, cfg, hosts, n_new, seed=5)
+    system.decode_round()  # one normal round for everyone
+    system.kill_server(0)
+    # drive: A defers on NoCapacityError (server 1 lacks 2 free slots),
+    # B completes and retires, then A resumes onto server 1 and finishes
+    done = _drive(system, sids, n_new)
+    assert done[sids[0]].state == "done"
+    assert done[sids[0]].fail_reason is None
+    assert done[sids[0]].n_defer_resumes >= 1
+    assert done[sids[0]].n_preemptions >= 1  # parked via the resume queue
+    assert done[sids[0]].route.servers == (1,)
+    for (rs, fs) in zip(ref_sids, sids):
+        assert list(done[fs].tokens) == list(ref[rs].tokens)
+    for used, _cap in system.slot_usage().values():
+        assert used == 0
+
+
+def test_dispatch_error_fails_admission_once():
+    """An admission-time dispatch fault consumes itself: the first admit
+    touching the server fails, the retry goes through."""
+    plan = FaultPlan((FaultEvent(0.0, "dispatch_error", 0),))
+    cfg, _, system = _build(n_servers=2, fault_plan=plan)
+    system.apply_faults(0.0)
+    rng = np.random.RandomState(0)
+    sid = system.create_session(rng.randint(2, cfg.vocab_size, 4), 0,
+                                _single_hop_route(system, 0), 4)
+    assert system.try_admit_sessions([sid]) == []
+    assert system.round_stats["dispatch_errors"] == 1
+    assert system.try_admit_sessions([sid]) == [sid]  # fault consumed
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / detector unit properties
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_validation_and_determinism():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(0.0, "meteor", 0)
+    with pytest.raises(ValueError, match="factor"):
+        FaultEvent(0.0, "straggler_start", 0, factor=0.5)
+    p1 = FaultPlan.random(8, 42, n_crashes=2, n_transients=1,
+                          n_stragglers=1, n_dispatch_errors=1)
+    p2 = FaultPlan.random(8, 42, n_crashes=2, n_transients=1,
+                          n_stragglers=1, n_dispatch_errors=1)
+    assert p1.events == p2.events  # seed-deterministic
+    assert [e.time for e in p1.events] == sorted(e.time for e in p1.events)
+    assert p1.count("crash") == 3  # transients crash too
+    # cursor-based delivery never re-delivers
+    due1, cur = p1.due(0, p1.events[1].time)
+    due2, cur = p1.due(cur, np.inf)
+    assert [id(e) for e in due1 + due2] == [id(e) for e in p1.events]
+    # protected servers are never victims
+    p3 = fault_schedule(4, 7, n_crashes=2, n_stragglers=1, protect=(0,))
+    assert 0 not in p3.affected_servers
+
+
+def test_detector_pricing_matches_backoff_shape():
+    det = FailureDetector(timeout_factor=2.0, backoff_base=1.0,
+                          backoff_cap=4.0, max_probes=4)
+    assert det.probe_delays() == [1.0, 2.0, 4.0, 4.0]  # doubling, capped
+    assert det.backoff_time() == 11.0
+    assert det.detect_time(0.5) == (1 + 4) * 2.0 * 0.5
+    with pytest.raises(ValueError):
+        FailureDetector(timeout_factor=1.0)
+
+
+def test_suspicion_penalizes_route_cost_columns():
+    llm = LLMSpec("toy", 4, block_bytes=50.0, cache_bytes_per_token=1.0)
+    servers = [ServerSpec(j, 900.0, 0.01, 0.002, 0.0005) for j in range(3)]
+    rtt = np.full((1, 3), 0.02)
+    prob = Problem(llm, servers, 1, rtt, rtt * 3, workload=Workload(4, 6))
+    from repro.core.placement import cg_bp
+    placement, _ = cg_bp(prob, 2)
+    base = RouteCostCache(prob, placement).cost(0)
+    sus = RouteCostCache(prob, placement, suspicion={1: 0.5}).cost(0)
+    np.testing.assert_allclose(sus[:, 1], base[:, 1] + 0.5)
+    np.testing.assert_array_equal(sus[:, [0, 2]], base[:, [0, 2]])
+
+
+def test_recovery_replay_cost_terms():
+    llm = LLMSpec("toy", 4, block_bytes=50.0, cache_bytes_per_token=1.0)
+    servers = [ServerSpec(j, 900.0, 0.01 * (j + 1), 0.002, 0.0005)
+               for j in range(2)]
+    rtt_tok = np.full((1, 2), 0.02)
+    prob = Problem(llm, servers, 1, rtt_tok, rtt_tok * 3,
+                   workload=Workload(4, 6))
+    got = recovery_replay_cost(prob, 0, [(1, 0, 4)], n_tokens=3)
+    w = prob.llm.tau_weight(0, 4)
+    want = (prob.rtt_prefill[0, 1]
+            + w * prob.servers[1].tau_prefill(4)
+            + 3 * w * prob.servers[1].tau)
+    assert got == pytest.approx(want)
+    # straggler multiplier scales compute, not the RTT
+    slow = recovery_replay_cost(prob, 0, [(1, 0, 4)], n_tokens=3,
+                                slowdown_of=lambda j: 2.0)
+    want_slow = (prob.rtt_prefill[0, 1]
+                 + 2.0 * (w * prob.servers[1].tau_prefill(4)
+                          + 3 * w * prob.servers[1].tau))
+    assert slow == pytest.approx(want_slow)
+
+
+# ---------------------------------------------------------------------------
+# Analytic reference: simulate_faults conservation + monotone recovery
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_simulate_faults_conserves_requests(seed):
+    llm = LLMSpec("toy", 4, block_bytes=50.0, cache_bytes_per_token=1.0)
+    servers = [ServerSpec(j, 900.0, 0.01 * (j + 1), 0.002, 0.0005)
+               for j in range(6)]
+    rtt = np.full((1, 6), 0.02)
+    prob = Problem(llm, servers, 1, rtt, rtt * 3, workload=Workload(4, 16))
+    reqs = poisson_requests(25, rate=2.0, seed=seed)
+    plan = fault_schedule(6, seed, horizon=8.0, n_crashes=1, n_transients=1,
+                          n_stragglers=1, n_dispatch_errors=1, protect=(0,))
+    res = simulate_faults(prob, reqs, plan, R=4)
+    assert res.n_served + res.n_failed == res.n_requests
+    assert all(k in ("no_route", "dispatch_error", "server_lost_mid_prefill")
+               for k in res.fail_reasons)
+    assert res.recovery_time >= 0.0
+    # deterministic: same inputs, same outcome
+    res2 = simulate_faults(prob, reqs, plan, R=4)
+    assert (res2.n_served, res2.recovery_time) == \
+        (res.n_served, res.recovery_time)
+    # the fault-free twin never pays recovery and serves at least as many
+    base = simulate_faults(prob, reqs, FaultPlan(), R=4)
+    assert base.recovery_time == 0.0
+    assert base.n_served >= res.n_served

@@ -280,8 +280,10 @@ def _reference_streams(_llama):
 
 def test_preempt_mid_decode_resumes_bit_exact(_llama, _reference_streams):
     """Swap a session out mid-decode, keep driving rounds: the resume
-    replay rebuilds its caches and the finished stream (and virtual
-    clock) is identical to the never-preempted run."""
+    replay rebuilds its caches and the finished stream is identical to
+    the never-preempted run, while the virtual clock exceeds the slab
+    oracle's by EXACTLY the billed resume-replay cost (replay is
+    re-execution — it is not free)."""
     ref_toks, ref_vts = _reference_streams
     system = _build_system(_llama, "paged", page_size=2)
     sids = _admit(_llama, system, (4, 5), n_new=6)
@@ -294,8 +296,13 @@ def test_preempt_mid_decode_resumes_bit_exact(_llama, _reference_streams):
                for srv in system.servers.values())
     toks, vts = _run_to_completion(system, sids, n_new=6)
     assert toks == ref_toks
-    assert vts == ref_vts  # preemption models a swap: clock unbilled
+    # paged clock = slab clock + billed replay, per session
+    replays = [float(system.sessions[s].replay_time) for s in sids]
+    assert replays[0] > 0.0 and replays[1] == 0.0
+    assert vts == pytest.approx([r + p for r, p in zip(ref_vts, replays)])
+    assert system.sessions[sids[0]].n_replays >= 1
     assert system.round_stats["resumes"] >= 1
+    assert system.round_stats["replay_s"] == pytest.approx(sum(replays))
 
 
 def test_preemption_composes_with_failover(_llama, _reference_streams):
@@ -312,6 +319,32 @@ def test_preemption_composes_with_failover(_llama, _reference_streams):
     toks, _ = _run_to_completion(system, sids, n_new=6)
     assert toks == ref_toks
     assert dead not in system.sessions[sids[0]].route.servers
+
+
+def test_crash_of_preemption_victim_mid_swap(_llama, _reference_streams):
+    """Silent crash (no oracle: ``inject_crash``) of a route server WHILE
+    the victim sits swapped out: the resume dispatch misses its deadline,
+    timeout detection bills the wait, failover splices around the dead
+    hop — streams still bit-exact, and the billed recovery shows up on
+    the session."""
+    ref_toks, _ = _reference_streams
+    system = _build_system(_llama, "paged", page_size=2, n_servers=4)
+    sids = _admit(_llama, system, (4, 5), n_new=6)
+    system.decode_round(sids)
+    system.preempt_session(sids[0])
+    dead = system.sessions[sids[0]].route.servers[0]
+    system.inject_crash(dead)  # crashed but still "alive" until detected
+    toks, _ = _run_to_completion(system, sids, n_new=6)
+    assert toks == ref_toks
+    victim = system.sessions[sids[0]]
+    assert dead not in victim.route.servers
+    assert victim.n_detections >= 1
+    assert victim.recovery_time > 0.0  # detect + backoff + replay billed
+    assert not system.servers[dead].alive
+    assert dead in system.suspected_servers()
+    # the other session's stream is untouched and no page state leaked
+    for srv in system.servers.values():
+        srv.pool.pages.check_invariants()
 
 
 def test_retire_preempted_session_is_clean(_llama):

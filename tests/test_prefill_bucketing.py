@@ -371,3 +371,56 @@ def test_engine_vs_simulator_bursty_tolerance(R):
     eng, simm, err = cross_validate(R, n_requests=8, trace="bursty")
     assert err["per_token_all"] < 0.10, (eng, simm)
     assert err["first_token"] < 0.10, (eng, simm)
+
+
+def test_crash_during_prefill_group():
+    """Silent crash of one group's route server between chunk rounds:
+    that group's in-flight members fail with a machine-readable reason
+    and billed timeout detection, while the OTHER group (distinct route)
+    prefill-completes and decodes bit-exact vs a fault-free run."""
+    from repro.core.perf_model import Route
+
+    def _setup():
+        cfg, params, prob, system = _build(prefill_buckets=(4,), l_in=12,
+                                           max_new=5, l_out=5)
+        rng = np.random.RandomState(5)
+        prompts = [rng.randint(2, cfg.vocab_size, 12) for _ in range(4)]
+        sids = []
+        for i, toks in enumerate(prompts):
+            j = 1 if i < 2 else 2  # group A -> server 1, group B -> server 2
+            a, m = int(system.placement.a[j]), int(system.placement.m[j])
+            assert a == 0 and m == prob.L, "toy placement must replicate"
+            sids.append(system.create_session(
+                toks, 0, Route(servers=(j,), blocks=(m,)), 5))
+        assert system.try_admit_sessions(sids) == sids
+        assert len(system._prefill_groups) == 2  # distinct routes
+        return system, sids
+
+    # fault-free twin: group B's oracle streams
+    ref, ref_sids = _setup()
+    ref.drain_prefill()
+    while any(ref.sessions[s].n_generated < 5 for s in ref_sids):
+        ref.decode_round()
+    ref_b = [list(ref.sessions[s].tokens) for s in ref_sids[2:]]
+
+    system, sids = _setup()
+    system.prefill_round()  # one chunk round: both groups mid-prompt
+    system.inject_crash(1)  # silent: next dispatch discovers it
+    system.drain_prefill()
+    while any(system.sessions[s].state == "active"
+              and system.sessions[s].n_generated < 5 for s in sids):
+        system.decode_round()
+
+    for sid in sids[:2]:  # group A: failed mid-prefill, detection billed
+        sess = system.sessions[sid]
+        assert sess.state == "failed"
+        assert sess.fail_reason == "server_lost_mid_prefill"
+        assert sess.n_detections >= 1 and sess.detect_time > 0.0
+    # group B: untouched, bit-exact streams
+    assert [list(system.sessions[s].tokens) for s in sids[2:]] == ref_b
+    assert all(system.sessions[s].recovery_time == 0.0 for s in sids[2:])
+    assert not system.servers[1].alive and 1 in system.suspected_servers()
+    # failed members released their claims: no leaked slots on server 1
+    for sid in sids:
+        system.retire_session(sid)
+    assert all(u == 0 for u, _ in system.slot_usage().values())
